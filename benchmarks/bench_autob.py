@@ -1,0 +1,44 @@
+"""Paper Figs. 16/17 + Table 9: auto-selection of the index length B.
+
+Sweeps B by hand, records the actual compression ratio and the average
+ZLIB ratio of the index table, and marks what auto-B picked.  Reproduces
+the paper's finding: the Eq. 6 model ignores ZLIB, so on Sedov-like data
+(80% sub-|E| ratios -> highly repetitive index tables, ZLIB ratio ~10) the
+auto-picked B is smaller than the CR-optimal one, while on ASR-like data
+(ZLIB ratio ~1.3) auto-B lands near the optimum."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core import NumarckParams, compress_step
+from repro.data.temporal import generate_series
+
+
+def run() -> list:
+    rows: list[Row] = []
+    sweeps = {"asr": (dict(scale=2), [8, 10, 12, 13, 14, 15, 16]),
+              "sedov": (dict(scale=1), [2, 3, 4, 6, 8, 10, 12])}
+    for name, (kw, bs) in sweeps.items():
+        series = list(generate_series(name, n_iterations=2, seed=21,
+                                      scale=kw["scale"]))
+        prev, curr = series[0], series[1]
+        auto = compress_step(prev, curr, NumarckParams(error_bound=1e-3))
+        b_auto = auto.b_bits
+        best_b, best_cr = None, -1.0
+        for b in bs:
+            t, st = timeit(compress_step, prev, curr,
+                           NumarckParams(error_bound=1e-3, b_bits=b),
+                           repeat=1)
+            cr = st.compression_ratio()
+            if cr > best_cr:
+                best_b, best_cr = b, cr
+            rows.append((f"fig16_17_{name}_B{b}", t * 1e6,
+                         f"CR={cr:.2f} zlib_ratio="
+                         f"{st.meta['zlib_ratio']:.2f}"
+                         + (" <-auto" if b == b_auto else "")))
+        rows.append((f"fig16_17_{name}_summary", 0.0,
+                     f"auto_B={b_auto} optimal_B={best_b} "
+                     f"auto_CR={auto.compression_ratio():.2f} "
+                     f"optimal_CR={best_cr:.2f}"))
+    return rows

@@ -1,0 +1,93 @@
+"""Paper Table 8 + Figs. 13/14: binning strategies -- coverage vs the DP
+oracle and runtime.  Top-k should cover ~the DP optimum at a fraction of
+the runtime; equal < log < kmeans < topk <= DP (paper Sec. V-D)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core import NumarckParams
+from repro.core import binning, dp_oracle, ratios
+from repro.data.temporal import generate_series
+
+import jax
+import jax.numpy as jnp
+
+
+def run() -> list:
+    rows: list[Row] = []
+    E = 1e-3
+    cfgs = {"sedov": dict(B=8, scale=2), "asr": dict(B=10, scale=4)}
+    for name, c in cfgs.items():
+        series = list(generate_series(name, n_iterations=2, seed=9,
+                                      scale=c["scale"]))
+        prev, curr = series[0].ravel(), series[1].ravel()
+        r, valid = ratios.change_ratios(jnp.asarray(prev, jnp.float32),
+                                        jnp.asarray(curr, jnp.float32))
+        rv = np.asarray(r)[np.asarray(valid)]
+        # paper: points with |ratio| < E excluded from the DP comparison
+        rv = rv[np.abs(rv) >= E]
+        k = (1 << c["B"]) - 1
+        n = rv.size
+        max_bins = 1 << 16
+
+        lo, hi = ratios.ratio_range(r, valid)
+        dlo, w = ratios.histogram_domain(lo, hi, E, max_bins)
+        ids, ok = ratios.candidate_bin_ids(r, valid, dlo, w, max_bins)
+        sel = np.abs(np.asarray(r)[np.asarray(valid)]) >= E
+
+        # ---- DP oracle ---------------------------------------------------
+        sub = rv if rv.size <= 200_000 else np.random.default_rng(0).choice(
+            rv, 200_000, replace=False)
+        t_dp, best = timeit(dp_oracle.dp_max_coverage, sub, 2 * E, k,
+                            repeat=1)
+        cov_dp = best / sub.size
+
+        def coverage(centers):
+            return dp_oracle.coverage_of_centers(sub, np.asarray(centers),
+                                                 E) / sub.size
+
+        # ---- top-k -------------------------------------------------------
+        def topk_once():
+            ids_s, ok_s = ratios.candidate_bin_ids(
+                jnp.asarray(sub), jnp.ones(sub.size, bool), dlo, w,
+                max_bins)
+            counts = binning.local_histogram(ids_s, ok_s, max_bins)
+            cd, idd = binning.sort_histogram(counts)
+            cs, _ = binning.topk_centers(idd, k, dlo, w)
+            return jax.block_until_ready(cs)
+
+        t_topk, cs_topk = timeit(topk_once, repeat=2)
+        cov_topk = coverage(cs_topk)
+
+        # ---- equal width ---------------------------------------------------
+        t_eq, cs_eq = timeit(lambda: jax.block_until_ready(
+            binning.equal_width_centers(float(sub.min()), float(sub.max()),
+                                        k)), repeat=2)
+        cov_eq = coverage(cs_eq)
+
+        # ---- log scale -----------------------------------------------------
+        t_log, cs_log = timeit(lambda: jax.block_until_ready(
+            binning.log_scale_centers(jnp.asarray(sub),
+                                      jnp.ones(sub.size, bool), k)),
+            repeat=2)
+        cov_log = coverage(cs_log)
+
+        # ---- k-means (histogram-weighted) -----------------------------------
+        ids_s, ok_s = ratios.candidate_bin_ids(
+            jnp.asarray(sub), jnp.ones(sub.size, bool), dlo, w, max_bins)
+        counts = binning.local_histogram(ids_s, ok_s, max_bins)
+        t_km, cs_km = timeit(lambda: jax.block_until_ready(
+            binning.kmeans_centers(counts, dlo, w, min(k, 4096), 20)),
+            repeat=1)
+        cov_km = coverage(cs_km)
+
+        for strat, t, cov in (("dp", t_dp, cov_dp),
+                              ("topk", t_topk, cov_topk),
+                              ("kmeans", t_km, cov_km),
+                              ("log", t_log, cov_log),
+                              ("equal", t_eq, cov_eq)):
+            rows.append((f"table8_fig13_14_{name}_{strat}", t * 1e6,
+                         f"coverage={cov*100:.1f}% vs_dp="
+                         f"{cov/max(cov_dp,1e-9)*100:.1f}%"))
+    return rows

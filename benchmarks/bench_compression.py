@@ -1,0 +1,69 @@
+"""Paper Figs. 9-12 + Tables 4/5/6: compression ratios, incompressible
+ratios, and compress/decompress times for NUMARCK vs ISABELA vs ZFP vs ZLIB
+on the four dataset families (synthetic analogues, DESIGN.md data layer)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.baselines import isabela, zfp_like, zlib_lossless
+from repro.core import (NumarckParams, compress_step, decompress_step,
+                        mean_error_rate)
+from repro.data.temporal import generate_series
+
+E = 1e-3                       # paper: error threshold 0.1%
+SCALE = {"sedov": 1, "stir": 2, "asr": 2, "cmip": 2}
+
+
+def run(datasets=("sedov", "stir", "asr", "cmip")) -> list:
+    rows: list[Row] = []
+    for name in datasets:
+        series = list(generate_series(name, n_iterations=3, seed=11,
+                                      scale=SCALE[name]))
+        prev, curr = series[1], series[2]
+        nbytes = curr.nbytes
+
+        # --- NUMARCK (top-k, auto-B) — figs 9-12 + tables 4/5/6 ---------
+        p = NumarckParams(error_bound=E)
+        t_c, step = timeit(compress_step, prev, curr, p, repeat=2)
+        t_d, recon = timeit(decompress_step, step, prev, repeat=2)
+        me = mean_error_rate(curr, recon)
+        rows.append((f"fig9_12_cr_numarck_{name}", t_c * 1e6,
+                     f"CR={step.compression_ratio():.2f} ME={me:.2e} "
+                     f"B={step.b_bits}"))
+        rows.append((f"table4_alpha_{name}", 0.0,
+                     f"alpha={step.alpha*100:.2f}%"))
+        rows.append((f"table5_compress_time_{name}", t_c * 1e6,
+                     f"MBps={nbytes/t_c/1e6:.1f}"))
+        rows.append((f"table6_decompress_time_{name}", t_d * 1e6,
+                     f"MBps={nbytes/t_d/1e6:.1f}"))
+
+        # --- ISABELA ----------------------------------------------------
+        t_ci, blob_i = timeit(isabela.compress, curr, E, 1024, 32,
+                              repeat=1)
+        t_di, rec_i = timeit(isabela.decompress, blob_i, repeat=1)
+        rows.append((f"fig9_12_cr_isabela_{name}", t_ci * 1e6,
+                     f"CR={nbytes/blob_i.nbytes:.2f} "
+                     f"ME={mean_error_rate(curr, rec_i):.2e}"))
+        rows.append((f"table5_compress_time_isabela_{name}", t_ci * 1e6,
+                     f"MBps={nbytes/t_ci/1e6:.1f}"))
+        rows.append((f"table6_decompress_time_isabela_{name}",
+                     t_di * 1e6, f"MBps={nbytes/t_di/1e6:.1f}"))
+
+        # --- ZFP (abs tol = mean * E, the paper's convention) -----------
+        tol = float(np.mean(np.abs(curr))) * E
+        t_cz, blob_z = timeit(zfp_like.compress, curr, tol, repeat=1)
+        t_dz, rec_z = timeit(zfp_like.decompress, blob_z, repeat=1)
+        rows.append((f"fig9_12_cr_zfp_{name}", t_cz * 1e6,
+                     f"CR={nbytes/blob_z.nbytes:.2f} "
+                     f"ME={mean_error_rate(curr, rec_z):.2e}"))
+        rows.append((f"table5_compress_time_zfp_{name}", t_cz * 1e6,
+                     f"MBps={nbytes/t_cz/1e6:.1f}"))
+        rows.append((f"table6_decompress_time_zfp_{name}", t_dz * 1e6,
+                     f"MBps={nbytes/t_dz/1e6:.1f}"))
+
+        # --- ZLIB lossless reference -------------------------------------
+        t_zl, blob_l = timeit(zlib_lossless.compress, curr, repeat=1)
+        rows.append((f"fig9_12_cr_zlib_{name}", t_zl * 1e6,
+                     f"CR={nbytes/blob_l.nbytes:.2f} ME=0"))
+    return rows

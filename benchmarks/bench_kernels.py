@@ -1,0 +1,57 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU; the derived
+column reports achieved GB/s against the v5e HBM roofline the BlockSpec
+tiling was designed for)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.kernels import ref
+
+HBM_BW = 819e9
+
+
+def run() -> list:
+    rows: list[Row] = []
+    rng = np.random.default_rng(0)
+    n = 2_000_000
+    prev = rng.normal(1, 0.5, n).astype(np.float32)
+    curr = (prev * (1 + 0.01 * rng.standard_normal(n))).astype(np.float32)
+
+    # jnp oracle versions are the measurable path on CPU; the kernels
+    # themselves are validated in interpret mode by tests/test_kernels.py
+    f1 = jax.jit(lambda a, b: ref.change_ratio_bins_ref(
+        a, b, -0.064, 0.002, max_bins=65536))
+    t1, _ = timeit(lambda: jax.block_until_ready(f1(prev, curr)))
+    bytes1 = n * 4 * 4
+    rows.append(("kernel_change_ratio_2M", t1 * 1e6,
+                 f"GBps={bytes1/t1/1e9:.2f} "
+                 f"v5e_roofline_s={bytes1/HBM_BW:.2e}"))
+
+    idx = rng.integers(0, 1 << 11, 32 * 65536).astype(np.int32)
+    f2 = jax.jit(lambda i: ref.pack_bits_ref(i, b_bits=11))
+    t2, _ = timeit(lambda: jax.block_until_ready(f2(idx)))
+    bytes2 = idx.size * 4 + idx.size * 11 // 8
+    rows.append(("kernel_bitpack_2M_b11", t2 * 1e6,
+                 f"GBps={bytes2/t2/1e9:.2f} "
+                 f"v5e_roofline_s={bytes2/HBM_BW:.2e}"))
+
+    k = (1 << 11) - 1
+    centers = rng.uniform(-0.1, 0.1, k).astype(np.float32)
+    ids = rng.integers(0, k + 1, n).astype(np.int32)
+    f3 = jax.jit(lambda i, p, c: ref.dequantize_ref(i, p, c, b_bits=11))
+    t3, _ = timeit(lambda: jax.block_until_ready(f3(ids, prev, centers)))
+    bytes3 = n * (4 + 4 + 4)
+    rows.append(("kernel_dequant_2M_b11", t3 * 1e6,
+                 f"GBps={bytes3/t3/1e9:.2f} "
+                 f"v5e_roofline_s={bytes3/HBM_BW:.2e}"))
+
+    f4 = jax.jit(lambda i: ref.histogram_ref(i, max_bins=65536))
+    ids_h = rng.integers(-1, 65536, n).astype(np.int32)
+    t4, _ = timeit(lambda: jax.block_until_ready(f4(ids_h)))
+    rows.append(("kernel_histogram_2M_64k", t4 * 1e6,
+                 f"GBps={n*4/t4/1e9:.2f} "
+                 f"v5e_roofline_s={n*4/HBM_BW:.2e}"))
+    return rows

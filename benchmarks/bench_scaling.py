@@ -1,0 +1,118 @@
+"""Paper Table 2 + Figs. 3-8: parallel runtime, speedup, and phase
+breakdown.
+
+One CPU core cannot measure 12800-way speedup, so this bench does what the
+paper's own analysis implies (Sec. V-A): measure each phase's single-core
+throughput on Stir-like data, classify phases as perfectly-parallel
+(change ratio, assign index, bits packing, ZLIB -- "no network
+communication cost"), near-serial (top-k selection), or
+collective-bound (MPI_Allreduce of the 2^16-bin histogram, modeled with
+the v5e ICI latency/bandwidth), and derive the strong-scaling curve
+
+    T(p) = T_parallel / p + T_topk + T_allreduce(p)
+
+The derived speedups are validated against the paper's own shape: near-
+linear until the binning collective dominates (Table 3: allreduce goes
+5% -> 67.6% of the binning phase from 320 -> 1600 cores)."""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core import NumarckParams, compress_step
+from repro.core import binning, blocks, packing, ratios, select_b
+from repro.data.temporal import generate_series
+
+# collective model: latency-bandwidth ring allreduce over p members
+ALLREDUCE_LAT = 5e-6          # per hop
+ICI_BW = 50e9
+
+
+def allreduce_time(nbytes: float, p: int) -> float:
+    if p == 1:
+        return 0.0
+    return 2 * (p - 1) * (ALLREDUCE_LAT + nbytes / p / ICI_BW)
+
+
+def run() -> list:
+    rows: list[Row] = []
+    series = list(generate_series("stir", n_iterations=2, seed=5, scale=2))
+    prev, curr = series[0].ravel(), series[1].ravel()
+    n = curr.size
+    p = NumarckParams(error_bound=1e-3)
+    import jax.numpy as jnp
+    import jax
+
+    # ---- phase timings (per element; Figs. 5/6 phase breakdown) ---------
+    prev_j, curr_j = jnp.asarray(prev, jnp.float32), jnp.asarray(
+        curr, jnp.float32)
+
+    f_ratio = jax.jit(lambda a, b: ratios.change_ratios(a, b)[0])
+    t_ratio, _ = timeit(lambda: jax.block_until_ready(
+        f_ratio(prev_j, curr_j)))
+
+    r, valid = ratios.change_ratios(prev_j, curr_j)
+    lo, hi = ratios.ratio_range(r, valid)
+    dlo, w = ratios.histogram_domain(lo, hi, 1e-3, p.max_bins)
+    ids, ok = ratios.candidate_bin_ids(r, valid, dlo, w, p.max_bins)
+    f_hist = jax.jit(lambda i, o: binning.local_histogram(i, o, p.max_bins))
+    t_hist, counts = timeit(lambda: jax.block_until_ready(
+        f_hist(ids, ok)))
+
+    f_sort = jax.jit(binning.sort_histogram)
+    t_topk, (cd, idd) = timeit(lambda: jax.block_until_ready(
+        f_sort(counts)))
+
+    b_bits = 8
+    k_eff = (1 << b_bits) - 1
+    f_idx = jax.jit(lambda bi, dd: jnp.where(
+        bi >= 0, jnp.where(binning.rank_lut(dd[:k_eff], k_eff,
+                                            p.max_bins)[jnp.clip(bi, 0,
+                                            p.max_bins - 1)] >= k_eff,
+                           k_eff, binning.rank_lut(dd[:k_eff], k_eff,
+                           p.max_bins)[jnp.clip(bi, 0, p.max_bins - 1)]),
+        k_eff))
+    t_idx, idx = timeit(lambda: jax.block_until_ready(f_idx(ids, idd)))
+
+    idx_np = np.asarray(idx)
+    t_pack, packed = timeit(packing.pack_indices_np, idx_np, b_bits)
+    t_zlib, _ = timeit(zlib.compress, packed.tobytes(), 6)
+
+    phases = {
+        "change_ratio": t_ratio, "histogram": t_hist,
+        "topk_selection": t_topk, "assign_index": t_idx,
+        "bits_packing": t_pack, "zlib": t_zlib,
+    }
+    total = sum(phases.values())
+    for name, t in phases.items():
+        rows.append((f"fig5_6_phase_{name}", t * 1e6,
+                     f"pct={t/total*100:.1f}% GBps={n*4/t/1e9:.2f}"))
+
+    # ---- strong-scaling model (Table 2 / Figs 3-4) -----------------------
+    t_parallel = total - t_topk
+    hist_bytes = p.max_bins * 4
+    # scale the measured variable up to Stir-2's 59 GB velx
+    scale_up = 59e9 / (n * 4)
+    for cores in (1, 320, 480, 640, 800, 960, 1120, 1280, 1440, 1600,
+                  3200, 6400, 12800):
+        t_p = (t_parallel * scale_up) / cores + t_topk \
+            + allreduce_time(hist_bytes, cores)
+        if cores == 1:
+            t_serial = t_p
+            continue
+        speedup = t_serial / t_p
+        rows.append((f"table2_stir2_model_p{cores}", t_p * 1e6,
+                     f"T={t_p:.3f}s speedup={speedup:.0f} "
+                     f"eff={speedup/cores*100:.0f}%"))
+
+    # ---- Table 3 analogue: allreduce share of the binning phase ---------
+    for cores in (320, 1600, 3200, 12800):
+        t_bin = t_hist * scale_up / cores + t_topk + allreduce_time(
+            hist_bytes, cores)
+        ar = allreduce_time(hist_bytes, cores)
+        rows.append((f"table3_allreduce_share_p{cores}", ar * 1e6,
+                     f"share={ar/t_bin*100:.1f}% "
+                     f"topk_share={t_topk/t_bin*100:.1f}%"))
+    return rows

@@ -1,0 +1,22 @@
+"""Shared helpers for the per-table benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]     # (name, us_per_call, derived)
+
+
+def timeit(fn: Callable, *args, repeat: int = 3, **kw):
+    """(best seconds, result)."""
+    best, out = float("inf"), None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def emit(rows: List[Row]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

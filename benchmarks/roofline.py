@@ -1,0 +1,82 @@
+"""SS Roofline table builder: reads experiments/dryrun/*.json (produced by
+launch/dryrun.py) and emits the per-(arch x shape x mesh) three-term
+roofline with dominant bottleneck + usefulness ratio.
+
+Run the dry-run first:
+  PYTHONPATH=src python -m repro.launch.dryrun --out experiments/dryrun
+then:
+  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs, mesh="single"):
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "SKIP":
+            rows.append((r["arch"], r["shape"], "SKIP", "-", "-", "-", "-",
+                         "-", r.get("reason", "")[:40]))
+            continue
+        if r["status"] != "OK":
+            rows.append((r["arch"], r["shape"], "FAIL", "-", "-", "-", "-",
+                         "-", r.get("error", "")[:40]))
+            continue
+        t = r["roofline"]
+        dom = r["dominant"].replace("_s", "")
+        useful = r.get("useful_ratio")
+        rows.append((
+            r["arch"], r["shape"], "OK",
+            f"{t['compute_s']:.2e}", f"{t['memory_s']:.2e}",
+            f"{t['collective_s']:.2e}", dom,
+            f"{useful:.3f}" if useful else "-",
+            _fmt_b(r["memory"]["peak"]) if r.get("memory") else "-"))
+    return rows
+
+
+def _fmt_b(n):
+    if n is None:
+        return "?"
+    for u in ("B", "KB", "MB", "GB"):
+        if n < 1024:
+            return f"{n:.1f}{u}"
+        n /= 1024
+    return f"{n:.1f}TB"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if not recs:
+        print(f"no dry-run records in {args.dir}; run launch/dryrun first")
+        return
+    hdr = ("arch", "shape", "status", "compute_s", "memory_s",
+           "collective_s", "dominant", "useful", "peak/dev")
+    rows = table(recs, args.mesh)
+    widths = [max(len(str(x)) for x in [h] + [r[i] for r in rows])
+              for i, h in enumerate(hdr)]
+    print(" | ".join(h.ljust(w) for h, w in zip(hdr, widths)))
+    print("-+-".join("-" * w for w in widths))
+    for r in rows:
+        print(" | ".join(str(x).ljust(w) for x, w in zip(r, widths)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness -- one bench per paper table/figure:
+
+  bench_scaling      Table 2, Table 3, Figs. 3-8 (phases + scaling model)
+  bench_compression  Figs. 9-12, Tables 4/5/6 (CR + times vs baselines)
+  bench_partial      Table 7 (partial decompression linearity)
+  bench_binning      Table 8, Figs. 13/14 (strategies vs DP oracle)
+  bench_autob        Figs. 16/17, Table 9 (auto-B + ZLIB interaction)
+  bench_kernels      kernel micro-bench (+ v5e roofline targets)
+
+SS Roofline for the 40 (arch x shape) cells is a separate reader
+(benchmarks/roofline.py) because it consumes launch/dryrun.py artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: scaling,compression,partial,binning,"
+                         "autob,kernels")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_autob, bench_binning, bench_compression,
+                            bench_kernels, bench_partial, bench_scaling)
+    benches = {
+        "compression": bench_compression.run,
+        "scaling": bench_scaling.run,
+        "partial": bench_partial.run,
+        "binning": bench_binning.run,
+        "autob": bench_autob.run,
+        "kernels": bench_kernels.run,
+    }
+    wanted = args.only.split(",") if args.only else list(benches)
+    print("name,us_per_call,derived")
+    from benchmarks.common import emit
+    for name in wanted:
+        try:
+            emit(benches[name]())
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}",
+                  file=sys.stdout)
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

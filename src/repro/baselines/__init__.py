@@ -1,0 +1,1 @@
+"""Comparison compressors: ISABELA-like, ZFP-like, ZLIB lossless."""

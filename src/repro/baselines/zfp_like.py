@@ -1,0 +1,122 @@
+"""ZFP-like baseline (Lindstrom, 2014) -- fixed-accuracy transform coder.
+
+Per 4-element 1-D block: align to the block's common exponent, convert to
+fixed point, apply ZFP's orthogonal lifting transform, and keep only the
+bit planes above the absolute-error threshold; per-block bit widths are
+stored so blocks pack densely.
+
+Simplifications vs real ZFP (documented in DESIGN.md): 1-D 4-blocks on the
+flattened array (real ZFP uses 4^d blocks and negabinary group testing);
+entropy coding is per-block minimal-width packing.  Absolute error bound
+only -- exactly the limitation the paper discusses (Sec. II): the bench
+sets tol = mean(|data|) * rel_bound the same way the paper does.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+
+import numpy as np
+
+_Q = 26                       # fixed-point fraction bits
+
+
+@dataclass
+class ZfpBlob:
+    n: int
+    payload: bytes
+    meta: dict
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.payload) + 16
+
+
+def _transform(q):
+    """Forward transform per block (q int64 (nb, 4))."""
+    x, y, z, w = (q[:, 0].copy(), q[:, 1].copy(), q[:, 2].copy(),
+                  q[:, 3].copy())
+    # zfp's non-orthogonal lifted transform (decorrelates smooth data)
+    x += w; x >>= 1; w -= x
+    z += y; z >>= 1; y -= z
+    x += z; x >>= 1; z -= x
+    w += y; w >>= 1; y -= w
+    w += y >> 1; y -= w >> 1
+    return np.stack([x, z, w, y], axis=-1)
+
+
+def _inv_transform(t):
+    x, z, w, y = (t[:, 0].copy(), t[:, 1].copy(), t[:, 2].copy(),
+                  t[:, 3].copy())
+    y += w >> 1; w -= y >> 1
+    y += w; w <<= 1; w -= y
+    z += x; x <<= 1; x -= z
+    y += z; z <<= 1; z -= y
+    w += x; x <<= 1; x -= w
+    return np.stack([x, y, z, w], axis=-1)
+
+
+def compress(data: np.ndarray, tol_abs: float) -> ZfpBlob:
+    flat = np.asarray(data, np.float64).reshape(-1)
+    n = flat.size
+    pad = (-n) % 4
+    flat_p = np.pad(flat, (0, pad))
+    blocks = flat_p.reshape(-1, 4)
+    nb = blocks.shape[0]
+
+    # common exponent per block
+    amax = np.abs(blocks).max(axis=1)
+    e = np.where(amax > 0, np.ceil(np.log2(np.maximum(amax, 1e-300))),
+                 0).astype(np.int32)
+    scale = np.exp2(_Q - e.astype(np.float64))
+    q = np.round(blocks * scale[:, None]).astype(np.int64)
+    t = _transform(q)
+
+    # drop bit planes below the error threshold: keep `bits` such that the
+    # dropped quantum 2^(e-Q) * 2^drop <= tol
+    # per-block allowed drop bits:
+    quantum = np.exp2(e.astype(np.float64) - _Q)        # value of 1 LSB
+    drop = np.floor(np.log2(np.maximum(tol_abs / np.maximum(quantum, 1e-300),
+                                       1.0))).astype(np.int64)
+    drop = np.clip(drop, 0, _Q + 8)
+    tq = t >> drop[:, None]
+
+    # per-block bit width of the shifted coefficients
+    mag = np.abs(tq).max(axis=1)
+    width = np.where(mag > 0,
+                     np.floor(np.log2(np.maximum(mag, 1))) + 2,
+                     1).astype(np.int64)   # +1 sign, +1 ceil
+
+    # serialize: e (int8 via offset), drop (uint8), width (uint8),
+    # then coeffs packed at `width` bits each (zigzag)
+    zig = ((tq << 1) ^ (tq >> 63)).astype(np.uint64)
+    parts = [np.clip(e + 128, 0, 255).astype(np.uint8).tobytes(),
+             drop.astype(np.uint8).tobytes(),
+             width.astype(np.uint8).tobytes()]
+    # bit-pack coefficients blockwise (vectorized variable-width pack)
+    vals = zig.reshape(-1)
+    elem_w = np.repeat(width, 4)
+    total = int(elem_w.sum())
+    starts = np.concatenate([[0], np.cumsum(elem_w)])[:-1]
+    bit_owner = np.repeat(np.arange(vals.size), elem_w)
+    bit_index = np.arange(total) - np.repeat(starts, elem_w)
+    out_bits = ((vals[bit_owner] >> bit_index.astype(np.uint64)) & 1
+                ).astype(np.uint8)
+    parts.append(np.packbits(out_bits, bitorder="little").tobytes())
+    payload = zlib.compress(b"".join(parts), 1)
+    return ZfpBlob(n=n, payload=payload,
+                   meta={"e": e, "drop": drop, "width": width, "tq": tq,
+                         "dtype": str(data.dtype),
+                         "shape": tuple(np.shape(data))})
+
+
+def decompress(blob: ZfpBlob) -> np.ndarray:
+    m = blob.meta
+    t = m["tq"] << m["drop"][:, None]
+    q = _inv_transform(t)
+    scale = np.exp2(m["e"].astype(np.float64) - _Q)
+    vals = q.astype(np.float64) * scale[:, None]
+    return vals.reshape(-1)[: blob.n].astype(m["dtype"]).reshape(m["shape"])
+
+
+__all__ = ["compress", "decompress", "ZfpBlob"]

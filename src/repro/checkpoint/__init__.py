@@ -1,0 +1,1 @@
+"""Fault-tolerant checkpointing with NUMARCK temporal compression."""

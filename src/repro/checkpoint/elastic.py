@@ -1,0 +1,35 @@
+"""Elastic restore: load a checkpoint onto a *different* mesh.
+
+Checkpoints are stored mesh-agnostic (full logical tensors on host), so
+elastic scaling reduces to re-device_put with the new mesh's NamedShardings
+-- GSPMD reshards on the fly.  This is the restart path after growing or
+shrinking the fleet (e.g. 512 -> 256 chips after losing a pod).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed import sharding as shd
+
+
+def reshard_tree(tree: Any, cfg, mesh: Mesh, dp=("data",), tp="model"):
+    """Host pytree -> device pytree sharded for `mesh` (params rules)."""
+    ns = shd.named_shardings(tree, cfg, mesh, dp, tp)
+    return jax.tree.map(jax.device_put, tree, ns)
+
+
+def restore_elastic(manager, template, cfg, mesh: Mesh, dp=("data",),
+                    tp="model"):
+    """restore_latest + reshard onto `mesh`.  Returns (step, tree) or
+    None."""
+    out = manager.restore_latest(template=template)
+    if out is None:
+        return None
+    step, tree = out
+    return step, reshard_tree(tree, cfg, mesh, dp, tp)
+
+
+__all__ = ["reshard_tree", "restore_elastic"]

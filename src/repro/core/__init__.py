@@ -1,0 +1,17 @@
+"""NUMARCK core: the paper's contribution as a composable JAX module."""
+from repro.core.compress import (TemporalCompressor, TemporalDecompressor,
+                                 compress_series, compress_step,
+                                 decompress_series, decompress_step,
+                                 make_anchor)
+from repro.core.container import NCKReader, NCKWriter
+from repro.core.partial import TemporalArchive, read_step_range
+from repro.core.types import (CompressedStep, NumarckParams,
+                              mean_error_rate)
+
+__all__ = [
+    "NumarckParams", "CompressedStep", "mean_error_rate",
+    "compress_step", "decompress_step", "make_anchor",
+    "compress_series", "decompress_series",
+    "TemporalCompressor", "TemporalDecompressor",
+    "NCKWriter", "NCKReader", "TemporalArchive", "read_step_range",
+]

@@ -1,0 +1,133 @@
+"""Phase 2: bin construction (paper Sec. III-B / IV-B).
+
+Implements the paper's new *top-k* strategy plus the three earlier ones
+(equal-width, log-scale, k-means).  All strategies emit a sorted array of bin
+centers; top-k additionally reuses the candidate histogram for auto-B
+selection (select_b.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ratios as R
+
+
+def local_histogram(bin_ids: jax.Array, ok: jax.Array, max_bins: int):
+    """Count valid ratios per candidate bin.  int32 counts.
+
+    This is the per-process histogram of Sec. IV-B; the distributed pipeline
+    psums it (the MPI_Allreduce analogue).
+    """
+    ids = jnp.clip(bin_ids, 0, max_bins - 1)
+    w = ok.astype(jnp.int32)
+    return jnp.zeros((max_bins,), jnp.int32).at[ids].add(w)
+
+
+def sort_histogram(counts: jax.Array):
+    """Full descending sort of the histogram: (counts_desc, bin_ids_desc).
+
+    Replicated on every process, exactly like the paper's top-k selection
+    ("regarded as a serial part", Table 3).
+    """
+    m = counts.shape[0]
+    return jax.lax.top_k(counts, m)
+
+
+def topk_centers(bin_ids_desc: jax.Array, k: int, domain_lo, width):
+    """Centers of the k most populated candidate bins (Fig. 1 red ticks)."""
+    sel = bin_ids_desc[:k]
+    return domain_lo + (sel.astype(jnp.float32) + 0.5) * width, sel
+
+
+def rank_lut(selected_bins: jax.Array, k: int, max_bins: int):
+    """LUT: candidate bin id -> index rank in [0,k), else k (incompressible)."""
+    lut = jnp.full((max_bins,), k, jnp.int32)
+    return lut.at[selected_bins].set(jnp.arange(k, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Earlier strategies (parallelized in Sec. IV-B-3).
+# ---------------------------------------------------------------------------
+
+def equal_width_centers(lo, hi, k: int):
+    """Evenly split [lo, hi] into k chunks; centers of the chunks."""
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    w = (hi - lo) / k
+    return lo + (jnp.arange(k, dtype=jnp.float32) + 0.5) * w
+
+
+def log_scale_centers(ratios_arr, valid, k: int, eps: float = 1e-12):
+    """Log-scale bins over |ratio|, sign-symmetric.
+
+    Half the budget covers negative ratios, half positive; each side splits
+    [log(max(E_like, min|r|)), log(max|r|)] evenly in log space.
+    """
+    absr = jnp.where(valid, jnp.abs(ratios_arr), jnp.nan)
+    amin = jnp.nanmin(jnp.where(absr > eps, absr, jnp.nan))
+    amax = jnp.nanmax(absr)
+    amin = jnp.where(jnp.isfinite(amin), amin, eps)
+    amax = jnp.where(jnp.isfinite(amax) & (amax > amin), amax, amin * 10.0)
+    kh = max(k // 2, 1)
+    lg = jnp.linspace(jnp.log(amin), jnp.log(amax), kh)
+    pos = jnp.exp(lg)
+    neg = -pos[::-1]
+    cs = jnp.concatenate([neg, jnp.zeros((k - 2 * kh + 1,)), pos])[:k]
+    return jnp.sort(cs)
+
+
+def kmeans_centers(counts: jax.Array, domain_lo, width, k: int,
+                   iters: int = 20):
+    """Weighted 1-D k-means over candidate-bin centers (Lloyd iterations).
+
+    The paper clusters the raw change ratios (O(n * 2^B * I) via the MPI
+    k-means package); we cluster the histogram instead -- O(m * k * I) with
+    identical centers up to the 2E candidate resolution (DESIGN.md Sec. 3).
+    """
+    m = counts.shape[0]
+    xs = domain_lo + (jnp.arange(m, dtype=jnp.float32) + 0.5) * width
+    w = counts.astype(jnp.float32)
+    # Init: quantiles of the weighted distribution.
+    cw = jnp.cumsum(w)
+    total = cw[-1]
+    targets = (jnp.arange(k, dtype=jnp.float32) + 0.5) / k * total
+    init_idx = jnp.searchsorted(cw, targets)
+    centers = xs[jnp.clip(init_idx, 0, m - 1)]
+
+    def body(_, centers):
+        # Assign each candidate bin to nearest center (1-D: searchsorted on
+        # sorted centers against midpoints).
+        centers = jnp.sort(centers)
+        mids = 0.5 * (centers[1:] + centers[:-1])
+        assign = jnp.searchsorted(mids, xs)
+        sw = jnp.zeros((k,), jnp.float32).at[assign].add(w)
+        sx = jnp.zeros((k,), jnp.float32).at[assign].add(w * xs)
+        return jnp.where(sw > 0, sx / jnp.maximum(sw, 1.0), centers)
+
+    centers = jax.lax.fori_loop(0, iters, body, centers)
+    return jnp.sort(centers)
+
+
+def assign_nearest(ratios_arr: jax.Array, valid: jax.Array,
+                   centers_sorted: jax.Array, error_bound: float):
+    """Index = nearest center if within E, else k (incompressible).
+
+    Used by equal/log/kmeans, whose bins may be wider than 2E -- the original
+    NUMARCK marks points farther than E from their center incompressible.
+    """
+    k = centers_sorted.shape[0]
+    mids = 0.5 * (centers_sorted[1:] + centers_sorted[:-1])
+    idx = jnp.searchsorted(mids, ratios_arr).astype(jnp.int32)
+    err = jnp.abs(ratios_arr - centers_sorted[jnp.clip(idx, 0, k - 1)])
+    ok = valid & (err <= error_bound)
+    return jnp.where(ok, idx, k).astype(jnp.int32)
+
+
+__all__ = [
+    "local_histogram", "sort_histogram", "topk_centers", "rank_lut",
+    "equal_width_centers", "log_scale_centers", "kmeans_centers",
+    "assign_nearest",
+]

@@ -1,0 +1,239 @@
+"""Single-device NUMARCK compress / decompress orchestration.
+
+Device (jit) stages:
+  1. `_analyze`     -- ratios, candidate histogram, descending sort, auto-B
+  2. `_encode_topk` -- rank LUT + per-element index assignment (top-k)
+     `_encode_centers` -- nearest-center assignment (equal/log/kmeans)
+Host finalize: exception compaction (original dtype), per-block bit-pack +
+ZLIB, blob assembly.  The distributed pipeline (repro.distributed.pipeline)
+re-uses stages 1-2 inside shard_map.
+"""
+from __future__ import annotations
+
+import zlib
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import binning, blocks, ratios, select_b
+from repro.core.types import (CompressedStep, NumarckParams, REF_ORIGINAL,
+                              REF_RECONSTRUCTED, STRATEGY_EQUAL,
+                              STRATEGY_KMEANS, STRATEGY_LOG, STRATEGY_TOPK,
+                              dtype_nbytes)
+
+
+@partial(jax.jit, static_argnames=("max_bins", "b_max", "elem_bytes"))
+def _analyze(prev, curr, error_bound, max_bins, b_max, elem_bytes):
+    r, valid = ratios.change_ratios(prev, curr)
+    lo, hi = ratios.ratio_range(r, valid)
+    domain_lo, width = ratios.histogram_domain(lo, hi, error_bound, max_bins)
+    bin_ids, ok = ratios.candidate_bin_ids(r, valid, domain_lo, width,
+                                           max_bins)
+    counts = binning.local_histogram(bin_ids, ok, max_bins)
+    counts_desc, ids_desc = binning.sort_histogram(counts)
+    b_auto, est_sizes = select_b.choose_b(counts_desc, r.shape[0], elem_bytes,
+                                          b_max)
+    return dict(ratios=r, valid=valid, bin_ids=bin_ids, counts=counts,
+                counts_desc=counts_desc, ids_desc=ids_desc,
+                domain_lo=domain_lo, width=width, b_auto=b_auto,
+                est_sizes=est_sizes, lo=lo, hi=hi)
+
+
+@partial(jax.jit, static_argnames=("b_bits", "k_eff", "max_bins"))
+def _encode_topk(bin_ids, ids_desc, b_bits, k_eff, max_bins):
+    marker = (1 << b_bits) - 1
+    lut = binning.rank_lut(ids_desc[:k_eff], k_eff, max_bins)
+    # rank_lut fills non-selected with k_eff; remap to the B-bit marker.
+    ranks = lut[jnp.clip(bin_ids, 0, max_bins - 1)]
+    ranks = jnp.where(ranks >= k_eff, marker, ranks)
+    return jnp.where(bin_ids >= 0, ranks, marker).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("b_bits",))
+def _encode_centers(r, valid, centers_sorted, error_bound, b_bits):
+    marker = (1 << b_bits) - 1
+    idx = binning.assign_nearest(r, valid, centers_sorted, error_bound)
+    return jnp.where(idx >= centers_sorted.shape[0], marker, idx)
+
+
+def make_anchor(arr: np.ndarray, params: NumarckParams) -> CompressedStep:
+    """Losslessly stored first iteration (no previous step to diff against).
+
+    Stored in deflated *blocks* like the index table so that partial
+    decompression works from iteration 0 onwards.
+    """
+    arr = np.asarray(arr)
+    flat = arr.reshape(-1)
+    block_elems = max(1, params.block_bytes // flat.dtype.itemsize)
+    blks = []
+    for s, e in blocks.block_slices(flat.size, block_elems):
+        blks.append(zlib.compress(flat[s:e].tobytes(), params.zlib_level))
+    return CompressedStep(
+        n=arr.size, shape=tuple(arr.shape), dtype=str(arr.dtype),
+        b_bits=0, error_bound=params.error_bound, strategy=params.strategy,
+        reference=params.reference, domain_lo=0.0, bin_width=0.0,
+        centers=np.zeros(0), block_elems=block_elems, index_blocks=blks,
+        meta={"kind": "anchor"})
+
+
+def decode_anchor(step: CompressedStep) -> np.ndarray:
+    raw = b"".join(zlib.decompress(b) for b in step.index_blocks)
+    return np.frombuffer(raw, dtype=step.dtype).reshape(step.shape).copy()
+
+
+def compress_step(prev: np.ndarray, curr: np.ndarray,
+                  params: NumarckParams) -> CompressedStep:
+    """Compress `curr` against the reference state `prev` (Eq. 1/4).
+
+    `prev` is the original previous iteration in REF_ORIGINAL mode, or the
+    previously *reconstructed* state in REF_RECONSTRUCTED mode (the
+    TemporalCompressor picks the right one).
+    """
+    prev = np.asarray(prev)
+    curr = np.asarray(curr)
+    if prev.shape != curr.shape:
+        raise ValueError("temporal steps must share a shape")
+    n = curr.size
+    ebytes = dtype_nbytes(curr.dtype)
+    a = _analyze(prev.reshape(-1), curr.reshape(-1),
+                 np.float32(params.error_bound), params.max_bins,
+                 params.b_max, ebytes)
+
+    if params.strategy == STRATEGY_TOPK:
+        b_bits = int(params.b_bits if params.b_bits is not None
+                     else a["b_auto"])
+        k_eff = min((1 << b_bits) - 1, params.max_bins)
+        idx = _encode_topk(a["bin_ids"], a["ids_desc"], b_bits, k_eff,
+                           params.max_bins)
+        sel = np.asarray(a["ids_desc"][:k_eff])
+        centers = (np.float64(a["domain_lo"])
+                   + (sel.astype(np.float64) + 0.5) * np.float64(a["width"]))
+    else:
+        b_bits = int(params.b_bits if params.b_bits is not None else 8)
+        k_eff = (1 << b_bits) - 1
+        if params.strategy == STRATEGY_EQUAL:
+            cs = binning.equal_width_centers(a["lo"], a["hi"], k_eff)
+        elif params.strategy == STRATEGY_LOG:
+            cs = binning.log_scale_centers(a["ratios"], a["valid"], k_eff)
+        elif params.strategy == STRATEGY_KMEANS:
+            k_km = min(k_eff, params.kmeans_max_k)
+            cs = binning.kmeans_centers(a["counts"], a["domain_lo"],
+                                        a["width"], k_km,
+                                        params.kmeans_iters)
+        else:  # pragma: no cover
+            raise ValueError(params.strategy)
+        cs = jnp.sort(cs)
+        idx = _encode_centers(a["ratios"], a["valid"], cs,
+                              np.float32(params.error_bound), b_bits)
+        centers = np.asarray(cs, np.float64)
+
+    # Paper stores bin centers in the data's own float type (Fig. 2); round
+    # now so in-memory and from-file reconstructions agree bit-exactly.
+    centers = centers.astype(curr.dtype).astype(np.float64)
+
+    idx_np = np.asarray(idx)
+    marker = (1 << b_bits) - 1
+    incomp_mask = idx_np == marker
+    incomp_values = curr.reshape(-1)[incomp_mask]
+
+    block_elems = params.block_elems(b_bits)
+    blks, raw_sizes, incomp_off = blocks.deflate_blocks(
+        idx_np, b_bits, block_elems, params.zlib_level)
+
+    return CompressedStep(
+        n=n, shape=tuple(curr.shape), dtype=str(curr.dtype), b_bits=b_bits,
+        error_bound=params.error_bound, strategy=params.strategy,
+        reference=params.reference, domain_lo=float(a["domain_lo"]),
+        bin_width=float(a["width"]),
+        centers=centers[:marker] if centers.size > marker else centers,
+        block_elems=block_elems, index_blocks=blks,
+        index_block_nbytes=raw_sizes, incomp_values=incomp_values,
+        incomp_block_offsets=incomp_off,
+        meta={
+            "b_auto": int(a["b_auto"]),
+            "est_sizes": np.asarray(a["est_sizes"]).tolist(),
+            "ratio_min": float(a["lo"]), "ratio_max": float(a["hi"]),
+            "zlib_ratio": blocks.zlib_ratio(blks, raw_sizes),
+        })
+
+
+def decompress_step(step: CompressedStep,
+                    prev: Optional[np.ndarray]) -> np.ndarray:
+    """Reconstruct R_i = R_{i-1} * (1 + center)  (corrected Eq. 4)."""
+    if step.is_anchor:
+        return decode_anchor(step)
+    assert prev is not None, "non-anchor steps need the previous state"
+    prev_flat = np.asarray(prev, np.float64).reshape(-1)
+    out = np.empty(step.n, dtype=np.float64)
+    marker = (1 << step.b_bits) - 1
+    centers = np.concatenate([step.centers,
+                              np.zeros(marker + 1 - step.centers.size)])
+    ptr_base = step.incomp_block_offsets
+    for bi, (s, e) in enumerate(blocks.block_slices(step.n,
+                                                    step.block_elems)):
+        idx = blocks.inflate_block(step.index_blocks[bi], e - s, step.b_bits)
+        comp = prev_flat[s:e] * (1.0 + centers[idx])
+        mask = idx == marker
+        if mask.any():
+            start = int(ptr_base[bi])
+            stop = start + int(mask.sum())
+            comp[mask] = step.incomp_values[start:stop].astype(np.float64)
+        out[s:e] = comp
+    return out.astype(step.dtype).reshape(step.shape)
+
+
+class TemporalCompressor:
+    """Streaming compressor over a temporal series (paper Sec. III)."""
+
+    def __init__(self, params: NumarckParams = NumarckParams()):
+        self.params = params
+        self._state: Optional[np.ndarray] = None
+
+    def add(self, arr: np.ndarray) -> CompressedStep:
+        arr = np.asarray(arr)
+        if self._state is None:
+            step = make_anchor(arr, self.params)
+            self._state = arr.copy()
+            return step
+        step = compress_step(self._state, arr, self.params)
+        if self.params.reference == REF_RECONSTRUCTED:
+            self._state = decompress_step(step, self._state)
+        else:
+            self._state = arr.copy()
+        return step
+
+    def reset(self):
+        self._state = None
+
+
+class TemporalDecompressor:
+    """Streaming decompressor; mirrors TemporalCompressor state chaining."""
+
+    def __init__(self):
+        self._state: Optional[np.ndarray] = None
+
+    def add(self, step: CompressedStep) -> np.ndarray:
+        self._state = decompress_step(step, self._state)
+        return self._state
+
+    def reset(self):
+        self._state = None
+
+
+def compress_series(arrays, params: NumarckParams = NumarckParams()
+                    ) -> List[CompressedStep]:
+    c = TemporalCompressor(params)
+    return [c.add(a) for a in arrays]
+
+
+def decompress_series(steps: List[CompressedStep]) -> List[np.ndarray]:
+    d = TemporalDecompressor()
+    return [d.add(s) for s in steps]
+
+
+__all__ = ["compress_step", "decompress_step", "make_anchor", "decode_anchor",
+           "TemporalCompressor", "TemporalDecompressor", "compress_series",
+           "decompress_series"]

@@ -1,0 +1,188 @@
+"""NCK container: netCDF-analogue file format (paper Sec. IV-D, Fig. 2).
+
+No netCDF library is available in this environment, so we use a
+self-describing single-file container with the *same logical layout* as the
+paper's netCDF output:
+
+  magic "NCK1" | u64 header_len | JSON header | pad->64 | section bytes ...
+
+The JSON header mirrors netCDF dimensions/variables/attributes.  Each
+compressed variable V (one per iteration per field) stores, exactly as in
+Fig. 2:
+
+  V_info                      -- attributes (total_data_num, bin_centers_number,
+                                 elements_per_block, B, E, strategy, ...)
+  V_bin_centers               -- float array
+  V_index_table_offset        -- int64 byte offsets of deflated blocks
+  V_incompressible_table_offset -- int64 per-block exception count prefix
+  V_index_table               -- concatenated deflated blocks (byte array)
+  V_incompressible_table      -- original-dtype exception values
+
+Multiple variables per file are supported (paper: "NUMARCK allows multiple
+compressed variables stored in one netCDF file").  Reads are offset-based so
+partial decompression touches only the needed byte ranges.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.types import CompressedStep
+
+_MAGIC = b"NCK1"
+_ALIGN = 64
+
+
+def _pad(n: int) -> int:
+    return (-n) % _ALIGN
+
+
+class NCKWriter:
+    """Assemble sections then write the file in one shot (or via append)."""
+
+    def __init__(self):
+        self._sections: List[bytes] = []
+        self._vars: Dict[str, dict] = {}
+        self._dims: Dict[str, int] = {}
+        self._offset = 0
+
+    def add_array(self, name: str, arr: np.ndarray, attrs: Optional[dict] = None):
+        arr = np.ascontiguousarray(arr)
+        self._add_bytes(name, arr.tobytes(), str(arr.dtype), list(arr.shape),
+                        attrs)
+
+    def add_bytes(self, name: str, raw: bytes, attrs: Optional[dict] = None):
+        self._add_bytes(name, raw, "uint8", [len(raw)], attrs)
+
+    def _add_bytes(self, name, raw, dtype, shape, attrs):
+        if name in self._vars:
+            raise ValueError(f"duplicate variable {name}")
+        self._vars[name] = dict(dtype=dtype, shape=shape, offset=self._offset,
+                                nbytes=len(raw), attributes=attrs or {})
+        self._dims[f"{name}_dim"] = int(np.prod(shape)) if shape else 1
+        self._sections.append(raw)
+        self._offset += len(raw) + _pad(len(raw))
+
+    def add_step(self, name: str, step: CompressedStep):
+        """Store one CompressedStep under variable prefix `name` (Fig. 2)."""
+        info = dict(
+            total_data_num=step.n, shape=list(step.shape), dtype=step.dtype,
+            bin_centers_number=int(step.centers.size),
+            elements_per_block=step.block_elems, B=step.b_bits,
+            error_bound=step.error_bound, strategy=step.strategy,
+            reference=step.reference, domain_lo=step.domain_lo,
+            bin_width=step.bin_width, is_anchor=bool(step.is_anchor),
+            n_blocks=step.n_blocks,
+            n_incompressible=step.n_incompressible,
+        )
+        offs_all = np.concatenate(
+            [step.index_table_offsets(),
+             [sum(len(b) for b in step.index_blocks)]]).astype(np.int64)
+        if step.is_anchor:
+            self.add_array(f"{name}_anchor_info", np.zeros(1, np.int32),
+                           attrs=info)
+            self.add_array(f"{name}_anchor_offset", offs_all)
+            self.add_bytes(f"{name}_anchor", b"".join(step.index_blocks))
+            return
+        self.add_array(f"{name}_info", np.zeros(1, np.int32), attrs=info)
+        self.add_array(f"{name}_bin_centers",
+                       step.centers.astype(step.dtype))
+        self.add_array(f"{name}_index_table_offset", offs_all)
+        self.add_array(f"{name}_incompressible_table_offset",
+                       np.asarray(step.incomp_block_offsets, np.int64))
+        self.add_bytes(f"{name}_index_table",
+                       b"".join(step.index_blocks))
+        self.add_array(f"{name}_incompressible_table", step.incomp_values)
+
+    def write(self, path: str):
+        header = json.dumps({"dimensions": self._dims,
+                             "variables": self._vars}).encode()
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(_MAGIC)
+            f.write(struct.pack("<Q", len(header)))
+            f.write(header)
+            f.write(b"\0" * _pad(len(_MAGIC) + 8 + len(header)))
+            for raw in self._sections:
+                f.write(raw)
+                f.write(b"\0" * _pad(len(raw)))
+        os.replace(tmp, path)  # atomic publish (fault tolerance)
+
+
+class NCKReader:
+    """Offset-based reader; `read` pulls only the requested byte range."""
+
+    def __init__(self, path: str):
+        self.path = path
+        with open(path, "rb") as f:
+            magic = f.read(4)
+            if magic != _MAGIC:
+                raise ValueError(f"{path}: not an NCK file")
+            (hlen,) = struct.unpack("<Q", f.read(8))
+            header = json.loads(f.read(hlen))
+        self.variables = header["variables"]
+        self.dimensions = header["dimensions"]
+        self._data_start = 4 + 8 + hlen + _pad(4 + 8 + hlen)
+
+    def attrs(self, name: str) -> dict:
+        return self.variables[name]["attributes"]
+
+    def read(self, name: str, byte_start: int = 0,
+             byte_stop: Optional[int] = None) -> bytes:
+        v = self.variables[name]
+        stop = v["nbytes"] if byte_stop is None else min(byte_stop,
+                                                         v["nbytes"])
+        with open(self.path, "rb") as f:
+            f.seek(self._data_start + v["offset"] + byte_start)
+            return f.read(max(stop - byte_start, 0))
+
+    def read_array(self, name: str) -> np.ndarray:
+        v = self.variables[name]
+        raw = self.read(name)
+        return np.frombuffer(raw, dtype=v["dtype"]).reshape(v["shape"])
+
+    def read_step(self, name: str) -> CompressedStep:
+        """Inverse of NCKWriter.add_step."""
+        if f"{name}_anchor" in self.variables:
+            info = self.attrs(f"{name}_anchor_info")
+            offs = self.read_array(f"{name}_anchor_offset")
+            table = self.read(f"{name}_anchor")
+            blks = [table[offs[i]:offs[i + 1]] for i in range(len(offs) - 1)]
+            return CompressedStep(
+                n=info["total_data_num"], shape=tuple(info["shape"]),
+                dtype=info["dtype"], b_bits=0,
+                error_bound=info["error_bound"], strategy=info["strategy"],
+                reference=info["reference"], domain_lo=0.0, bin_width=0.0,
+                centers=np.zeros(0),
+                block_elems=info["elements_per_block"], index_blocks=blks)
+        info = self.attrs(f"{name}_info")
+        offs = self.read_array(f"{name}_index_table_offset")
+        table = self.read(f"{name}_index_table")
+        blks = [table[offs[i]:offs[i + 1]] for i in range(len(offs) - 1)]
+        return CompressedStep(
+            n=info["total_data_num"], shape=tuple(info["shape"]),
+            dtype=info["dtype"], b_bits=info["B"],
+            error_bound=info["error_bound"], strategy=info["strategy"],
+            reference=info["reference"], domain_lo=info["domain_lo"],
+            bin_width=info["bin_width"],
+            centers=self.read_array(f"{name}_bin_centers").astype(np.float64),
+            block_elems=info["elements_per_block"], index_blocks=blks,
+            incomp_values=self.read_array(f"{name}_incompressible_table"),
+            incomp_block_offsets=self.read_array(
+                f"{name}_incompressible_table_offset"))
+
+    def step_names(self) -> List[str]:
+        names = set()
+        for v in self.variables:
+            if v.endswith("_anchor_info"):
+                names.add(v[: -len("_anchor_info")])
+            elif v.endswith("_info"):
+                names.add(v[: -len("_info")])
+        return sorted(names)
+
+
+__all__ = ["NCKWriter", "NCKReader"]

@@ -1,0 +1,56 @@
+"""Phase 3 bit-packing: B-bit indices <-> byte streams (paper Sec. IV-C).
+
+Layout: little-endian bitstream, LSB-first -- element j occupies stream bits
+[j*B, (j+1)*B); stream bit t lives at bit (t % 8) of byte (t // 8).  Each
+index-table *block* is packed independently and byte-aligned ("there may
+exist several unused bits at the end of each index block").
+
+Two implementations: jnp (device; also the oracle for the Pallas bitpack
+kernel) and numpy (host finalize / decompression path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def packed_nbytes(n: int, b_bits: int) -> int:
+    return (n * b_bits + 7) // 8
+
+
+def pack_indices_jnp(idx: jax.Array, b_bits: int) -> jax.Array:
+    """(n,) int32 -> (ceil(n*B/8),) uint8."""
+    n = idx.shape[0]
+    bits = (idx[:, None] >> jnp.arange(b_bits, dtype=jnp.int32)) & 1
+    bits = bits.reshape(-1)
+    pad = (-(n * b_bits)) % 8
+    if pad:
+        bits = jnp.pad(bits, (0, pad))
+    weights = (1 << jnp.arange(8, dtype=jnp.int32))
+    byts = (bits.reshape(-1, 8) * weights).sum(axis=-1)
+    return byts.astype(jnp.uint8)
+
+
+def unpack_indices_jnp(packed: jax.Array, n: int, b_bits: int) -> jax.Array:
+    """(nbytes,) uint8 -> (n,) int32."""
+    bits = (packed[:, None].astype(jnp.int32) >> jnp.arange(8)) & 1
+    bits = bits.reshape(-1)[: n * b_bits].reshape(n, b_bits)
+    weights = (1 << jnp.arange(b_bits, dtype=jnp.int32))
+    return (bits * weights).sum(axis=-1).astype(jnp.int32)
+
+
+def pack_indices_np(idx: np.ndarray, b_bits: int) -> np.ndarray:
+    idx = np.asarray(idx, dtype=np.int64)
+    bits = ((idx[:, None] >> np.arange(b_bits)) & 1).astype(np.uint8)
+    return np.packbits(bits.reshape(-1), bitorder="little")
+
+
+def unpack_indices_np(packed: np.ndarray, n: int, b_bits: int) -> np.ndarray:
+    bits = np.unpackbits(np.asarray(packed, np.uint8), bitorder="little")
+    bits = bits[: n * b_bits].reshape(n, b_bits).astype(np.int64)
+    return (bits << np.arange(b_bits)).sum(axis=-1).astype(np.int32)
+
+
+__all__ = ["packed_nbytes", "pack_indices_jnp", "unpack_indices_jnp",
+           "pack_indices_np", "unpack_indices_np"]

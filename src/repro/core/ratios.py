@@ -1,0 +1,70 @@
+"""Phase 1: element-wise change-ratio calculation (paper Sec. III-A / IV-A).
+
+    dD[i,j] = (D[i,j] - D[i-1,j]) / D[i-1,j]                     (Eq. 1)
+
+A ratio is *valid* (candidate for binning) iff the previous value is nonzero
+and the ratio is finite.  Invalid elements are incompressible by definition.
+All device math is float32 (DESIGN.md Sec. 3: E >> f32 eps; incompressible
+values round-trip in the original dtype on the host side).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def change_ratios(prev: jax.Array, curr: jax.Array):
+    """Return (ratios f32, valid bool), flattened to 1-D.
+
+    The paper tracks the global min/max alongside (via MPI_Allreduce); the
+    single-device variant exposes them through `ratio_range`.
+    """
+    prev = jnp.asarray(prev, jnp.float32).reshape(-1)
+    curr = jnp.asarray(curr, jnp.float32).reshape(-1)
+    denom_ok = prev != 0.0
+    safe_prev = jnp.where(denom_ok, prev, 1.0)
+    ratios = (curr - safe_prev) / safe_prev
+    valid = denom_ok & jnp.isfinite(ratios) & jnp.isfinite(curr)
+    ratios = jnp.where(valid, ratios, 0.0)
+    return ratios, valid
+
+
+def ratio_range(ratios: jax.Array, valid: jax.Array):
+    """(min, max) over valid ratios; (0, 0) when none are valid."""
+    any_valid = jnp.any(valid)
+    lo = jnp.min(jnp.where(valid, ratios, jnp.inf))
+    hi = jnp.max(jnp.where(valid, ratios, -jnp.inf))
+    lo = jnp.where(any_valid, lo, 0.0)
+    hi = jnp.where(any_valid, hi, 0.0)
+    return lo, hi
+
+
+def histogram_domain(lo: jax.Array, hi: jax.Array, error_bound: float,
+                     max_bins: int):
+    """Pick the (domain_lo, width, m) for the candidate-bin histogram.
+
+    Paper: bins of width 2E anchored at the global minimum.  We keep m static
+    (= max_bins) for jit; when the data range fits inside max_bins * 2E the
+    domain is anchored at the global min (paper-faithful), otherwise it is
+    centred on zero (temporal change ratios cluster there; out-of-domain
+    points become incompressible).  See DESIGN.md "Histogram domain capping".
+    """
+    width = jnp.float32(2.0 * error_bound)
+    coverage = width * max_bins
+    data_range = hi - lo
+    fits = data_range <= coverage
+    domain_lo = jnp.where(fits, lo, -0.5 * coverage)
+    return domain_lo, width
+
+
+def candidate_bin_ids(ratios: jax.Array, valid: jax.Array,
+                      domain_lo: jax.Array, width: jax.Array, max_bins: int):
+    """Map each ratio to its candidate histogram bin; -1 if not binnable."""
+    raw = jnp.floor((ratios - domain_lo) / width)
+    in_domain = (raw >= 0) & (raw < max_bins)
+    ok = valid & in_domain
+    return jnp.where(ok, raw, -1).astype(jnp.int32), ok
+
+
+__all__ = ["change_ratios", "ratio_range", "histogram_domain",
+           "candidate_bin_ids"]

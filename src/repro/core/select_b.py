@@ -1,0 +1,50 @@
+"""Auto-selection of the index length B (paper Sec. IV-B-2, Eq. 6).
+
+    file_size(B) = 2^B * L  +  n * B / 8  +  n * alpha(B) * L
+
+where alpha(B) is the incompressible ratio when keeping the top (2^B - 1)
+candidate bins.  Every process holds the same global histogram, so the scan
+over B needs no communication (paper: "no inter-process communication is
+needed in this phase").
+
+The model deliberately ignores the downstream ZLIB pass -- reproducing the
+paper's known mis-prediction on Sedov-like data (Figs. 16/17, Table 9).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def estimated_file_sizes(counts_desc: jax.Array, n: int, elem_bytes: int,
+                         b_max: int):
+    """Eq. (6) for B in [1, b_max].  Returns float32 (b_max,) byte sizes."""
+    m = counts_desc.shape[0]
+    cum = jnp.cumsum(counts_desc.astype(jnp.float32))
+    bs = jnp.arange(1, b_max + 1, dtype=jnp.float32)
+    ks = jnp.minimum((2.0 ** bs - 1.0), float(m)).astype(jnp.int32)
+    covered = cum[jnp.clip(ks - 1, 0, m - 1)]
+    covered = jnp.where(ks > 0, covered, 0.0)
+    incompressible = jnp.maximum(float(n) - covered, 0.0)
+    center_bytes = (2.0 ** bs) * elem_bytes
+    index_bytes = float(n) * bs / 8.0
+    exception_bytes = incompressible * elem_bytes
+    return center_bytes + index_bytes + exception_bytes
+
+
+def choose_b(counts_desc: jax.Array, n: int, elem_bytes: int, b_max: int):
+    """argmin_B file_size(B); returns (B int32, sizes (b_max,))."""
+    sizes = estimated_file_sizes(counts_desc, n, elem_bytes, b_max)
+    b = jnp.argmin(sizes).astype(jnp.int32) + 1
+    return b, sizes
+
+
+def choose_b_host(counts_desc: np.ndarray, n: int, elem_bytes: int,
+                  b_max: int) -> int:
+    sizes = np.asarray(
+        estimated_file_sizes(jnp.asarray(counts_desc), n, elem_bytes, b_max))
+    return int(np.argmin(sizes)) + 1
+
+
+__all__ = ["estimated_file_sizes", "choose_b", "choose_b_host"]

@@ -1,0 +1,1 @@
+"""Data layer: synthetic temporal fields + LM token pipeline."""

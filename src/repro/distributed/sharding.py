@@ -1,0 +1,277 @@
+"""GSPMD sharding rules: 2-D (FSDP x TP) weight sharding + activation
+constraints (DESIGN.md Sec. 6).
+
+Weights carry PartitionSpecs over ("data", "model"): FSDP shards a large
+non-TP dim over "data" (GSPMD inserts the gather/reduce-scatter), Megatron
+TP shards heads / ffn-hidden / vocab / experts over "model".  Dims that
+don't divide the axis fall back to replication (e.g. minicpm3's 40 heads on
+a 16-way axis shard the LoRA rank instead).
+
+Activation constraints are applied through a process-global active-mesh
+context so model code stays mesh-agnostic (identity when no mesh is
+active -- CPU unit tests).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE = {"mesh": None, "dp": ("data",), "tp": "model",
+           "shard_seq": False}
+
+
+def activate(mesh: Optional[Mesh], dp_axes=("data",), tp_axis="model",
+             shard_seq: bool = False):
+    _ACTIVE.update(mesh=mesh, dp=tuple(dp_axes), tp=tp_axis,
+                   shard_seq=shard_seq)
+
+
+def deactivate():
+    _ACTIVE.update(mesh=None)
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= mesh.shape[n]
+        return out
+    return mesh.shape[name]
+
+
+def logical_to_spec(logical: Tuple, mesh: Mesh, dp, tp,
+                    shape=None) -> P:
+    """('dp'|'tp'|'tp!'|None, ...) -> PartitionSpec.
+
+    'tp' falls back to replication when the dim doesn't divide; 'tp!'
+    forces the sharding (GSPMD pads uneven shards -- used for padded
+    expert parallelism, E=8 on a 16-way axis).
+    """
+    elems = []
+    for i, l in enumerate(logical):
+        if l == "dp":
+            elems.append(dp if len(dp) > 1 else dp[0])
+        elif l == "tp!":
+            elems.append(tp)
+        elif l == "tp":
+            if shape is not None and shape[i] % axis_size(mesh, tp) != 0:
+                elems.append(None)
+            else:
+                elems.append(tp)
+        else:
+            elems.append(None)
+    return P(*elems)
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint against the active mesh (identity if none).
+
+    logical elems: 'dp', 'tp', 'seq' (tp iff shard_seq is on), or None.
+    """
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    dp, tp = _ACTIVE["dp"], _ACTIVE["tp"]
+    resolved = tuple(
+        ("tp" if _ACTIVE["shard_seq"] else None) if l == "seq" else l
+        for l in logical)
+    spec = logical_to_spec(resolved, mesh, dp, tp, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def param_logical(path_s: str, ndim: int, cfg) -> Tuple:
+    """Map a parameter path to logical axes ('fsdp'->dp, 'tp', None)."""
+    name = path_s.split("/")[-1]
+    # stacked layer params may sit under a wrapper key ("params/layers/...")
+    stacked = "layers/" in path_s or path_s.startswith("layers")
+    lead = ("layer",) if stacked else ()
+    body_ndim = ndim - len(lead)
+
+    table = {
+        "embed": ("tp", "dp"),
+        "unembed": ("dp", "tp"),
+        "wq": ("dp", "tp", None),
+        "wk": ("dp", "tp", None),
+        "wv": ("dp", "tp", None),
+        "wo": ("tp", None, "dp"),
+        "bq": ("tp", None),
+        "bk": ("tp", None),
+        "bv": ("tp", None),
+        "w_gate": ("dp", "tp"),
+        "w_up": ("dp", "tp"),
+        "w_down": ("tp", "dp"),
+        "router": ("dp", None),
+        # MoE experts: EP over 'model' when the slot count divides the axis
+        # (moe_ep_split fans experts out; SS Perf mixtral iteration), else
+        # TP inside the expert
+        "we_gate": ("tp", "dp", None) if _ep_ok(cfg) else (None, "dp", "tp"),
+        "we_up": ("tp", "dp", None) if _ep_ok(cfg) else (None, "dp", "tp"),
+        "we_down": ("tp", None, "dp") if _ep_ok(cfg)
+        else (None, "tp", "dp"),
+        # MLA
+        "wq_a": ("dp", "tp"),
+        "wq_b": ("tp", None, None),     # shard q_lora rank (heads may not
+        "wk_b": ("tp", None, None),     # divide the axis: 40 on 16)
+        "wv_b": ("tp", None, None),
+        "wkv_a": ("dp", None),
+        # SSD
+        "in_proj": ("dp", "tp"),
+        "out_proj": ("tp", "dp"),
+        "conv_w": (None, "tp"),
+        "conv_b": ("tp",),
+        "A_log": ("tp",),
+        "D": ("tp",),
+        "dt_bias": ("tp",),
+        "scale": (None,),
+    }
+    logical = table.get(name, (None,) * body_ndim)
+    if len(logical) != body_ndim:
+        logical = (None,) * body_ndim
+    return (None,) * len(lead) + tuple(logical)
+
+
+def _ep_ok(cfg) -> bool:
+    # SS Perf iteration (EXPERIMENTS.md, mixtral train_4k): FSDP-gathering
+    # expert weights every step costs ~90 GB/device/step of all-gather;
+    # expert parallelism keeps experts resident.  moe_ep_split fans each
+    # expert into FFN slices so slots = n_experts * split matches the
+    # 16-way model axis (mixtral: 8 x 2).
+    slots = (getattr(cfg, "n_experts", 0)
+             * getattr(cfg, "moe_ep_split", 1))
+    return slots >= 16
+
+
+def param_specs(params_tree, cfg, mesh: Mesh, dp=("data",), tp="model"):
+    """Pytree of PartitionSpecs matching `params_tree` (shapes or arrays)."""
+    def one(path, leaf):
+        shape = leaf.shape
+        logical = param_logical(_path_str(path), len(shape), cfg)
+        resolved = tuple("dp" if l == "dp" else l for l in logical)
+        # fsdp ('dp') dims must also divide; else replicate.  'tp!' forces
+        # the sharding (GSPMD pads; padded expert parallelism).
+        elems = []
+        for i, l in enumerate(resolved):
+            if l == "dp":
+                if shape[i] % axis_size(mesh, dp if len(dp) > 1 else dp[0]) \
+                        != 0:
+                    elems.append(None)
+                else:
+                    elems.append(dp if len(dp) > 1 else dp[0])
+            elif l == "tp!":
+                elems.append(tp)
+            elif l == "tp":
+                if shape[i] % axis_size(mesh, tp) != 0:
+                    elems.append(None)
+                else:
+                    elems.append(tp)
+            else:
+                elems.append(None)
+        return P(*elems)
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def named_shardings(params_tree, cfg, mesh: Mesh, dp=("data",), tp="model"):
+    specs = param_specs(params_tree, cfg, mesh, dp, tp)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# serve-cache rules
+# ---------------------------------------------------------------------------
+
+_CACHE_TABLE = {
+    # name: logical spec for the *unstacked* leaf.  "tp>alt" = shard this
+    # dim over tp, falling back to the dim marked "alt" when it doesn't
+    # divide (e.g. 8 or 24 kv heads on a 16-way axis -> shard head_dim;
+    # keeps 100+ GB KV caches inside 16 GB/chip, see EXPERIMENTS.md).
+    "k": ("batch", None, "tp>", "alt"),
+    "v": ("batch", None, "tp>", "alt"),
+    "ckv": ("batch", None, "alt"),
+    "krope": ("batch", None, None),
+    "pos_map": (None,),
+    "conv": ("batch", None, "tp"),
+    "h": ("batch", "tp>", "alt", None),
+}
+
+
+def cache_specs(cache_tree, mesh: Mesh, dp=("data",), tp="model",
+                stacked: bool = True):
+    """PartitionSpecs for a decode cache pytree (KV over batch+TP heads).
+
+    Falls back to replication per-dim when sizes don't divide (e.g.
+    long_500k's global_batch=1, or 8 kv heads on a 16-way axis).
+    """
+    dp_name = dp if len(dp) > 1 else dp[0]
+    dp_size = axis_size(mesh, dp_name)
+    tp_size = axis_size(mesh, tp)
+
+    def one(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        logical = _CACHE_TABLE.get(name)
+        shape = leaf.shape
+        if logical is None:
+            return P(*([None] * len(shape)))
+        lead = len(shape) - len(logical)
+        elems = [None] * lead
+        primary_failed = False
+        used_tp = False
+        for i, l in enumerate(logical):
+            dim = shape[lead + i]
+            if l == "batch" and dim % dp_size == 0:
+                elems.append(dp_name)
+            elif l == "tp" and dim % tp_size == 0 and dim > 1:
+                elems.append(tp)
+            elif l == "tp>":
+                if dim % tp_size == 0 and dim > 1:
+                    elems.append(tp)
+                    used_tp = True
+                else:
+                    elems.append(None)
+                    primary_failed = True
+            elif l == "alt":
+                if ((primary_failed or not used_tp)
+                        and dim % tp_size == 0 and dim > 1):
+                    elems.append(tp)
+                    used_tp = True
+                else:
+                    elems.append(None)
+            else:
+                elems.append(None)
+        return P(*elems)
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def batch_specs(batch_tree, mesh: Mesh, dp=("data",)):
+    """Input batches: shard the leading (global batch) dim over dp."""
+    dp_name = dp if len(dp) > 1 else dp[0]
+    dp_size = axis_size(mesh, dp_name)
+
+    def one(leaf):
+        if not leaf.shape:
+            return P()
+        elems = [None] * len(leaf.shape)
+        if leaf.shape[0] % dp_size == 0:
+            elems[0] = dp_name
+        return P(*elems)
+
+    return jax.tree.map(one, batch_tree)
+
+
+__all__ = ["activate", "deactivate", "constrain", "param_specs",
+           "named_shardings", "logical_to_spec", "axis_size"]

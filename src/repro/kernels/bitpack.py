@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: B-bit index packing (paper "bits packing" sub-phase).
+
+Packs groups of 32 B-bit indices into B uint32 words of the little-endian
+bitstream (layout identical to core.packing).  The MPI implementation
+bit-copies "the B least significant bits of the integer to the corresponding
+index table entry" one element at a time; on TPU we unroll the 32 static
+element positions per word-group, so each tile is pure vector shifts/ors --
+no scalar loop, no gather.
+
+Tile: (rows, 32) int32 indices -> (rows, B) uint32 words.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GROUP = 32              # indices per word-group (32*B bits = B words)
+DEFAULT_BLOCK_ROWS = 512
+
+
+def _kernel(idx_ref, out_ref, *, b_bits):
+    idx = idx_ref[...].astype(jnp.uint32)
+    mask = jnp.uint32((1 << b_bits) - 1)
+    words = [jnp.zeros(idx.shape[:1], jnp.uint32) for _ in range(b_bits)]
+    for j in range(GROUP):                      # static unroll
+        v = idx[:, j] & mask
+        bit0 = j * b_bits
+        w, s = bit0 // 32, bit0 % 32
+        words[w] = words[w] | (v << s)
+        if s + b_bits > 32:                      # spills into the next word
+            words[w + 1] = words[w + 1] | (v >> (32 - s))
+    out_ref[...] = jnp.stack(words, axis=-1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b_bits", "block_rows", "interpret"))
+def pack_bits(idx: jax.Array, *, b_bits: int,
+              block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = False):
+    """(n,) int32 (n % 32 == 0 after padding) -> (n//32*B,) uint32 words.
+
+    Pad indices with 0 to a multiple of 32*block_rows before calling; the
+    ops wrapper handles block-aligned padding.
+    """
+    n = idx.shape[0]
+    assert n % GROUP == 0, "pad to a multiple of 32 first"
+    rows = n // GROUP
+    rows_pad = pl.cdiv(rows, block_rows) * block_rows
+    idx2 = jnp.pad(idx, (0, (rows_pad - rows) * GROUP)).reshape(rows_pad,
+                                                                GROUP)
+    grid = (rows_pad // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, b_bits=b_bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, GROUP), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, b_bits), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, b_bits), jnp.uint32),
+        interpret=interpret,
+    )(idx2)
+    return out.reshape(-1)[: rows * b_bits]
+
+
+__all__ = ["pack_bits", "GROUP"]

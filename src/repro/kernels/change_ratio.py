@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused change-ratio + candidate-bin-id (phases 1+2a).
+
+The paper's hottest per-element loop (change-ratio calculation + "assign
+index" pre-pass) fused into one VMEM pass: for each element compute
+  r   = (curr - prev) / prev          (Eq. 1)
+  bin = floor((r - domain_lo) / width), or -1 if invalid / out of domain.
+
+TPU adaptation: 1-D data is retiled to (rows, 1024) so the VPU sees
+(8, 128)-aligned lanes; scalars (domain_lo, width) ride in SMEM.  One HBM
+read of prev/curr and one write of ratio/bin_id -- the kernel is purely
+memory-bound, so the roofline term is bytes-limited (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 1024            # flattened minor dim (8 sublanes x 128 lanes)
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _kernel(scal_ref, prev_ref, curr_ref, ratio_ref, id_ref, *, max_bins):
+    lo = scal_ref[0]
+    width = scal_ref[1]
+    prev = prev_ref[...]
+    curr = curr_ref[...]
+    denom_ok = prev != 0.0
+    safe = jnp.where(denom_ok, prev, 1.0)
+    r = (curr - safe) / safe
+    ok = denom_ok & jnp.isfinite(r) & jnp.isfinite(curr)
+    r = jnp.where(ok, r, 0.0)
+    raw = jnp.floor((r - lo) / width)
+    ok = ok & (raw >= 0.0) & (raw < float(max_bins))
+    ratio_ref[...] = r
+    id_ref[...] = jnp.where(ok, raw, -1.0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_bins", "block_rows", "interpret"))
+def change_ratio_bins(prev: jax.Array, curr: jax.Array, domain_lo, width,
+                      *, max_bins: int, block_rows: int = DEFAULT_BLOCK_ROWS,
+                      interpret: bool = False):
+    """(n,) f32 x2 -> (ratios f32 (n,), bin_ids i32 (n,)).
+
+    Padding elements (prev=curr=0) come out invalid (bin_id == -1), so the
+    histogram downstream is unaffected.
+    """
+    n = prev.shape[0]
+    rows = pl.cdiv(n, LANE)
+    rows_pad = pl.cdiv(rows, block_rows) * block_rows
+    pad = rows_pad * LANE - n
+
+    def retile(x):
+        return jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(rows_pad,
+                                                                LANE)
+
+    prev2, curr2 = retile(prev), retile(curr)
+    scal = jnp.stack([jnp.asarray(domain_lo, jnp.float32),
+                      jnp.asarray(width, jnp.float32)])
+
+    grid = (rows_pad // block_rows,)
+    blk = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    ratio, ids = pl.pallas_call(
+        functools.partial(_kernel, max_bins=max_bins),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            blk, blk,
+        ],
+        out_specs=[blk, blk],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_pad, LANE), jnp.float32),
+            jax.ShapeDtypeStruct((rows_pad, LANE), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scal, prev2, curr2)
+    return ratio.reshape(-1)[:n], ids.reshape(-1)[:n]
+
+
+__all__ = ["change_ratio_bins"]

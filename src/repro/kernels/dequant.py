@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: fused decompression (unpack-free dequantize).
+
+    out = prev * (1 + centers[idx])                 (corrected Eq. 4)
+
+TPU adaptation (DESIGN.md Sec. 3): TPUs have no fast VMEM gather, so the
+codebook lookup centers[idx] is computed as a **chunked one-hot matmul on
+the MXU** -- for each 1024-wide chunk of the codebook, build the one-hot
+matrix of the tile's indices against that chunk and contract with the chunk
+of centers.  For B <= 13 this is <= 8 MXU matvecs per tile, all VMEM-resident.
+
+Incompressible lanes (idx == 2^B - 1) are produced as 0 and patched by the
+caller from the exception table (irregular scatter stays on host).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 1024
+DEFAULT_BLOCK_ROWS = 64
+CHUNK = 1024            # codebook elements per one-hot matmul
+
+
+def _kernel(idx_ref, prev_ref, centers_ref, out_ref, *, k_padded, marker):
+    idx = idx_ref[...]                          # (R, LANE) int32
+    prev = prev_ref[...]                        # (R, LANE) f32
+    r, l = idx.shape
+    flat = idx.reshape(r * l)
+    acc = jnp.zeros((r * l,), jnp.float32)
+    for base in range(0, k_padded, CHUNK):      # static unroll, <= 8 iters
+        local = flat - base
+        onehot = (local[:, None] ==
+                  jnp.arange(CHUNK, dtype=jnp.int32)[None, :])
+        chunk = centers_ref[pl.dslice(base, CHUNK)]
+        acc = acc + jnp.dot(onehot.astype(jnp.float32), chunk,
+                            preferred_element_type=jnp.float32)
+    centers_of = acc.reshape(r, l)
+    compressible = idx != marker
+    out = prev * (1.0 + centers_of)
+    out_ref[...] = jnp.where(compressible, out, 0.0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b_bits", "block_rows", "interpret"))
+def dequantize(idx: jax.Array, prev: jax.Array, centers: jax.Array, *,
+               b_bits: int, block_rows: int = DEFAULT_BLOCK_ROWS,
+               interpret: bool = False):
+    """(n,) i32 idx, (n,) f32 prev, (k,) f32 centers -> (n,) f32 recon.
+
+    Incompressible positions (idx == 2^B - 1) return 0.0; patch them from
+    the exception table afterwards.
+    """
+    n = idx.shape[0]
+    marker = (1 << b_bits) - 1
+    k_padded = max(CHUNK, pl.cdiv(centers.shape[0], CHUNK) * CHUNK)
+    centers_p = jnp.pad(centers.astype(jnp.float32),
+                        (0, k_padded - centers.shape[0]))
+
+    rows = pl.cdiv(n, LANE)
+    rows_pad = pl.cdiv(rows, block_rows) * block_rows
+    pad = rows_pad * LANE - n
+    # Pad with the marker so padded lanes don't contribute NaNs.
+    idx2 = jnp.pad(idx, (0, pad), constant_values=marker).reshape(rows_pad,
+                                                                  LANE)
+    prev2 = jnp.pad(prev.astype(jnp.float32), (0, pad)).reshape(rows_pad,
+                                                                LANE)
+    grid = (rows_pad // block_rows,)
+    blk = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_kernel, k_padded=k_padded, marker=marker),
+        grid=grid,
+        in_specs=[blk, blk,
+                  pl.BlockSpec((k_padded,), lambda i: (0,))],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((rows_pad, LANE), jnp.float32),
+        interpret=interpret,
+    )(idx2, prev2, centers_p)
+    return out.reshape(-1)[:n]
+
+
+__all__ = ["dequantize"]

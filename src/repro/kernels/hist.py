@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: candidate-bin histogram (phase 2 counting pass).
+
+TPU adaptation: there is no atomic scatter-add on TPU; the histogram is
+computed as a **comparison + reduce** over codomain chunks.  Grid is
+(element_tiles, bin_chunks); each step counts the tile's hits inside one
+1024-bin chunk with a broadcast compare and accumulates into the output
+block (sequential TPU grid => safe read-modify-write revisiting).
+
+Invalid elements carry bin_id == -1 and never match a chunk lane.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 1024
+DEFAULT_BLOCK_ROWS = 64
+BIN_CHUNK = 1024
+
+
+def _kernel(id_ref, out_ref):
+    i = pl.program_id(0)        # element tile (major, sequential)
+    j = pl.program_id(1)        # bin chunk
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = id_ref[...].reshape(-1)
+    base = j * BIN_CHUNK
+    local = ids - base
+    onehot = (local[:, None] == jnp.arange(BIN_CHUNK,
+                                           dtype=jnp.int32)[None, :])
+    counts = jnp.sum(onehot.astype(jnp.int32), axis=0)
+    out_ref[...] += counts
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_bins", "block_rows", "interpret"))
+def histogram(bin_ids: jax.Array, *, max_bins: int,
+              block_rows: int = DEFAULT_BLOCK_ROWS,
+              interpret: bool = False):
+    """(n,) int32 in [-1, max_bins) -> (max_bins,) int32 counts."""
+    assert max_bins % BIN_CHUNK == 0, "max_bins must be a multiple of 1024"
+    n = bin_ids.shape[0]
+    rows = pl.cdiv(n, LANE)
+    rows_pad = pl.cdiv(rows, block_rows) * block_rows
+    ids2 = jnp.pad(bin_ids, (0, rows_pad * LANE - n),
+                   constant_values=-1).reshape(rows_pad, LANE)
+    grid = (rows_pad // block_rows, max_bins // BIN_CHUNK)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANE), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((BIN_CHUNK,), lambda i, j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((max_bins,), jnp.int32),
+        interpret=interpret,
+    )(ids2)
+    return out
+
+
+__all__ = ["histogram"]

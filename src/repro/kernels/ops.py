@@ -1,0 +1,50 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On TPU the compiled kernels run natively; everywhere else (this CPU
+container, unit tests) they execute in interpret mode, which runs the same
+kernel bodies element-faithfully.  `use_pallas=False` falls back to the
+pure-jnp oracles -- the distributed pipeline exposes this so the dry-run can
+compare both lowerings.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import bitpack, change_ratio, dequant, hist, ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def change_ratio_bins(prev, curr, domain_lo, width, *, max_bins,
+                      use_pallas: bool = True):
+    if not use_pallas:
+        return ref.change_ratio_bins_ref(prev, curr, domain_lo, width,
+                                         max_bins=max_bins)
+    return change_ratio.change_ratio_bins(prev, curr, domain_lo, width,
+                                          max_bins=max_bins,
+                                          interpret=_interpret())
+
+
+def pack_bits(idx, *, b_bits, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.pack_bits_ref(idx, b_bits=b_bits)
+    return bitpack.pack_bits(idx, b_bits=b_bits, interpret=_interpret())
+
+
+def dequantize(idx, prev, centers, *, b_bits, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.dequantize_ref(idx, prev, centers, b_bits=b_bits)
+    return dequant.dequantize(idx, prev, centers, b_bits=b_bits,
+                              interpret=_interpret())
+
+
+def histogram(bin_ids, *, max_bins, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.histogram_ref(bin_ids, max_bins=max_bins)
+    return hist.histogram(bin_ids, max_bins=max_bins,
+                          interpret=_interpret())
+
+
+__all__ = ["change_ratio_bins", "pack_bits", "dequantize", "histogram"]

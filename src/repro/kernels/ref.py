@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (assert_allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing, ratios
+
+
+def change_ratio_bins_ref(prev, curr, domain_lo, width, *, max_bins):
+    r, valid = ratios.change_ratios(prev, curr)
+    ids, _ = ratios.candidate_bin_ids(r, valid, jnp.float32(domain_lo),
+                                      jnp.float32(width), max_bins)
+    return r, ids
+
+
+def pack_bits_ref(idx, *, b_bits):
+    """uint32 words of the little-endian bitstream (n % 32 == 0).
+
+    Pure-jnp (jit/shard_map safe): bytes from core.packing's jnp path,
+    then 4 little-endian bytes -> one uint32 word.
+    """
+    byts = packing.pack_indices_jnp(jnp.asarray(idx), b_bits)
+    pad = (-byts.shape[0]) % 4
+    if pad:
+        byts = jnp.pad(byts, (0, pad))
+    quads = byts.reshape(-1, 4).astype(jnp.uint32)
+    return (quads[:, 0] | (quads[:, 1] << 8) | (quads[:, 2] << 16)
+            | (quads[:, 3] << 24))
+
+
+def dequantize_ref(idx, prev, centers, *, b_bits):
+    idx = jnp.asarray(idx)
+    marker = (1 << b_bits) - 1
+    centers = jnp.pad(jnp.asarray(centers, jnp.float32),
+                      (0, marker + 1 - centers.shape[0]))
+    comp = jnp.asarray(prev, jnp.float32) * (1.0 + centers[idx])
+    return jnp.where(idx == marker, 0.0, comp)
+
+
+def histogram_ref(bin_ids, *, max_bins):
+    ids = jnp.clip(jnp.asarray(bin_ids), 0, max_bins - 1)
+    ok = (jnp.asarray(bin_ids) >= 0).astype(jnp.int32)
+    return jnp.zeros((max_bins,), jnp.int32).at[ids].add(ok)
+
+
+__all__ = ["change_ratio_bins_ref", "pack_bits_ref", "dequantize_ref",
+           "histogram_ref"]

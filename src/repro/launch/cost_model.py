@@ -1,0 +1,223 @@
+"""Analytical FLOPs / bytes / collective model for the roofline table.
+
+WHY THIS EXISTS: XLA's `compiled.cost_analysis()` counts a while-loop body
+ONCE -- scan-over-layers models therefore under-report FLOPs/bytes by ~L
+(verified empirically: llama train_4k flops at L=2 vs L=4 differ by <1%).
+The dry-run records BOTH the raw HLO numbers (the prompt's convention) and
+the analytical totals below; dominant-term decisions in EXPERIMENTS.md use
+the analytical ones.  The model is validated against *fully unrolled*
+small-config HLO in tests/test_cost_model.py (flops within a few %).
+
+Conventions: dot(M,K)x(K,N) = 2MNK flops (XLA's convention); backward =
+2x forward; block-remat adds one extra forward recompute.  Bytes are a
+traffic model of this implementation (params + major activation tensors +
+cache reads), documented per term; they are estimates, not HLO ground
+truth.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.models.config import SHAPES, ModelConfig
+
+BF16 = 2
+F32 = 4
+
+
+@dataclass
+class CellCost:
+    flops_total: float           # whole step, all chips
+    bytes_total: float           # whole step, all chips (traffic model)
+    collective_total: float      # per-device collective bytes (corrected)
+
+    def per_device(self, chips: int):
+        return (self.flops_total / chips, self.bytes_total / chips)
+
+
+def _attn_flops(cfg: ModelConfig, D: float, ctx: float) -> float:
+    """One layer of attention for D query tokens against avg context ctx."""
+    d = cfg.d_model
+    if cfg.attn_kind == "mla":
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        f = 2 * D * d * cfg.q_lora_rank
+        f += 2 * D * cfg.q_lora_rank * cfg.n_heads * qk
+        f += 2 * D * d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+        f += 2 * D * cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_dim
+                                                       + cfg.v_head_dim)
+        f += 2 * D * ctx * cfg.n_heads * (qk + cfg.v_head_dim)
+        f += 2 * D * cfg.n_heads * cfg.v_head_dim * d
+        return f
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    f = 2 * D * d * (H + 2 * K) * hd            # qkv projections
+    f += 2 * D * ctx * H * hd * 2               # scores + pv
+    f += 2 * D * H * hd * d                     # output projection
+    return f
+
+
+def _mla_absorbed_decode_flops(cfg: ModelConfig, B: float, T: float):
+    d = cfg.d_model
+    r, rp = cfg.kv_lora_rank, cfg.qk_rope_dim
+    f = 2 * B * d * cfg.q_lora_rank
+    f += 2 * B * cfg.q_lora_rank * cfg.n_heads * (cfg.qk_nope_dim + rp)
+    f += 2 * B * d * (r + rp)
+    f += 2 * B * cfg.n_heads * cfg.qk_nope_dim * r        # q absorb
+    f += 2 * B * cfg.n_heads * T * (r + rp)               # scores
+    f += 2 * B * cfg.n_heads * T * r                      # o_lat
+    f += 2 * B * cfg.n_heads * r * cfg.v_head_dim         # expand out
+    f += 2 * B * cfg.n_heads * cfg.v_head_dim * d
+    return f
+
+
+def _ffn_flops(cfg: ModelConfig, D: float) -> float:
+    if not cfg.d_ff:
+        return 0.0
+    if cfg.n_experts:
+        # capacity-padded grouped matmuls do top_k * capacity_factor worth
+        # of work per token + the router
+        eff = cfg.moe_top_k * cfg.capacity_factor
+        return (6 * D * eff * cfg.d_model * cfg.d_ff
+                + 2 * D * cfg.d_model * cfg.n_experts)
+    return 6 * D * cfg.d_model * cfg.d_ff
+
+
+def _ssd_flops(cfg: ModelConfig, D: float, decode: bool) -> float:
+    if not cfg.ssm_state:
+        return 0.0
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    f = 2 * D * d * (2 * di + 2 * N + nh)       # in_proj
+    f += 2 * D * cfg.conv_width * (di + 2 * N)  # conv
+    f += 2 * D * di * d                          # out_proj
+    if decode:
+        f += 2 * D * nh * hd * N * 2             # h update + y readout
+        return f
+    Q = cfg.ssm_chunk
+    # intra-chunk: CB^T (Q x Q x N, head-shared) + two (Q,Q)x(Q,hd)-ish
+    # contractions per head; inter-chunk state ops are O(D*nh*hd*N)
+    f += 2 * D * Q * N                           # scores (shared)
+    f += 2 * D * Q * nh * hd                     # y_diag
+    f += 2 * D * N * nh * hd * 2                 # states + y_off
+    return f
+
+
+def flops_cell(cfg: ModelConfig, shape_name: str) -> float:
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    # ctx models the IMPLEMENTATION.  With block skipping (SS Perf
+    # iteration 4) causal attention visits ~(S + qb)/2 kv positions per
+    # query and SWA visits ~window + block slack; hymba's mixed-window
+    # train scan traces windows and cannot skip (full S), and prefix-LM
+    # (paligemma) keeps full tiles.  Decode context is bounded by the ring
+    # cache for SWA archs.
+    QB, KB = 512.0, 1024.0
+    skip = (cfg.family != "hybrid") and not cfg.n_prefix
+    if kind in ("train", "prefill"):
+        D = B * S
+        mult = (4.0 if cfg.remat == "block" else 3.0) \
+            if kind == "train" else 1.0
+        nqb = S / QB
+        if not skip:
+            ctx = float(S)
+        elif cfg.sliding_window and cfg.sliding_window < S:
+            # SWA band scan skips at any T
+            ctx = float(min(S, cfg.sliding_window + QB + KB))
+        elif nqb <= 8:
+            # causal python-unrolled skip (train_4k); clamp for S < QB
+            ctx = min((S + QB) / 2, float(S))
+        else:
+            # dense long prefill: rolled path, no causal skip
+            ctx = float(S)
+        if kind == "prefill" and cfg.family == "hybrid":
+            ctx = float(min(S, cfg.sliding_window + QB + KB)) \
+                if cfg.sliding_window else float(S)   # loop path skips
+    else:
+        D, ctx, mult = B, float(S), 1.0
+        if cfg.sliding_window:
+            ctx = float(min(S, cfg.sliding_window))
+
+    per_layer = 0.0
+    if cfg.family == "hybrid":
+        per_layer += _attn_flops(cfg, D, ctx)
+        per_layer += _ssd_flops(cfg, D, decode=(kind == "decode"))
+    elif cfg.n_heads:
+        if cfg.attn_kind == "mla" and kind == "decode":
+            per_layer += _mla_absorbed_decode_flops(cfg, D, ctx)
+        else:
+            per_layer += _attn_flops(cfg, D, ctx)
+    elif cfg.ssm_state:
+        per_layer += _ssd_flops(cfg, D, decode=(kind == "decode"))
+    per_layer += _ffn_flops(cfg, D)
+
+    logits = 2 * D * cfg.d_model * cfg.vocab_size
+    return (cfg.n_layers * per_layer + logits) * mult
+
+
+def bytes_cell(cfg: ModelConfig, shape_name: str) -> float:
+    """Traffic model: parameters + residual/attention/cache streams."""
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    D = B * S if kind != "decode" else B
+    P = cfg.param_count()
+    d = cfg.d_model
+
+    if kind == "train":
+        # params: fwd read + bwd read + grad write (bf16) + adam m/v r+w and
+        # master read/write (f32)
+        pbytes = P * (3 * BF16 + 6 * F32)
+        act_mult = 3.0 if cfg.remat != "block" else 2.0
+    else:
+        pbytes = P * BF16
+        act_mult = 1.0
+
+    # residual stream + a handful of layer-internal tensors
+    act = cfg.n_layers * D * d * BF16 * 8 * act_mult
+    # attention K/V stream: decode reads the whole cache; prefill/train
+    # re-reads K/V once per q-block (nqb ~ S/512)
+    cache = 0.0
+    if cfg.n_heads:
+        K = (cfg.n_kv_heads * cfg.head_dim if cfg.attn_kind != "mla"
+             else cfg.kv_lora_rank + cfg.qk_rope_dim)
+        ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        if kind == "decode":
+            cache = cfg.n_layers * B * ctx * K * BF16 * 2
+        else:
+            nqb = max(1, S // 512)
+            reread = min(nqb, 8)           # XLA keeps blocks resident-ish
+            cache = cfg.n_layers * B * ctx * K * BF16 * 2 * reread
+    if cfg.ssm_state and kind == "decode":
+        cache += cfg.n_layers * B * cfg.ssm_heads * cfg.ssm_head_dim \
+            * cfg.ssm_state * F32 * 2
+    logits = D * cfg.vocab_size * F32 * (2 if kind == "train" else 1)
+    return pbytes + act + cache + logits
+
+
+def collective_cell(cfg: ModelConfig, shape_name: str, chips: int,
+                    dp: int, tp: int) -> float:
+    """Per-device collective bytes (FSDP gathers + grad reduce + TP)."""
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    D = B * S if kind != "decode" else B
+    P = cfg.param_count()
+    if kind == "train":
+        # FSDP: all-gather params fwd + bwd (bf16), reduce-scatter grads
+        fsdp = P * BF16 * 2 / tp + P * BF16 / tp
+        # TP: activation all-reduces, ~2 per layer of the residual stream
+        tpc = 2 * cfg.n_layers * (D / dp) * cfg.d_model * BF16
+        return fsdp + tpc
+    # inference: params stay resident; TP all-reduces only
+    return 2 * cfg.n_layers * (max(D // dp, 1)) * cfg.d_model * BF16
+
+
+def cell_cost(cfg: ModelConfig, shape_name: str, chips: int = 256,
+              dp: int = 16, tp: int = 16) -> CellCost:
+    return CellCost(
+        flops_total=flops_cell(cfg, shape_name),
+        bytes_total=bytes_cell(cfg, shape_name),
+        collective_total=collective_cell(cfg, shape_name, chips, dp, tp))
+
+
+__all__ = ["cell_cost", "flops_cell", "bytes_cell", "collective_cell",
+           "CellCost"]

@@ -1,0 +1,34 @@
+"""Production mesh construction (TPU v5e pods; 256 chips/pod).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (smoke tests and benches must keep seeing the
+plain CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple:
+    """Batch/FSDP axes: ('pod','data') on the multi-pod mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_axis(mesh) -> str:
+    return "model"
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n
+
+
+__all__ = ["make_production_mesh", "dp_axes", "tp_axis", "mesh_chips"]

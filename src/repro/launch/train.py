@@ -1,0 +1,74 @@
+"""Training driver: --arch <id> end-to-end (data -> train loop -> NUMARCK
+checkpoints -> restart).
+
+On this CPU container use --smoke (reduced config); the full configs are
+exercised through launch/dryrun.py.  On a real fleet the same driver runs
+under jax.distributed with the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --steps 100 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import NumarckParams
+from repro.data.tokens import TokenPipeline
+from repro.models.model import build
+from repro.train import optim
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--ckpt-error-bound", type=float, default=1e-4)
+    ap.add_argument("--grad-compression-bits", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    model = build(args.arch, smoke=args.smoke)
+    if model.cfg.frontend:
+        raise SystemExit(f"{args.arch}: frontend archs train via "
+                         f"examples/train_restart.py sample batches")
+    print(f"arch={model.cfg.name} params~{model.cfg.param_count():,}")
+
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(
+            args.ckpt_dir,
+            params=NumarckParams(error_bound=args.ckpt_error_bound),
+            anchor_every=4, keep=3)
+    tcfg = TrainerConfig(
+        opt=optim.AdamWConfig(lr=args.lr, warmup_steps=10,
+                              decay_steps=args.steps),
+        checkpoint_every=args.ckpt_every if mgr else 0,
+        grad_compression_bits=args.grad_compression_bits)
+    trainer = Trainer(model, tcfg, checkpoint_manager=mgr)
+
+    state, start = trainer.restore_or_init(jax.random.PRNGKey(args.seed))
+    if start:
+        print(f"restored checkpoint at step {start}")
+    pipe = TokenPipeline(model.cfg.vocab_size, args.seq + 1, args.batch,
+                         seed=args.seed)
+    state, step, hist = trainer.fit(state, pipe.from_step(start),
+                                    start_step=start, n_steps=args.steps)
+    print(f"done at step {step}; loss {hist[0]:.4f} -> {hist[-1]:.4f}; "
+          f"straggler events: {trainer.straggler_events}")
+    if mgr:
+        mgr.save(step, state.tree())
+        print("final checkpoint saved")
+
+
+if __name__ == "__main__":
+    main()

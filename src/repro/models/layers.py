@@ -1,0 +1,587 @@
+"""Transformer building blocks: norms, RoPE, GQA/SWA/MLA attention, MoE.
+
+Functional style: every block is (init(key, cfg) -> params-dict,
+apply(params, x, ...) -> y).  Parameters are float32 masters; forward casts
+to cfg.dtype (bf16 on TPU).  Softmax and norms accumulate in f32.
+
+Decode caches:
+  * full attention -- (B, S_max, K, hd) written at `pos`
+  * sliding window -- ring buffer of W slots + `pos_map` of absolute
+    positions (mask derives validity; RoPE is applied pre-cache at absolute
+    positions, so ring rotation is transparent)
+  * MLA -- compressed latent (B, S, kv_lora) + shared roped key (B, S, r)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from functools import partial as functools_partial
+
+from repro.models.config import ModelConfig
+from repro.models.unroll import scan_unroll
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _dense_init(key, shape, scale=None):
+    import math
+    fan_in = shape[0] if len(shape) <= 2 else math.prod(shape[:-1])
+    scale = scale if scale is not None else fan_in ** -0.5
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p, x, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (half-split / llama style)
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions, dim, theta):
+    """positions (T,) int32 -> cos/sin (T, dim/2) f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., T, H, dim); cos/sin (T, dim/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, :, None, :].astype(x.dtype)
+    s = sin[None, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def causal_mask(q_pos, kv_pos, window=0, prefix: int = 0,
+                has_window: bool = False):
+    """(Tq, Tk) bool: True = attend.
+
+    `window` may be a *traced* scalar (hymba mixes SWA and global layers in
+    one scan); `has_window` statically marks whether banding can occur at
+    all.  window == 0 means full causal.  prefix > 0 makes the first
+    `prefix` kv positions visible to everyone (prefix-LM).
+    """
+    m = kv_pos[None, :] <= q_pos[:, None]
+    if has_window:
+        window = jnp.asarray(window)
+        band = kv_pos[None, :] > (q_pos[:, None] - window)
+        m &= (window == 0) | band
+    if prefix:
+        m |= (kv_pos[None, :] < prefix)
+    return m
+
+
+def chunked_sdpa(q, k, v, *, q_pos, kv_pos, window=0, prefix=0,
+                 has_window=False, n_rep=1, q_block=512, kv_block=1024,
+                 block_skip=False):
+    """Blockwise online-softmax attention (flash-style, pure JAX).
+
+    Never materializes the (T, S) score matrix: lax.scan over query blocks,
+    inner lax.scan over kv blocks carrying (m, l, acc) running statistics.
+    This is what makes the 32k/500k shapes lowerable -- see DESIGN.md.
+
+    block_skip (SS Perf iteration): when q/kv positions are the aligned
+    0..T-1 training/prefill layout and `window` is static, the q loop
+    unrolls in python and each query block only visits kv blocks inside
+    its causal (and SWA) band -- cutting attention FLOPs ~2x for causal
+    and ~S/window for long SWA prefill.  Skipped for traced windows
+    (hymba's mixed-layer scan) and for prefix-LM.
+
+    q (B,T,H,hd), k (B,S,K,hd), v (B,S,K,hdv); H = K * n_rep.
+    Returns (B,T,H,hdv).  hdv may differ from hd (MLA).
+    """
+    B, T, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    qb = min(q_block, T)
+    kb = min(kv_block, S)
+    Tp, Sp = -(-T // qb) * qb, -(-S // kb) * kb
+    BIG = jnp.int32(1 << 30)
+
+    q = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    q_pos = jnp.pad(q_pos, (0, Tp - T), constant_values=-2)   # masked rows
+    kv_pos = jnp.pad(kv_pos, (0, Sp - S), constant_values=BIG)
+
+    q = q.reshape(B, Tp // qb, qb, K, n_rep, hd)
+    qs = jnp.moveaxis(q, 1, 0)                  # (nqb, B, qb, K, R, hd)
+    ks = jnp.moveaxis(k.reshape(B, Sp // kb, kb, K, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, Sp // kb, kb, K, hdv), 1, 0)
+    qps = q_pos.reshape(Tp // qb, qb)
+    kps = kv_pos.reshape(Sp // kb, kb)
+    scale = hd ** -0.5
+
+    def kv_step(qblk, qp, carry, kv_in):
+        m, l, acc = carry
+        kblk, vblk, kp = kv_in
+        s = jnp.einsum("bqkrh,bskh->bkrqs", qblk, kblk) * scale
+        s = s.astype(jnp.float32)
+        msk = causal_mask(qp, kp, window, prefix, has_window)
+        s = jnp.where(msk[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_new = jnp.maximum(m_new, -1e30)        # keep finite
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkrqs,bskh->bkrqh", p.astype(vblk.dtype), vblk)
+        acc = acc * corr[..., None] + pv.astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    def init_carry():
+        return (jnp.full((B, K, n_rep, qb), -1e30, jnp.float32),
+                jnp.zeros((B, K, n_rep, qb), jnp.float32),
+                jnp.zeros((B, K, n_rep, qb, hdv), jnp.float32))
+
+    nqb = Tp // qb
+    static_w = isinstance(window, (int,))
+    skip_ok = block_skip and static_w and prefix == 0 and T == S
+    if skip_ok and window and window < S:
+        # SWA: rolled q scan; every q block reads a FIXED-size kv band via
+        # dynamic_slice (band blocks = (window+qb)/kb + 1), so HLO stays
+        # compact at any T (the unrolled variant exploded compile time on
+        # hymba prefill_32k -- see EXPERIMENTS.md SS Perf)
+        nb_band = min(Sp // kb, (window + qb) // kb + 1)
+
+        def q_step_band(_, q_in):
+            qblk, qp, qi = q_in
+            lo_pos = jnp.maximum(qi * qb - window, 0)
+            b0 = jnp.clip(lo_pos // kb, 0, Sp // kb - nb_band)
+            ks_b = jax.lax.dynamic_slice_in_dim(ks, b0, nb_band, 0)
+            vs_b = jax.lax.dynamic_slice_in_dim(vs, b0, nb_band, 0)
+            kps_b = jax.lax.dynamic_slice_in_dim(kps, b0, nb_band, 0)
+            (m, l, acc), _ = jax.lax.scan(
+                functools_partial(kv_step, qblk, qp), init_carry(),
+                (ks_b, vs_b, kps_b), unroll=scan_unroll())
+            out = acc / jnp.where(l == 0, 1.0, l)[..., None]
+            return None, out.astype(qblk.dtype)
+
+        _, outs = jax.lax.scan(
+            q_step_band, None,
+            (qs, qps, jnp.arange(nqb, dtype=jnp.int32)),
+            unroll=scan_unroll())
+    elif skip_ok and not window and nqb <= 8:
+        # causal: python q loop, each block scans its causal kv prefix
+        # (bounded unroll keeps HLO small; covers train_4k)
+        outs = []
+        for qi in range(nqb):
+            q_hi = (qi + 1) * qb                 # causal end (exclusive)
+            b1 = min(Sp // kb, -(-q_hi // kb))   # ceil
+            (m, l, acc), _ = jax.lax.scan(
+                functools_partial(kv_step, qs[qi], qps[qi]), init_carry(),
+                (ks[:b1], vs[:b1], kps[:b1]),
+                unroll=scan_unroll())
+            out_i = acc / jnp.where(l == 0, 1.0, l)[..., None]
+            outs.append(out_i.astype(q.dtype))
+        outs = jnp.stack(outs)                   # (nqb, B, K, R, qb, hdv)
+    else:
+        def q_step(_, q_in):
+            qblk, qp = q_in                      # (B,qb,K,R,hd), (qb,)
+            (m, l, acc), _ = jax.lax.scan(
+                functools_partial(kv_step, qblk, qp), init_carry(),
+                (ks, vs, kps), unroll=scan_unroll())
+            out = acc / jnp.where(l == 0, 1.0, l)[..., None]
+            return None, out.astype(qblk.dtype)  # (B,K,R,qb,hdv)
+
+        _, outs = jax.lax.scan(q_step, None, (qs, qps),
+                               unroll=scan_unroll())
+    out = jnp.moveaxis(outs, 0, 1)               # (B,nqb,K,R,qb,hdv)
+    out = jnp.moveaxis(out, 4, 2)                # (B,nqb,qb,K,R,hdv)
+    out = out.reshape(B, Tp, H, hdv)[:, :T]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (covers MHA kv=H and MQA kv=1)
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig):
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, H, hd)),
+        "wk": _dense_init(ks[1], (d, K, hd)),
+        "wv": _dense_init(ks[2], (d, K, hd)),
+        "wo": _dense_init(ks[3], (H, hd, d), scale=(H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), jnp.float32)
+        p["bk"] = jnp.zeros((K, hd), jnp.float32)
+        p["bv"] = jnp.zeros((K, hd), jnp.float32)
+    return p
+
+
+def _sdpa(q, k, v, mask, n_rep):
+    """q (B,T,H,hd), k (B,S,K,hd), v (B,S,K,hdv); mask (T,S)/(B,T,S) bool.
+    hdv may differ from hd (MLA)."""
+    B, T, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    q = q.reshape(B, T, K, n_rep, hd)
+    scores = jnp.einsum("btkrh,bskh->bkrts", q, k) / (hd ** 0.5)
+    scores = scores.astype(jnp.float32)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrts,bskh->btkrh", w, v)
+    return out.reshape(B, T, H, hdv)
+
+
+def gqa_apply(p, x, *, cfg: ModelConfig, positions, window=0,
+              prefix: int = 0, has_window: bool = False):
+    """Training / prefill path.  x (B,T,d); positions (T,) absolute.
+    `window` may be traced (hymba); `has_window` marks SWA statically."""
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dgk->btgk", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dgk->btgk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    out = chunked_sdpa(q, k, v, q_pos=positions, kv_pos=positions,
+                       window=window, prefix=prefix, has_window=has_window,
+                       n_rep=H // K, block_skip=True)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(dt)), (k, v)
+
+
+def gqa_decode(p, x, cache, *, cfg: ModelConfig, pos, window: int,
+               prefix: int = 0):
+    """One-token decode.  x (B,1,d); cache dict(k,v,(S,K,hd broadcast over B)
+    pos_map (S,)); pos scalar int32 absolute position."""
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dgk->btgk", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dgk->btgk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    cos, sin = rope_tables(pos[None], hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    S = cache["k"].shape[1]
+    slot = jnp.where(window > 0, pos % S, pos)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k,
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v,
+                                      (0, slot, 0, 0))
+    pos_map = jax.lax.dynamic_update_slice(cache["pos_map"], pos[None],
+                                           (slot,))
+    occupied = (pos_map >= 0) & (pos_map <= pos)
+    valid = occupied
+    if window:
+        valid &= (pos_map > pos - window) | (pos_map < prefix)
+    elif prefix:
+        valid |= occupied & (pos_map < prefix)
+    out = _sdpa(q, ck, cv, valid[None, None, :], H // K)
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(dt))
+    return y, {"k": ck, "v": cv, "pos_map": pos_map}
+
+
+def gqa_empty_cache(cfg: ModelConfig, batch, s_max, window: int, dtype):
+    S = min(window, s_max) if window else s_max
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, S, K, hd), dtype),
+        "v": jnp.zeros((batch, S, K, hd), dtype),
+        "pos_map": jnp.full((S,), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (minicpm3 / deepseek-v2 style multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": _dense_init(ks[0], (d, cfg.q_lora_rank)),
+        "q_norm": rms_norm_init(cfg.q_lora_rank),
+        "wq_b": _dense_init(ks[1], (cfg.q_lora_rank, H, qk)),
+        "wkv_a": _dense_init(ks[2],
+                             (d, cfg.kv_lora_rank + cfg.qk_rope_dim)),
+        "kv_norm": rms_norm_init(cfg.kv_lora_rank),
+        "wk_b": _dense_init(ks[3], (cfg.kv_lora_rank, H, cfg.qk_nope_dim)),
+        "wv_b": _dense_init(ks[4], (cfg.kv_lora_rank, H, cfg.v_head_dim)),
+        "wo": _dense_init(ks[5], (H, cfg.v_head_dim, d),
+                          scale=(H * cfg.v_head_dim) ** -0.5),
+    }
+
+
+def _mla_latents(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    kv_a = jnp.einsum("btd,de->bte", x, p["wkv_a"].astype(dt))
+    c_kv = rms_norm(p["kv_norm"], kv_a[..., : cfg.kv_lora_rank],
+                    cfg.norm_eps)
+    k_rope = kv_a[..., cfg.kv_lora_rank:]
+    return c_kv, k_rope
+
+
+def _mla_q(p, x, cfg: ModelConfig, positions):
+    dt = x.dtype
+    q_a = rms_norm(p["q_norm"],
+                   jnp.einsum("btd,de->bte", x, p["wq_a"].astype(dt)),
+                   cfg.norm_eps)
+    q = jnp.einsum("bte,ehk->bthk", q_a, p["wq_b"].astype(dt))
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = q[..., cfg.qk_nope_dim:]
+    cos, sin = rope_tables(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _mla_expand_kv(p, c_kv, k_rope_roped, cfg: ModelConfig):
+    dt = c_kv.dtype
+    k_nope = jnp.einsum("bte,ehk->bthk", c_kv, p["wk_b"].astype(dt))
+    v = jnp.einsum("bte,ehk->bthk", c_kv, p["wv_b"].astype(dt))
+    H = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope_roped[:, :, None, :],
+                                k_nope.shape[:3] + (cfg.qk_rope_dim,))
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    return k, v
+
+
+def mla_apply(p, x, *, cfg: ModelConfig, positions, prefix: int = 0):
+    c_kv, k_rope = _mla_latents(p, x, cfg)
+    cos, sin = rope_tables(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    q = _mla_q(p, x, cfg, positions)
+    k, v = _mla_expand_kv(p, c_kv, k_rope, cfg)
+    out = chunked_sdpa(q, k, v, q_pos=positions, kv_pos=positions,
+                       prefix=prefix, n_rep=1, block_skip=True)
+    dt = x.dtype
+    return (jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(dt)),
+            (c_kv, k_rope))
+
+
+def mla_decode(p, x, cache, *, cfg: ModelConfig, pos):
+    """Absorbed-form MLA decode: attention runs in the compressed latent
+    space, never expanding per-head K/V over the cache.
+
+        q_abs = q_nope . W_kb          (B,1,H,rank)
+        s     = q_abs . ckv^T + q_rope . krope^T
+        o_lat = softmax(s) . ckv       (B,1,H,rank)
+        o     = o_lat . W_vb           (B,1,H,v_dim)
+
+    Memory is O(B*S*rank) instead of O(B*S*H*(qk+v)) -- the naive form
+    peaks >16 GB/chip on decode_32k (see EXPERIMENTS.md SS Perf iteration).
+    """
+    dt = x.dtype
+    c_kv_new, k_rope_new = _mla_latents(p, x, cfg)
+    cos, sin = rope_tables(pos[None], cfg.qk_rope_dim, cfg.rope_theta)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], cos, sin)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_kv_new, (0, pos, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"], k_rope_new,
+                                         (0, pos, 0))
+    pos_map = jax.lax.dynamic_update_slice(cache["pos_map"], pos[None],
+                                           (pos,))
+    q = _mla_q(p, x, cfg, pos[None])
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = q[..., cfg.qk_nope_dim:]
+
+    q_abs = jnp.einsum("bthn,rhn->bthr", q_nope, p["wk_b"].astype(dt))
+    s = (jnp.einsum("bthr,bsr->bhts", q_abs, ckv)
+         + jnp.einsum("bthd,bsd->bhts", q_rope, krope))
+    s = s.astype(jnp.float32) * ((cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5)
+    valid = (pos_map >= 0) & (pos_map <= pos)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(dt)
+    o_lat = jnp.einsum("bhts,bsr->bthr", w, ckv)
+    out = jnp.einsum("bthr,rhv->bthv", o_lat, p["wv_b"].astype(dt))
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(dt))
+    return y, {"ckv": ckv, "krope": krope, "pos_map": pos_map}
+
+
+def mla_decode_naive(p, x, cache, *, cfg: ModelConfig, pos):
+    """Reference (expanded) MLA decode -- kept as the test oracle for the
+    absorbed form and as the paper-faithful-style baseline in SS Perf."""
+    dt = x.dtype
+    c_kv_new, k_rope_new = _mla_latents(p, x, cfg)
+    cos, sin = rope_tables(pos[None], cfg.qk_rope_dim, cfg.rope_theta)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], cos, sin)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_kv_new, (0, pos, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"], k_rope_new,
+                                         (0, pos, 0))
+    pos_map = jax.lax.dynamic_update_slice(cache["pos_map"], pos[None],
+                                           (pos,))
+    q = _mla_q(p, x, cfg, pos[None])
+    k, v = _mla_expand_kv(p, ckv, krope, cfg)
+    valid = (pos_map >= 0) & (pos_map <= pos)
+    out = _sdpa(q, k, v, valid[None, None, :], 1)
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(dt))
+    return y, {"ckv": ckv, "krope": krope, "pos_map": pos_map}
+
+
+def mla_empty_cache(cfg: ModelConfig, batch, s_max, dtype):
+    return {
+        "ckv": jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, s_max, cfg.qk_rope_dim), dtype),
+        "pos_map": jnp.full((s_max,), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(ks[0], (d, f)),
+        "w_up": _dense_init(ks[1], (d, f)),
+        "w_down": _dense_init(ks[2], (f, d)),
+    }
+
+
+def ffn_apply(p, x):
+    dt = x.dtype
+    g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("btd,df->btf", x, p["w_up"].astype(dt))
+    return jnp.einsum("btf,fd->btd", jax.nn.silu(g) * u,
+                      p["w_down"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN (top-k routing, grouped capacity dispatch; Switch-style groups)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s = cfg.moe_ep_split
+    assert f % s == 0, "d_ff must divide moe_ep_split"
+    ks = jax.random.split(key, 4)
+    # weights stored slot-wise: slot (e*s + j) holds expert e's j-th FFN
+    # slice -- exact for SwiGLU (gate/up split along ff columns, down along
+    # ff rows; outputs of the slices sum)
+    return {
+        "router": _dense_init(ks[0], (d, E)),
+        "we_gate": _dense_init(ks[1], (E * s, d, f // s)),
+        "we_up": _dense_init(ks[2], (E * s, d, f // s)),
+        "we_down": _dense_init(ks[3], (E * s, f // s, d)),
+    }
+
+
+def moe_apply(p, x, *, cfg: ModelConfig):
+    """x (B, T, d).  Each sequence is a dispatch group (Switch-style), so
+    routing stays local to the data shard; capacity drops overflow tokens.
+
+    With moe_ep_split = s > 1 every chosen expert fans out to its s slots
+    (the slot outputs sum); capacity per slot stays T*k*cf/E.
+    """
+    B, T, d = x.shape
+    E, k, s = cfg.n_experts, cfg.moe_top_k, cfg.moe_ep_split
+    ES, ks_ = E * s, k * s
+    cap = max(1, int(T * k * cfg.capacity_factor / E))
+    dt = x.dtype
+
+    logits = jnp.einsum("btd,de->bte", x, p["router"].astype(dt))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)               # (B, T, k)
+    top_p = (top_p / jnp.sum(top_p, -1, keepdims=True)).astype(dt)
+
+    # expand expert choices to slot choices
+    slot_e = (top_e[..., None] * s
+              + jnp.arange(s, dtype=top_e.dtype)).reshape(B, T, ks_)
+    slot_p = jnp.repeat(top_p, s, axis=-1)               # weight per slot
+
+    # position of each (token, choice) inside its slot's capacity buffer
+    onehot = jax.nn.one_hot(slot_e, ES, dtype=jnp.int32)  # (B, T, ks, ES)
+    flat = onehot.reshape(B, T * ks_, ES)
+    pos_in_e = jnp.cumsum(flat, axis=1) - 1
+    pos = jnp.take_along_axis(
+        pos_in_e.reshape(B, T, ks_, ES),
+        slot_e[..., None], axis=-1)[..., 0]              # (B, T, ks)
+    keep = pos < cap
+
+    def dispatch_one(xb, eb, pb, kb):
+        # xb (T,d) -> slot buffers (ES, cap, d)
+        buf = jnp.zeros((ES, cap, d), dt)
+        e_flat = eb.reshape(-1)
+        p_flat = jnp.where(kb.reshape(-1), pb.reshape(-1), cap)  # drop
+        xk = jnp.repeat(xb, ks_, axis=0)
+        return buf.at[e_flat, p_flat].set(xk, mode="drop")
+
+    from repro.distributed import sharding as shd
+    buf = jax.vmap(dispatch_one)(x, slot_e, pos, keep)   # (B, ES, cap, d)
+    # expert-parallel dispatch: buf's slot dim follows the expert-weight
+    # sharding (EP when ES >= 16), turning the would-be FSDP weight
+    # gathers into a token all_to_all (SS Perf, mixtral iteration)
+    ep = ES >= 16
+    if ep:
+        buf = shd.constrain(buf, "dp", "tp", None, None)
+    g = jnp.einsum("becd,edf->becf", buf, p["we_gate"].astype(dt))
+    u = jnp.einsum("becd,edf->becf", buf, p["we_up"].astype(dt))
+    h = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u,
+                   p["we_down"].astype(dt))               # (B, ES, cap, d)
+    if ep:
+        # SS Perf iteration 3 (EXPERIMENTS.md): an E-sharded h makes GSPMD
+        # lower the combine-gather as an all-reduce of the FULL
+        # (B, T*ks, d) token tensor in f32 (~8.6 GB/layer); explicitly
+        # all-gathering the capacity-bounded bf16 buffers instead is ~6x
+        # less traffic, and the gather+weighted-sum below becomes local.
+        h = shd.constrain(h, "dp", None, None, None)
+
+    def combine_one(hb, eb, pb, kb, wb):
+        e_flat = eb.reshape(-1)
+        p_flat = jnp.clip(pb.reshape(-1), 0, cap - 1)
+        got = hb[e_flat, p_flat]                          # (T*ks, d)
+        got = got * (wb.reshape(-1)[:, None]
+                     * kb.reshape(-1)[:, None].astype(dt))
+        return got.reshape(T, ks_, d).sum(axis=1)
+
+    out = jax.vmap(combine_one)(h, slot_e, pos, keep, slot_p)
+    aux = _load_balance_loss(probs, jax.nn.one_hot(top_e, E,
+                                                   dtype=jnp.int32), E)
+    return out, aux
+
+
+def _load_balance_loss(probs, onehot, E):
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e."""
+    f = jnp.mean(onehot.astype(jnp.float32).sum(2), axis=(0, 1))  # (E,)
+    pmean = jnp.mean(probs, axis=(0, 1))
+    return E * jnp.sum(f * pmean)
+
+
+__all__ = [
+    "cdtype", "rms_norm_init", "rms_norm", "rope_tables", "apply_rope",
+    "causal_mask", "gqa_init", "gqa_apply", "gqa_decode", "gqa_empty_cache",
+    "mla_init", "mla_apply", "mla_decode", "mla_empty_cache",
+    "ffn_init", "ffn_apply", "moe_init", "moe_apply",
+]

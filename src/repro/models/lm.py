@@ -1,0 +1,466 @@
+"""Decoder-only LM assembly for all 10 assigned architectures.
+
+One homogeneous `layer` definition per config covers dense / MoE / SSM /
+hybrid; layers are *stacked* (leading L axis) and applied with
+lax.scan-over-layers (compact HLO, the production pattern).  Hymba's decode
+path unrolls a python loop instead because its per-layer caches are
+heterogeneous (3 global-attention layers hold full-length KV; SWA layers
+hold ring buffers).
+
+Frontends ([vlm]/[audio]) are stubs per the assignment: the model consumes
+precomputed patch/frame embeddings through `extra_embeds`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models.unroll import scan_unroll
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    if cfg.n_heads:
+        p["ln_attn"] = L.rms_norm_init(d)
+        p["attn"] = (L.mla_init(ks[0], cfg) if cfg.attn_kind == "mla"
+                     else L.gqa_init(ks[0], cfg))
+    if cfg.ssm_state:
+        if not cfg.n_heads:
+            p["ln_ssm"] = L.rms_norm_init(d)
+        p["ssm"] = S.ssd_init(ks[1], cfg)
+        if cfg.family == "hybrid":
+            p["ln_attn_out"] = L.rms_norm_init(d)
+            p["ln_ssm_out"] = L.rms_norm_init(d)
+    if cfg.d_ff:
+        p["ln_mlp"] = L.rms_norm_init(d)
+        p["mlp"] = (L.moe_init(ks[2], cfg) if cfg.n_experts
+                    else L.ffn_init(ks[2], cfg))
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    ke, kl, ko = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": jax.random.normal(ke, (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "ln_f": L.rms_norm_init(cfg.d_model),
+        "layers": stacked,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = jax.random.normal(
+            ko, (cfg.d_model, cfg.vocab_size),
+            jnp.float32) * cfg.d_model ** -0.5
+    # SS Perf iteration (EXPERIMENTS.md): store weight matrices in the
+    # compute dtype (bf16 on the full configs).  Adam moments stay f32
+    # (optim.init_state), so this is the standard bf16-weights +
+    # f32-optimizer-state recipe; it halves every FSDP all-gather and
+    # gradient reduce-scatter on the wire.  Norm scales stay f32.
+    dt = jnp.dtype(cfg.dtype)
+    if dt != jnp.float32:
+        def cast(path, x):
+            name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+            if name == "scale" or x.ndim == 0:
+                return x
+            return x.astype(dt)
+        params = jax.tree_util.tree_map_with_path(cast, params)
+    return params
+
+
+def layer_flags(cfg: ModelConfig):
+    """(L,) int32 per-layer attention window (0 = global).
+
+    numpy (host-side) so values stay concrete under jit; scan converts to a
+    device constant when used as xs.
+    """
+    import numpy as np
+    if not cfg.sliding_window:
+        return np.zeros((cfg.n_layers,), np.int32)
+    w = np.full((cfg.n_layers,), cfg.sliding_window, np.int32)
+    for g in cfg.global_attn_layers:
+        w[g] = 0
+    return w
+
+
+# ---------------------------------------------------------------------------
+# one layer, training/prefill form
+# ---------------------------------------------------------------------------
+
+def layer_apply(p, x, *, cfg: ModelConfig, positions, window, prefix,
+                valid_len=None):
+    """x (B,T,d) -> (x', aux_loss).  `window` may be traced (scan xs).
+
+    Block outputs are tagged with checkpoint_name so the block-remat
+    policy can SAVE them: the backward pass then re-runs the block-local
+    math but never re-runs the TP all-reduces that produced a_out/m_out
+    (SS Perf iteration: collective term of remat'd training steps).
+    """
+    from jax.ad_checkpoint import checkpoint_name
+    aux = jnp.float32(0.0)
+    has_window = bool(cfg.sliding_window)
+    if cfg.family == "hybrid":
+        h = L.rms_norm(p["ln_attn"], x, cfg.norm_eps)
+        a_out, _ = L.gqa_apply(p["attn"], h, cfg=cfg, positions=positions,
+                               window=window, prefix=prefix,
+                               has_window=has_window)
+        s_out, _ = S.ssd_apply(p["ssm"], h, cfg=cfg, valid_len=valid_len)
+        a_out = L.rms_norm(p["ln_attn_out"], a_out, cfg.norm_eps)
+        s_out = L.rms_norm(p["ln_ssm_out"], s_out, cfg.norm_eps)
+        x = x + checkpoint_name(0.5 * (a_out + s_out), "block_out")
+    elif cfg.n_heads:
+        h = L.rms_norm(p["ln_attn"], x, cfg.norm_eps)
+        if cfg.attn_kind == "mla":
+            a_out, _ = L.mla_apply(p["attn"], h, cfg=cfg,
+                                   positions=positions, prefix=prefix)
+        else:
+            a_out, _ = L.gqa_apply(p["attn"], h, cfg=cfg,
+                                   positions=positions, window=window,
+                                   prefix=prefix, has_window=has_window)
+        x = x + checkpoint_name(a_out, "block_out")
+    elif cfg.ssm_state:
+        h = L.rms_norm(p["ln_ssm"], x, cfg.norm_eps)
+        s_out, _ = S.ssd_apply(p["ssm"], h, cfg=cfg, valid_len=valid_len)
+        x = x + checkpoint_name(s_out, "block_out")
+    if cfg.d_ff:
+        h = L.rms_norm(p["ln_mlp"], x, cfg.norm_eps)
+        if cfg.n_experts:
+            m_out, aux = L.moe_apply(p["mlp"], h, cfg=cfg)
+        else:
+            m_out = L.ffn_apply(p["mlp"], h)
+        x = x + checkpoint_name(m_out, "block_out")
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# backbone forward (train / prefill logits)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ModelConfig, tokens=None, extra_embeds=None):
+    """Token embeddings, optionally prefixed with frontend embeddings."""
+    dt = L.cdtype(cfg)
+    parts = []
+    if extra_embeds is not None:
+        parts.append(extra_embeds.astype(dt))
+    if tokens is not None:
+        parts.append(params["embed"].astype(dt)[tokens])
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    return x * jnp.asarray(cfg.d_model ** 0.5, dt) if cfg.family == "vlm" \
+        else x
+
+
+def forward(params, cfg: ModelConfig, tokens=None, extra_embeds=None,
+            valid_len=None):
+    """-> (logits (B,T,V) f32, aux_loss)."""
+    x = embed_inputs(params, cfg, tokens, extra_embeds)
+    B, T, _ = x.shape
+    positions = jnp.arange(T, dtype=jnp.int32)
+    prefix = cfg.n_prefix
+    windows = layer_flags(cfg)
+    import numpy as _np
+    # uniform windows stay STATIC so chunked_sdpa can block-skip
+    # (SS Perf iteration); mixed SWA/global (hymba) must trace them
+    uniform_w = (int(windows[0]) if _np.unique(windows).size == 1
+                 else None)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, w = xs
+        if uniform_w is not None:
+            w = uniform_w
+        # residual stream: batch over dp; sequence over tp when shard_seq
+        # (Megatron-style sequence parallelism -- bounds remat memory)
+        x = shd.constrain(x, "dp", "seq", None)
+        fn = functools.partial(layer_apply, cfg=cfg, positions=positions,
+                               prefix=prefix, valid_len=valid_len)
+        if cfg.remat == "block":
+            # save the post-collective block outputs: backward recomputes
+            # block-local math but not the TP all-reduces (SS Perf)
+            fn = jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.save_only_these_names(
+                    "block_out"))
+        x, a = fn(lp, x, window=w)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                               (params["layers"], windows),
+                               unroll=scan_unroll())
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params, cfg, x)
+    return logits, aux
+
+
+def unembed(params, cfg: ModelConfig, x):
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["unembed"]).astype(x.dtype)
+    return jnp.einsum("btd,dv->btv", x, w).astype(jnp.float32)
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    """Cross-entropy over next-token labels; labels == -100 are masked."""
+    logits, aux = forward(params, cfg,
+                          tokens=batch.get("tokens"),
+                          extra_embeds=batch.get("embeds"))
+    logits = shd.constrain(logits, "dp", None, "tp")   # vocab-sharded CE
+    labels = batch["labels"]
+    # frontend prefix produces positions without labels
+    T_lab = labels.shape[1]
+    logits = logits[:, -T_lab:]
+    mask = labels != -100
+    labels_safe = jnp.where(mask, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return loss + 0.01 * aux / max(cfg.n_layers, 1), {
+        "loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _attn_cache_spec(cfg: ModelConfig, window: int, batch, s_max, dtype):
+    if cfg.attn_kind == "mla":
+        return L.mla_empty_cache(cfg, batch, s_max, dtype)
+    return L.gqa_empty_cache(cfg, batch, s_max, window, dtype)
+
+
+def empty_cache(cfg: ModelConfig, batch, s_max, stacked: bool = True):
+    """Decode cache pytree.  stacked=True -> leading L axis (scan archs)."""
+    dt = L.cdtype(cfg)
+    windows = [int(w) for w in layer_flags(cfg)]
+
+    def one(layer_idx):
+        c = {}
+        if cfg.n_heads:
+            c["attn"] = _attn_cache_spec(cfg, windows[layer_idx], batch,
+                                         s_max, dt)
+        if cfg.ssm_state:
+            c["ssm"] = S.ssd_empty_cache(cfg, batch, dt)
+        return c
+
+    if stacked:
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[one(i) for i in range(cfg.n_layers)])
+    return [one(i) for i in range(cfg.n_layers)]
+
+
+def uses_layer_loop(cfg: ModelConfig) -> bool:
+    """Heterogeneous caches (mixed SWA/global) -> python-loop decode."""
+    return bool(cfg.global_attn_layers)
+
+
+def layer_decode(p, x, cache, *, cfg: ModelConfig, pos, window: int,
+                 prefix: int = 0):
+    """One layer, one token.  cache: {attn?, ssm?} for this layer."""
+    new_cache = dict(cache)
+    if cfg.family == "hybrid":
+        h = L.rms_norm(p["ln_attn"], x, cfg.norm_eps)
+        a_out, new_cache["attn"] = L.gqa_decode(
+            p["attn"], h, cache["attn"], cfg=cfg, pos=pos, window=window,
+            prefix=prefix)
+        s_out, new_cache["ssm"] = S.ssd_decode(p["ssm"], h, cache["ssm"],
+                                               cfg=cfg)
+        a_out = L.rms_norm(p["ln_attn_out"], a_out, cfg.norm_eps)
+        s_out = L.rms_norm(p["ln_ssm_out"], s_out, cfg.norm_eps)
+        x = x + 0.5 * (a_out + s_out)
+    elif cfg.n_heads:
+        h = L.rms_norm(p["ln_attn"], x, cfg.norm_eps)
+        if cfg.attn_kind == "mla":
+            a_out, new_cache["attn"] = L.mla_decode(
+                p["attn"], h, cache["attn"], cfg=cfg, pos=pos)
+        else:
+            a_out, new_cache["attn"] = L.gqa_decode(
+                p["attn"], h, cache["attn"], cfg=cfg, pos=pos,
+                window=window, prefix=prefix)
+        x = x + a_out
+    elif cfg.ssm_state:
+        h = L.rms_norm(p["ln_ssm"], x, cfg.norm_eps)
+        s_out, new_cache["ssm"] = S.ssd_decode(p["ssm"], h, cache["ssm"],
+                                               cfg=cfg)
+        x = x + s_out
+    if cfg.d_ff:
+        h = L.rms_norm(p["ln_mlp"], x, cfg.norm_eps)
+        if cfg.n_experts:
+            m_out, _ = L.moe_apply(p["mlp"], h, cfg=cfg)
+        else:
+            m_out = L.ffn_apply(p["mlp"], h)
+        x = x + m_out
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, token=None, pos=None,
+                embed=None):
+    """One new token for the whole batch.
+
+    token (B,1) int32 (or `embed` (B,1,d) for frontend archs); pos scalar
+    int32 absolute position; cache as from `empty_cache`/prefill.
+    Returns (logits (B,1,V) f32, new_cache).
+    """
+    dt = L.cdtype(cfg)
+    if embed is not None:
+        x = embed.astype(dt)
+    else:
+        x = params["embed"].astype(dt)[token]
+    windows = layer_flags(cfg)
+    prefix = cfg.n_prefix
+
+    if uses_layer_loop(cfg):
+        new_caches = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, nc = layer_decode(lp, x, cache[i], cfg=cfg, pos=pos,
+                                 window=int(windows[i]), prefix=prefix)
+            new_caches.append(nc)
+        new_cache = new_caches
+    else:
+        w0 = int(windows[0])       # homogeneous stack
+
+        def body(x, xs):
+            lp, c = xs
+            x, nc = layer_decode(lp, x, c, cfg=cfg, pos=pos, window=w0,
+                                 prefix=prefix)
+            return x, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache),
+                                    unroll=scan_unroll())
+
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return unembed(params, cfg, x), new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, extra_embeds=None,
+            s_max: Optional[int] = None):
+    """Full forward + build the decode cache.
+
+    Returns (logits_last (B,1,V), cache, next_pos scalar).
+    For scan archs the cache is the stacked pytree; for loop archs a list.
+    """
+    dt = L.cdtype(cfg)
+    x = embed_inputs(params, cfg, tokens, extra_embeds)
+    B, T, _ = x.shape
+    s_max = s_max or T
+    positions = jnp.arange(T, dtype=jnp.int32)
+    prefix = cfg.n_prefix
+    windows = layer_flags(cfg)
+    has_window = bool(cfg.sliding_window)
+
+    def run_layer(lp, x, w, window_static: int):
+        """Returns (x', cache_entry) for one layer."""
+        c = {}
+        if cfg.family == "hybrid":
+            h = L.rms_norm(lp["ln_attn"], x, cfg.norm_eps)
+            a_out, (k, v) = L.gqa_apply(lp["attn"], h, cfg=cfg,
+                                        positions=positions, window=w,
+                                        prefix=prefix,
+                                        has_window=has_window)
+            s_out, sc = S.ssd_prefill_cache(lp["ssm"], h, cfg=cfg)
+            c["attn"] = _kv_to_cache(cfg, k, v, T, s_max, window_static, dt)
+            c["ssm"] = sc
+            a_out = L.rms_norm(lp["ln_attn_out"], a_out, cfg.norm_eps)
+            s_out = L.rms_norm(lp["ln_ssm_out"], s_out, cfg.norm_eps)
+            x = x + 0.5 * (a_out + s_out)
+        elif cfg.n_heads:
+            h = L.rms_norm(lp["ln_attn"], x, cfg.norm_eps)
+            if cfg.attn_kind == "mla":
+                a_out, (ckv, krope) = L.mla_apply(
+                    lp["attn"], h, cfg=cfg, positions=positions,
+                    prefix=prefix)
+                c["attn"] = _mla_to_cache(cfg, ckv, krope, T, s_max, dt)
+            else:
+                a_out, (k, v) = L.gqa_apply(
+                    lp["attn"], h, cfg=cfg, positions=positions, window=w,
+                    prefix=prefix, has_window=has_window)
+                c["attn"] = _kv_to_cache(cfg, k, v, T, s_max,
+                                         window_static, dt)
+            x = x + a_out
+        elif cfg.ssm_state:
+            h = L.rms_norm(lp["ln_ssm"], x, cfg.norm_eps)
+            s_out, sc = S.ssd_prefill_cache(lp["ssm"], h, cfg=cfg)
+            c["ssm"] = sc
+            x = x + s_out
+        if cfg.d_ff:
+            h = L.rms_norm(lp["ln_mlp"], x, cfg.norm_eps)
+            m_out = (L.moe_apply(lp["mlp"], h, cfg=cfg)[0] if cfg.n_experts
+                     else L.ffn_apply(lp["mlp"], h))
+            x = x + m_out
+        return x, c
+
+    if uses_layer_loop(cfg):
+        caches = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, c = run_layer(lp, x, int(windows[i]), int(windows[i]))
+            caches.append(c)
+        cache = caches
+    else:
+        # non-loop archs have uniform windows (uses_layer_loop is True for
+        # mixed) -> pass the STATIC window so chunked_sdpa block-skips
+        w0 = int(windows[0])
+
+        def body(x, xs):
+            (lp,) = xs
+            fn = run_layer
+            if cfg.remat == "block":
+                fn = jax.checkpoint(run_layer, static_argnums=(2, 3))
+            return fn(lp, x, w0, w0)
+
+        x, cache = jax.lax.scan(body, x, (params["layers"],),
+                                unroll=scan_unroll())
+
+    x = L.rms_norm(params["ln_f"], x[:, -1:, :], cfg.norm_eps)
+    logits = unembed(params, cfg, x)
+    return logits, cache, jnp.int32(T)
+
+
+def _kv_to_cache(cfg, k, v, T, s_max, window: int, dt):
+    """Prefill K/V (B,T,K,hd) -> decode cache layout (ring for SWA)."""
+    ring = min(window, s_max) if window else s_max
+    B = k.shape[0]
+    pos = jnp.arange(T, dtype=jnp.int32)
+    ck = jnp.zeros((B, ring, cfg.n_kv_heads, cfg.head_dim), dt)
+    cv = jnp.zeros_like(ck)
+    pm = jnp.full((ring,), -1, jnp.int32)
+    if window and T > ring:
+        # keep the trailing `ring` positions, placed at their ring slots
+        keep = pos[-ring:]
+        slots = keep % ring
+        ck = ck.at[:, slots].set(k[:, -ring:].astype(dt))
+        cv = cv.at[:, slots].set(v[:, -ring:].astype(dt))
+        pm = pm.at[slots].set(keep)
+    else:
+        ck = ck.at[:, :T].set(k.astype(dt))
+        cv = cv.at[:, :T].set(v.astype(dt))
+        pm = pm.at[:T].set(pos)
+    return {"k": ck, "v": cv, "pos_map": pm}
+
+
+def _mla_to_cache(cfg, ckv, krope, T, s_max, dt):
+    B = ckv.shape[0]
+    c = {
+        "ckv": jnp.zeros((B, s_max, cfg.kv_lora_rank), dt
+                         ).at[:, :T].set(ckv.astype(dt)),
+        "krope": jnp.zeros((B, s_max, cfg.qk_rope_dim), dt
+                           ).at[:, :T].set(krope.astype(dt)),
+        "pos_map": jnp.full((s_max,), -1, jnp.int32
+                            ).at[:T].set(jnp.arange(T, dtype=jnp.int32)),
+    }
+    return c
+
+
+__all__ = ["init_params", "init_layer", "forward", "lm_loss", "prefill",
+           "decode_step", "empty_cache", "uses_layer_loop", "layer_flags",
+           "unembed"]

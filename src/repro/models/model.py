@@ -1,0 +1,143 @@
+"""Public model API: --arch <id> -> Model(init/loss/prefill/decode/specs).
+
+`input_specs(shape_name)` returns ShapeDtypeStruct stand-ins for every model
+input of the assigned (arch x shape) cell -- weak-type-correct, shardable,
+no device allocation -- which is what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import SHAPES, ModelConfig, runnable_shapes
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---- parameters ------------------------------------------------------
+    def init(self, key) -> Dict:
+        return lm.init_params(key, self.cfg)
+
+    def shape_params(self) -> Dict:
+        """Abstract parameter tree (ShapeDtypeStructs) -- dry-run input."""
+        return jax.eval_shape(
+            lambda: lm.init_params(jax.random.PRNGKey(0), self.cfg))
+
+    def param_count(self) -> int:
+        shapes = self.shape_params()
+        return int(sum(int(jnp.prod(jnp.asarray(l.shape)))
+                       for l in jax.tree.leaves(shapes)))
+
+    # ---- steps -----------------------------------------------------------
+    def loss(self, params, batch):
+        return lm.lm_loss(params, self.cfg, batch)
+
+    def forward(self, params, batch):
+        return lm.forward(params, self.cfg, tokens=batch.get("tokens"),
+                          extra_embeds=batch.get("embeds"))
+
+    def prefill(self, params, batch, s_max: Optional[int] = None):
+        return lm.prefill(params, self.cfg, tokens=batch.get("tokens"),
+                          extra_embeds=batch.get("embeds"), s_max=s_max)
+
+    def decode(self, params, cache, token=None, pos=None, embed=None):
+        return lm.decode_step(params, self.cfg, cache, token=token, pos=pos,
+                              embed=embed)
+
+    def empty_cache(self, batch, s_max):
+        return lm.empty_cache(self.cfg, batch, s_max,
+                              stacked=not lm.uses_layer_loop(self.cfg))
+
+    # ---- assigned input shapes --------------------------------------------
+    def input_specs(self, shape_name: str):
+        """ShapeDtypeStruct pytree for one assigned (arch x shape) cell.
+
+        train  -> {tokens/embeds, labels}
+        prefill-> {tokens/embeds}
+        decode -> {token/embed, pos, cache}  (one new token, seq_len KV)
+        """
+        cfg = self.cfg
+        if shape_name not in SHAPES:
+            raise KeyError(shape_name)
+        if shape_name not in runnable_shapes(cfg):
+            raise ValueError(
+                f"{cfg.name} skips {shape_name} (full attention; "
+                f"DESIGN.md Sec. 5)")
+        sh = SHAPES[shape_name]
+        B, S = sh["global_batch"], sh["seq_len"]
+        dt = jnp.dtype(cfg.dtype)
+        i32 = jnp.int32
+
+        if sh["kind"] == "train":
+            return self._train_specs(B, S, dt, i32)
+        if sh["kind"] == "prefill":
+            return self._prompt_specs(B, S, dt, i32)
+        # decode: one new token with a seq_len-deep cache
+        cache = jax.eval_shape(
+            lambda: self.empty_cache(B, S))
+        batch: Dict = {"cache": cache, "pos": _sds((), i32)}
+        if cfg.frontend == "frames":
+            batch["embed"] = _sds((B, 1, cfg.d_model), dt)
+        else:
+            batch["token"] = _sds((B, 1), i32)
+        return batch
+
+    def _train_specs(self, B, S, dt, i32):
+        cfg = self.cfg
+        specs = self._prompt_specs(B, S, dt, i32)
+        n_text = S - (cfg.n_prefix if cfg.frontend == "patches" else 0)
+        specs["labels"] = _sds((B, n_text), i32)
+        return specs
+
+    def _prompt_specs(self, B, S, dt, i32):
+        cfg = self.cfg
+        if cfg.frontend == "frames":       # musicgen: EnCodec frame embeds
+            return {"embeds": _sds((B, S, cfg.d_model), dt)}
+        if cfg.frontend == "patches":      # paligemma: SigLIP patch embeds
+            return {"embeds": _sds((B, cfg.n_prefix, cfg.d_model), dt),
+                    "tokens": _sds((B, S - cfg.n_prefix), i32)}
+        return {"tokens": _sds((B, S), i32)}
+
+    # ---- concrete sample batches (smoke tests / examples) -----------------
+    def sample_batch(self, key, batch_size: int, seq_len: int):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        k1, k2, k3 = jax.random.split(key, 3)
+        n_text = seq_len - (cfg.n_prefix if cfg.frontend == "patches" else 0)
+        batch = {}
+        if cfg.frontend == "frames":
+            batch["embeds"] = jax.random.normal(
+                k1, (batch_size, seq_len, cfg.d_model), dt)
+            batch["labels"] = jax.random.randint(
+                k2, (batch_size, seq_len), 0, cfg.vocab_size)
+        elif cfg.frontend == "patches":
+            batch["embeds"] = jax.random.normal(
+                k1, (batch_size, cfg.n_prefix, cfg.d_model), dt)
+            batch["tokens"] = jax.random.randint(
+                k2, (batch_size, n_text), 0, cfg.vocab_size)
+            batch["labels"] = jax.random.randint(
+                k3, (batch_size, n_text), 0, cfg.vocab_size)
+        else:
+            batch["tokens"] = jax.random.randint(
+                k1, (batch_size, seq_len), 0, cfg.vocab_size)
+            batch["labels"] = jax.random.randint(
+                k2, (batch_size, seq_len), 0, cfg.vocab_size)
+        return batch
+
+
+def build(arch_id: str, smoke: bool = False) -> Model:
+    from repro.configs import get_config, get_smoke_config
+    return Model(get_smoke_config(arch_id) if smoke else get_config(arch_id))
+
+
+__all__ = ["Model", "build"]

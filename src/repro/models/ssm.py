@@ -1,0 +1,207 @@
+"""Mamba-2 SSD (state-space duality) block -- arXiv:2405.21060.
+
+Training/prefill uses the *chunked dual form*: block-diagonal (intra-chunk)
+attention-like matmuls + a low-rank inter-chunk state recurrence.  This is
+the TPU-native formulation -- every heavy op is an MXU matmul over
+(chunk x chunk) or (chunk x state) tiles; the only sequential op is the
+O(T/chunk) state scan.
+
+Decode is the O(1) recurrence h <- a*h + dt*B (x) , y = C.h + D*x.
+
+Layout: ngroups = 1 (B/C shared across heads), d_inner = expand*d_model,
+heads = d_inner / head_dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.unroll import scan_unroll
+from repro.models.layers import _dense_init, rms_norm, rms_norm_init
+
+
+def ssd_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    din, N, nh, w = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.conv_width
+    ks = jax.random.split(key, 4)
+    conv_ch = din + 2 * N
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * din + 2 * N + nh)),
+        "conv_w": _dense_init(ks[1], (w, conv_ch), scale=w ** -0.5),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, nh, dtype=jnp.float32))),
+        "gate_norm": rms_norm_init(din),
+        "out_proj": _dense_init(ks[2], (din, d)),
+    }
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    din, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(x.dtype))
+    z = proj[..., :din]
+    xBC = proj[..., din: 2 * din + 2 * N]
+    dt_raw = proj[..., 2 * din + 2 * N:]
+    return z, xBC, dt_raw
+
+
+def _causal_conv(p, xBC, w):
+    """Depthwise causal conv via w static shifts (w is 4: cheap + fusable)."""
+    pad = jnp.pad(xBC, ((0, 0), (w - 1, 0), (0, 0)))
+    T = xBC.shape[1]
+    out = sum(pad[:, i: i + T, :] * p["conv_w"][i].astype(xBC.dtype)
+              for i in range(w))
+    return jax.nn.silu(out + p["conv_b"].astype(xBC.dtype))
+
+
+def _segsum_decay(a_cum):
+    """L[q, s] = exp(a_cum[q] - a_cum[s]) masked to q >= s.
+
+    a_cum: (..., Q, nh) inclusive cumulative log-decay.
+    Returns (..., Q, Q, nh) in f32.
+    """
+    diff = a_cum[..., :, None, :] - a_cum[..., None, :, :]
+    Q = a_cum.shape[-2]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(tri[..., None], jnp.exp(diff), 0.0)
+
+
+def ssd_apply(p, x, *, cfg: ModelConfig, valid_len=None, init_state=None):
+    """x (B, T, d) -> (y (B, T, d), final ssm state h (B, nh, hd, N)).
+
+    `valid_len`: positions >= valid_len get dt = 0 (identity update), so the
+    returned state reflects exactly the first valid_len tokens (prefill with
+    padding).
+    """
+    B_, T, _ = x.shape
+    din, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd, Q = cfg.ssm_head_dim, cfg.ssm_chunk
+    dt_ = x.dtype
+
+    z, xBC, dt_raw = _split_proj(p, x, cfg)
+    xBC = _causal_conv(p, xBC, cfg.conv_width)
+    xs = xBC[..., :din].reshape(B_, T, nh, hd)
+    Bm = xBC[..., din: din + N]
+    Cm = xBC[..., din + N:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])               # (B,T,nh) f32
+    if valid_len is not None:
+        tpos = jnp.arange(T)
+        dt = jnp.where(tpos[None, :, None] < valid_len, dt, 0.0)
+    A = -jnp.exp(p["A_log"])                           # (nh,)
+    a = dt * A                                         # log-decay, <= 0
+
+    # pad T to a chunk multiple (causal: pads can't affect real outputs;
+    # dt=0 there keeps the carried state exact)
+    Tp = -(-T // Q) * Q
+    if Tp != T:
+        pad = Tp - T
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+    nc = Tp // Q
+
+    xdt = (xs.astype(jnp.float32) * dt[..., None]).astype(dt_)
+    ch = lambda t, shape: t.reshape((B_, nc, Q) + shape)
+    xdt_c, B_c, C_c = ch(xdt, (nh, hd)), ch(Bm, (N,)), ch(Cm, (N,))
+    a_c = a.reshape(B_, nc, Q, nh)
+    a_cum = jnp.cumsum(a_c, axis=2)                    # (B,nc,Q,nh)
+
+    # ---- intra-chunk (block-diagonal attention-dual) --------------------
+    L = _segsum_decay(a_cum)                           # (B,nc,Q,Q,nh)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", C_c, B_c)   # shared across heads
+    w_att = (scores[..., None] * L).astype(dt_)        # (B,nc,Q,Q,nh)
+    y_diag = jnp.einsum("bcqsh,bcshd->bcqhd", w_att, xdt_c)
+
+    # ---- chunk boundary states -----------------------------------------
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (B,nc,Q,nh)
+    S = jnp.einsum("bcqn,bcqhd->bchdn",
+                   B_c.astype(jnp.float32),
+                   xdt_c.astype(jnp.float32) * decay_to_end[..., None])
+
+    # ---- inter-chunk recurrence (the only sequential op) ----------------
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])          # (B,nc,nh)
+    h0 = (jnp.zeros((B_, nh, hd, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def scan_fn(h, inp):
+        dec, s = inp                                   # (B,nh), (B,nh,hd,N)
+        h_next = h * dec[:, :, None, None] + s
+        return h_next, h
+
+    (h_final, h_prevs) = jax.lax.scan(
+        scan_fn, h0, (jnp.moveaxis(chunk_decay, 1, 0),
+                      jnp.moveaxis(S, 1, 0)), unroll=scan_unroll())
+    h_prev = jnp.moveaxis(h_prevs, 0, 1)               # (B,nc,nh,hd,N)
+
+    # ---- inter-chunk contribution ---------------------------------------
+    in_decay = jnp.exp(a_cum)                          # (B,nc,Q,nh)
+    y_off = jnp.einsum("bcqn,bchdn->bcqhd", C_c.astype(jnp.float32),
+                       h_prev) * in_decay[..., None]
+
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(B_, Tp, nh, hd)[:, :T]
+    y = y + xs[:, :T].astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, T, din).astype(dt_)
+
+    y = rms_norm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(dt_))
+    return out, h_final.astype(jnp.float32)
+
+
+def ssd_decode(p, x, cache, *, cfg: ModelConfig):
+    """One-token recurrent step.  x (B,1,d); cache {conv (B,w-1,ch),
+    h (B,nh,hd,N)}."""
+    B_, _, _ = x.shape
+    din, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd, w = cfg.ssm_head_dim, cfg.conv_width
+    dt_ = x.dtype
+
+    z, xBC_new, dt_raw = _split_proj(p, x, cfg)
+    window = jnp.concatenate([cache["conv"], xBC_new], axis=1)  # (B,w,ch)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out)                                 # (B,ch)
+    xs = xBC[:, :din].reshape(B_, nh, hd)
+    Bm = xBC[:, din: din + N]
+    Cm = xBC[:, din + N:]
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                         # (B,nh)
+
+    h = cache["h"] * a[:, :, None, None] + jnp.einsum(
+        "bn,bhd->bhdn", Bm, xs * dt[..., None])                 # (B,nh,hd,N)
+    y = jnp.einsum("bn,bhdn->bhd", Cm, h) + xs * p["D"][None, :, None]
+    y = y.reshape(B_, 1, din).astype(dt_)
+    y = rms_norm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(dt_))
+    return out, {"conv": window[:, 1:], "h": h}
+
+
+def ssd_empty_cache(cfg: ModelConfig, batch, dtype):
+    din, N = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, din + 2 * N),
+                          jnp.float32),
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, N),
+                       jnp.float32),
+    }
+
+
+def ssd_prefill_cache(p, x, *, cfg: ModelConfig, valid_len=None):
+    """Run ssd_apply and also return the decode cache (state + conv tail)."""
+    out, h = ssd_apply(p, x, cfg=cfg, valid_len=valid_len)
+    _, xBC, _ = _split_proj(p, x, cfg)
+    w = cfg.conv_width
+    conv_tail = xBC[:, -(w - 1):, :].astype(jnp.float32)
+    return out, {"conv": conv_tail, "h": h}
+
+
+__all__ = ["ssd_init", "ssd_apply", "ssd_decode", "ssd_empty_cache",
+           "ssd_prefill_cache"]

@@ -1,0 +1,30 @@
+"""Global scan-unroll switch (cost-model validation only).
+
+XLA's cost analysis counts while-loop bodies once; with every lax.scan
+fully unrolled the HLO FLOPs are exact, which is how the analytical cost
+model (launch/cost_model.py) is validated on small configs.  Production
+lowering always uses rolled scans (compact HLO).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+_FLAG = {"on": False}
+
+
+def scan_unroll():
+    """Pass as lax.scan's unroll= argument."""
+    return True if _FLAG["on"] else 1
+
+
+@contextmanager
+def full_unroll():
+    prev = _FLAG["on"]
+    _FLAG["on"] = True
+    try:
+        yield
+    finally:
+        _FLAG["on"] = prev
+
+
+__all__ = ["scan_unroll", "full_unroll"]

@@ -1,0 +1,73 @@
+"""Batched serving engine: prefill + streaming decode with KV/SSM caches.
+
+Serves any arch in the zoo.  Requests are padded into a fixed batch; the
+engine jits one prefill and one decode executable per (batch, s_max) and
+streams tokens.  This is the serve-side end-to-end driver (examples/
+serve_lm.py uses it).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclass
+class ServeStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    tokens_out: int = 0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / self.decode_s if self.decode_s else 0.0
+
+
+class Engine:
+    def __init__(self, model: Model, params, batch_size: int, s_max: int):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.s_max = s_max
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, s_max=s_max))
+        self._decode = jax.jit(
+            lambda p, c, tok, pos: model.decode(p, c, token=tok, pos=pos))
+        self.stats = ServeStats()
+
+    def generate(self, prompts: np.ndarray, max_new: int = 16,
+                 greedy: bool = True, key=None) -> np.ndarray:
+        """prompts (B, S0) int32 -> (B, max_new) int32 generated tokens."""
+        assert prompts.shape[0] == self.B
+        t0 = time.perf_counter()
+        logits, cache, pos = self._prefill(self.params,
+                                           {"tokens": jnp.asarray(prompts)})
+        jax.block_until_ready(logits)
+        self.stats.prefill_s += time.perf_counter() - t0
+
+        out = []
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        t0 = time.perf_counter()
+        for i in range(max_new):
+            out.append(np.asarray(tok)[:, 0])
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            if greedy or key is None:
+                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            else:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits[:, -1])[:, None]
+            tok = tok.astype(jnp.int32)
+            pos = pos + 1
+        jax.block_until_ready(tok)
+        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.tokens_out += max_new * self.B
+        return np.stack(out, axis=1)
+
+
+__all__ = ["Engine", "ServeStats"]

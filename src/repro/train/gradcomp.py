@@ -1,0 +1,92 @@
+"""NUMARCK-binning gradient compression with error feedback (beyond-paper).
+
+The paper's top-k change-ratio codebook is reused as a *gradient* quantizer
+for the cross-pod all-reduce: per tensor, gradients are binned into 2^B - 1
+width-2E value bins chosen by histogram top-k (values, not ratios --
+gradients have no temporal base), exceptions kept exact, and the residual
+(quantization error) is accumulated locally and re-injected next step
+(error feedback, a la 1-bit Adam / EF-SGD).
+
+This is the "distributed-optimization trick" integration of the paper's
+algorithm: the wire format shrinks from 32 bits to ~B bits per element for
+the slow inter-pod hop while intra-pod reduction stays exact.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GradCompState(NamedTuple):
+    residual: jax.Array          # error-feedback accumulator (like grads)
+
+
+@partial(jax.jit, static_argnames=("b_bits", "max_bins"))
+def quantize_dequantize(g: jax.Array, b_bits: int = 6,
+                        max_bins: int = 0):
+    """Top-k value-binning round trip (what the wire would carry).
+
+    Returns (g_hat, info) with g_hat the dequantized gradient; exceptions
+    (out-of-top-k values) pass through exactly.
+
+    `max_bins` defaults to 16 * 2^B: gradient values are roughly
+    heavy-tailed-gaussian (NOT clustered like temporal change ratios), so
+    the candidate grid must stay within a small multiple of the codebook
+    for the top-k bins to cover most of the mass.  Constant tensors pass
+    through exactly.
+    """
+    if not max_bins:
+        max_bins = min(16 * (1 << b_bits), 1 << 16)
+    flat = g.reshape(-1).astype(jnp.float32)
+    lo = jnp.min(flat)
+    hi = jnp.max(flat)
+    width = jnp.maximum((hi - lo) / max_bins, 1e-20)
+    ids = jnp.clip(((flat - lo) / width).astype(jnp.int32), 0, max_bins - 1)
+    counts = jnp.zeros((max_bins,), jnp.int32).at[ids].add(1)
+    k = (1 << b_bits) - 1
+    _, top_ids = jax.lax.top_k(counts, k)
+    lut = jnp.full((max_bins,), k, jnp.int32).at[top_ids].set(
+        jnp.arange(k, dtype=jnp.int32))
+    ranks = lut[ids]
+    centers = lo + (top_ids.astype(jnp.float32) + 0.5) * width
+    centers_pad = jnp.concatenate([centers, jnp.zeros((1,))])
+    quant = centers_pad[ranks]
+    compressible = (ranks < k) & (hi > lo)
+    g_hat = jnp.where(compressible, quant, flat)
+    alpha = jnp.mean((~compressible).astype(jnp.float32))
+    return g_hat.reshape(g.shape).astype(g.dtype), {"alpha": alpha}
+
+
+def init_state(grads_like) -> GradCompState:
+    return GradCompState(residual=jax.tree.map(
+        lambda g: jnp.zeros_like(g, jnp.float32), grads_like))
+
+
+def compress_grads(grads, state: GradCompState, b_bits: int = 6,
+                   max_bins: int = 0):
+    """Error-feedback compression: g_hat = Q(g + r);  r' = g + r - g_hat."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        g_hat, _ = quantize_dequantize(corrected, b_bits=b_bits,
+                                       max_bins=max_bins)
+        return g_hat.astype(g.dtype), corrected - g_hat.astype(jnp.float32)
+
+    flat = jax.tree.map(one, grads, state.residual)
+    g_hat = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    resid = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return g_hat, GradCompState(residual=resid)
+
+
+def wire_bits(g, b_bits: int, alpha: float) -> float:
+    """Estimated wire size vs raw f32 (Eq. 6 adapted to gradients)."""
+    n = g.size
+    return (n * b_bits + alpha * n * 32) / (n * 32)
+
+
+__all__ = ["GradCompState", "quantize_dequantize", "init_state",
+           "compress_grads", "wire_bits"]

@@ -1,0 +1,56 @@
+"""Baseline compressors: round trips + error bounds + NUMARCK comparison."""
+import numpy as np
+import pytest
+
+from repro.baselines import isabela, zfp_like, zlib_lossless
+from repro.data.temporal import generate_series
+
+
+@pytest.fixture(scope="module")
+def field_pair():
+    series = list(generate_series("asr", n_iterations=2, seed=3, scale=4))
+    return series[0], series[1]
+
+
+def test_zlib_roundtrip(field_pair):
+    _, curr = field_pair
+    blob = zlib_lossless.compress(curr)
+    np.testing.assert_array_equal(zlib_lossless.decompress(blob), curr)
+
+
+def test_isabela_error_bound(field_pair):
+    _, curr = field_pair
+    E = 1e-3
+    blob = isabela.compress(curr, error_bound=E, window=256, n_knots=32)
+    rec = isabela.decompress(blob)
+    rel = np.abs(rec - curr) / np.maximum(np.abs(curr), 1e-30)
+    assert np.max(rel) <= E * (1 + 1e-6), float(np.max(rel))
+    assert blob.nbytes < curr.nbytes            # actually compresses
+
+
+def test_zfp_error_bound(field_pair):
+    _, curr = field_pair
+    tol = float(np.mean(np.abs(curr))) * 1e-3   # paper's tol convention
+    blob = zfp_like.compress(curr, tol)
+    rec = zfp_like.decompress(blob)
+    assert np.max(np.abs(rec - curr)) <= tol * 8, (
+        float(np.max(np.abs(rec - curr))), tol)
+    assert blob.nbytes < curr.nbytes
+
+
+def test_numarck_beats_baselines_on_temporal_data(field_pair):
+    """The paper's headline claim (Figs. 9-12) on synthetic temporal data."""
+    from repro.core import NumarckParams, compress_step
+    prev, curr = field_pair
+    E = 1e-3
+    st = compress_step(prev, curr, NumarckParams(error_bound=E))
+    cr_numarck = st.compression_ratio()
+    cr_isabela = curr.nbytes / isabela.compress(curr, E, 256, 32).nbytes
+    tol = float(np.mean(np.abs(curr))) * E
+    cr_zfp = curr.nbytes / zfp_like.compress(curr, tol).nbytes
+    cr_zlib = curr.nbytes / zlib_lossless.compress(curr).nbytes
+    assert cr_numarck > cr_isabela, (cr_numarck, cr_isabela)
+    assert cr_numarck > cr_zlib, (cr_numarck, cr_zlib)
+    # zfp is the stronger baseline; NUMARCK should still win on
+    # temporally-coherent fields (the property it exploits)
+    assert cr_numarck > cr_zfp, (cr_numarck, cr_zfp)

@@ -1,0 +1,92 @@
+"""Binning strategies + DP oracle properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binning, dp_oracle, ratios
+
+RNG = np.random.default_rng(0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(min_value=-1, max_value=1, allow_nan=False,
+                          width=32), min_size=1, max_size=9),
+       st.integers(min_value=1, max_value=3),
+       st.sampled_from([0.05, 0.2, 0.5]))
+def test_dp_matches_brute_force(values, k, width):
+    vals = np.asarray(values)
+    assert dp_oracle.dp_max_coverage(vals, width, k) == \
+        dp_oracle.brute_force_max_coverage(vals, width, k)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_dp_is_an_upper_bound_for_topk(seed):
+    """No strategy covers more than the DP optimum (paper's proof claim)."""
+    rng = np.random.default_rng(seed)
+    vals = np.concatenate([rng.normal(0, 0.01, 300),
+                           rng.normal(0.05, 0.005, 100)])
+    E = 1e-3
+    k = 15
+    best = dp_oracle.dp_max_coverage(vals, 2 * E, k)
+
+    max_bins = 4096
+    v = jnp.asarray(vals, jnp.float32)
+    ok = jnp.ones(vals.size, bool)
+    lo, hi = float(vals.min()), float(vals.max())
+    dlo, w = ratios.histogram_domain(jnp.float32(lo), jnp.float32(hi), E,
+                                     max_bins)
+    ids, okb = ratios.candidate_bin_ids(v, ok, dlo, w, max_bins)
+    counts = binning.local_histogram(ids, okb, max_bins)
+    cd, idd = binning.sort_histogram(counts)
+    covered_topk = int(np.asarray(cd)[:k].sum())
+    assert covered_topk <= best
+    # and top-k with aligned bins is near-optimal (paper Figs. 13/14)
+    assert covered_topk >= 0.8 * best
+
+
+def test_dp_select_bins_consistent():
+    vals = RNG.normal(0, 0.02, 500)
+    cov, starts = dp_oracle.dp_select_bins(vals, 0.002, 10)
+    assert cov == dp_oracle.dp_max_coverage(vals, 0.002, 10)
+    assert len(starts) <= 10
+    # windows anchored at the returned starts actually cover `cov` points
+    total = 0
+    sv = np.sort(vals)
+    for s in starts:
+        total += int(((sv >= s) & (sv <= s + 0.002)).sum())
+    assert total == cov
+
+
+def test_strategy_quality_ordering():
+    """equal <= log <= topk coverage on clustered ratios (paper Sec. V-D)."""
+    rng = np.random.default_rng(1)
+    vals = np.concatenate([rng.normal(0.0, 5e-4, 5000),
+                           rng.normal(0.08, 1e-3, 2000),
+                           rng.uniform(-2, 2, 300)])
+    E, k, max_bins = 1e-3, 63, 8192
+    v = jnp.asarray(vals, jnp.float32)
+    ok = jnp.ones(vals.size, bool)
+    dlo, w = ratios.histogram_domain(jnp.float32(vals.min()),
+                                     jnp.float32(vals.max()), E, max_bins)
+    ids, okb = ratios.candidate_bin_ids(v, ok, dlo, w, max_bins)
+    counts = binning.local_histogram(ids, okb, max_bins)
+    cd, idd = binning.sort_histogram(counts)
+    cs_topk, _ = binning.topk_centers(idd, k, dlo, w)
+    cov = lambda cs: dp_oracle.coverage_of_centers(vals, np.asarray(cs), E)
+    cov_topk = cov(cs_topk)
+    cov_equal = cov(binning.equal_width_centers(float(vals.min()),
+                                                float(vals.max()), k))
+    cov_log = cov(binning.log_scale_centers(v, ok, k))
+    assert cov_topk >= cov_log >= cov_equal
+    assert cov_topk >= 0.9 * vals.size * 0.95  # most points in clusters
+
+
+def test_kmeans_centers_weighted():
+    """k-means centers concentrate where the histogram mass is."""
+    counts = jnp.zeros(1024, jnp.int32).at[100:110].set(1000).at[900].set(5)
+    cs = binning.kmeans_centers(counts, jnp.float32(0.0), jnp.float32(1.0),
+                                8, 20)
+    c = np.asarray(cs)
+    assert ((c > 99) & (c < 111)).sum() >= 6

@@ -1,0 +1,102 @@
+"""NCK container format: round trips, multi-variable files, offsets."""
+import numpy as np
+import pytest
+
+from repro.core import (NCKReader, NCKWriter, NumarckParams, compress_step,
+                        decompress_step, make_anchor)
+from repro.core.compress import decode_anchor
+from repro.core.types import NumarckParams as NP
+
+
+def test_raw_array_roundtrip(tmp_path):
+    w = NCKWriter()
+    a = np.random.default_rng(0).normal(size=(17, 5)).astype(np.float32)
+    b = np.arange(100, dtype=np.int64)
+    w.add_array("a", a, attrs={"unit": "m/s"})
+    w.add_array("b", b)
+    w.add_bytes("blob", b"hello world")
+    path = str(tmp_path / "t.nck")
+    w.write(path)
+    r = NCKReader(path)
+    np.testing.assert_array_equal(r.read_array("a"), a)
+    np.testing.assert_array_equal(r.read_array("b"), b)
+    assert r.read("blob") == b"hello world"
+    assert r.attrs("a")["unit"] == "m/s"
+
+
+def test_compressed_step_roundtrip_and_offsets(tmp_path):
+    rng = np.random.default_rng(1)
+    prev = rng.normal(1, 0.4, 9001).astype(np.float32)
+    curr = (prev * (1 + 0.01 * rng.standard_normal(9001))).astype(
+        np.float32)
+    p = NumarckParams(error_bound=1e-3, block_bytes=512)
+    st = compress_step(prev, curr, p)
+    w = NCKWriter()
+    w.add_step("UU", st)
+    path = str(tmp_path / "s.nck")
+    w.write(path)
+    r = NCKReader(path)
+    # paper Fig. 2 variable set exists
+    for suffix in ("info", "bin_centers", "index_table_offset",
+                   "incompressible_table_offset", "index_table",
+                   "incompressible_table"):
+        assert f"UU_{suffix}" in r.variables, suffix
+    st2 = r.read_step("UU")
+    np.testing.assert_array_equal(decompress_step(st2, prev),
+                                  decompress_step(st, prev))
+    info = r.attrs("UU_info")
+    assert info["total_data_num"] == 9001
+    assert info["B"] == st.b_bits
+    # byte offsets partition the index table exactly
+    offs = r.read_array("UU_index_table_offset")
+    assert offs[0] == 0 and offs[-1] == len(r.read("UU_index_table"))
+    assert (np.diff(offs) > 0).all()
+
+
+def test_anchor_roundtrip_via_container(tmp_path):
+    arr = np.random.default_rng(2).normal(size=(40, 11)).astype(np.float64)
+    st = make_anchor(arr, NumarckParams(block_bytes=1024))
+    w = NCKWriter()
+    w.add_step("X", st)
+    path = str(tmp_path / "a.nck")
+    w.write(path)
+    st2 = NCKReader(path).read_step("X")
+    np.testing.assert_array_equal(decode_anchor(st2), arr)
+
+
+def test_multiple_variables_per_file(tmp_path):
+    """Paper: 'NUMARCK allows multiple compressed variables stored in one
+    netCDF file'."""
+    rng = np.random.default_rng(3)
+    w = NCKWriter()
+    originals = {}
+    prevs = {}
+    for name in ("UU", "VV", "dens"):
+        prev = rng.normal(1, 0.3, 4096).astype(np.float32)
+        curr = (prev * (1 + 0.005 * rng.standard_normal(4096))).astype(
+            np.float32)
+        st = compress_step(prev, curr, NumarckParams(error_bound=1e-3,
+                                                     block_bytes=512))
+        w.add_step(name, st)
+        originals[name], prevs[name] = curr, prev
+    path = str(tmp_path / "multi.nck")
+    w.write(path)
+    r = NCKReader(path)
+    assert set(r.step_names()) == {"UU", "VV", "dens"}
+    for name in r.step_names():
+        rec = decompress_step(r.read_step(name), prevs[name])
+        me = np.mean(np.abs((rec - originals[name])
+                            / np.maximum(np.abs(originals[name]), 1e-30)))
+        assert me <= 1.01e-3
+
+
+def test_params_json_roundtrip():
+    p = NP(error_bound=5e-4, b_bits=9, strategy="log", block_bytes=4096)
+    assert NP.from_json(p.to_json()) == p
+
+
+def test_duplicate_variable_rejected():
+    w = NCKWriter()
+    w.add_array("x", np.zeros(3))
+    with pytest.raises(ValueError):
+        w.add_array("x", np.zeros(3))

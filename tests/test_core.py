@@ -1,0 +1,196 @@
+"""Core NUMARCK behaviour: round trips, error bounds, strategies, auto-B."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (NumarckParams, TemporalCompressor,
+                        TemporalDecompressor, compress_series, compress_step,
+                        decompress_series, decompress_step, make_anchor,
+                        mean_error_rate)
+from repro.core.compress import decode_anchor
+from repro.core.types import REF_ORIGINAL
+
+RNG = np.random.default_rng(42)
+
+
+def temporal_series(shape=(64, 48), steps=5, vol=0.01, dtype=np.float32,
+                    rng=RNG):
+    base = rng.normal(1.0, 0.5, shape).astype(dtype)
+    out = [base]
+    for _ in range(steps - 1):
+        change = 1 + vol * rng.standard_normal(shape)
+        out.append((out[-1] * change).astype(dtype))
+    return out
+
+
+def test_anchor_roundtrip_exact():
+    arr = RNG.normal(size=(37, 19)).astype(np.float32)
+    step = make_anchor(arr, NumarckParams(block_bytes=256))
+    assert step.is_anchor
+    np.testing.assert_array_equal(decode_anchor(step), arr)
+
+
+@pytest.mark.parametrize("strategy", ["topk", "equal", "log", "kmeans"])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_series_roundtrip_me_bound(strategy, dtype):
+    E = 1e-3
+    series = temporal_series(dtype=dtype)
+    p = NumarckParams(error_bound=E, strategy=strategy, max_bins=4096,
+                      block_bytes=2048,
+                      b_bits=None if strategy == "topk" else 8)
+    recon = decompress_series(compress_series(series, p))
+    for orig, rec in zip(series, recon):
+        assert mean_error_rate(orig, rec) <= E * 1.05
+        assert np.isfinite(rec).all()
+
+
+def test_elementwise_bound_reconstructed_mode():
+    """|R_i - D_i| <= E * |R_{i-1}| element-wise (strict in recon mode)."""
+    E = 5e-3
+    series = temporal_series(steps=8, vol=0.03)
+    p = NumarckParams(error_bound=E, max_bins=8192, block_bytes=4096)
+    comp = TemporalCompressor(p)
+    dec = TemporalDecompressor()
+    prev_recon = None
+    for arr in series:
+        step = comp.add(arr)
+        recon = dec.add(step)
+        if prev_recon is not None:
+            bound = E * np.abs(prev_recon.astype(np.float64)) * (1 + 1e-5) \
+                + 1e-12
+            err = np.abs(recon.astype(np.float64) - arr.astype(np.float64))
+            assert (err <= bound).all(), float((err - bound).max())
+        prev_recon = recon
+
+
+def test_original_mode_matches_paper_chain():
+    """REF_ORIGINAL compresses vs original D_{i-1} (errors may compound)."""
+    series = temporal_series(steps=6)
+    p = NumarckParams(error_bound=1e-3, reference=REF_ORIGINAL,
+                      max_bins=4096)
+    steps = compress_series(series, p)
+    recon = decompress_series(steps)
+    for orig, rec in zip(series, recon):
+        # compounding error: <= steps * E is a generous envelope
+        assert mean_error_rate(orig, rec) <= len(series) * 1e-3
+
+
+def test_incompressible_values_roundtrip_exact():
+    prev = RNG.normal(1, 0.5, 4096).astype(np.float32)
+    curr = prev.copy()
+    curr[::7] *= 100.0              # big jumps -> incompressible
+    prev[::13] = 0.0                # invalid ratios -> incompressible
+    p = NumarckParams(error_bound=1e-4, max_bins=1024, block_bytes=512)
+    step = compress_step(prev, curr, p)
+    rec = decompress_step(step, prev)
+    marker_positions = np.zeros(4096, bool)
+    marker_positions[::7] = True
+    marker_positions[::13] = True
+    np.testing.assert_array_equal(rec[marker_positions],
+                                  curr[marker_positions])
+
+
+def test_zero_and_constant_data():
+    prev = np.zeros(1000, np.float32)
+    curr = np.zeros(1000, np.float32)
+    p = NumarckParams(error_bound=1e-3, max_bins=1024)
+    rec = decompress_step(compress_step(prev, curr, p), prev)
+    np.testing.assert_array_equal(rec, curr)
+    # constant nonzero: all ratios 0 -> single bin, tiny B
+    prev = np.full(1000, 3.14, np.float32)
+    step = compress_step(prev, prev, p)
+    assert step.b_bits <= 2
+    np.testing.assert_allclose(decompress_step(step, prev), prev, rtol=1e-3)
+
+
+def test_auto_b_minimizes_eq6():
+    """Auto-selected B achieves the min of the Eq. 6 model (meta.est_sizes)."""
+    series = temporal_series(steps=2, vol=0.02)
+    p = NumarckParams(error_bound=1e-3, max_bins=8192, b_max=14)
+    step = compress_step(series[0], series[1], p)
+    est = np.asarray(step.meta["est_sizes"])
+    assert step.meta["b_auto"] == int(np.argmin(est)) + 1
+    assert step.b_bits == step.meta["b_auto"]
+
+
+def test_compression_ratio_definition():
+    series = temporal_series(steps=2)
+    p = NumarckParams(error_bound=1e-3, max_bins=4096)
+    step = compress_step(series[0], series[1], p)
+    orig = series[1].size * series[1].itemsize
+    assert abs(step.compression_ratio() - orig / step.nbytes) < 1e-9
+    assert step.compression_ratio() > 1.5     # smooth data compresses
+
+
+def test_forced_b_respected():
+    series = temporal_series(steps=2)
+    for b in (4, 10):
+        p = NumarckParams(error_bound=1e-3, b_bits=b, max_bins=4096)
+        step = compress_step(series[0], series[1], p)
+        assert step.b_bits == b
+
+
+def test_alpha_small_for_temporal_data():
+    """Paper Table 4: temporal data has low incompressible ratios."""
+    series = temporal_series(steps=3, vol=0.005)
+    p = NumarckParams(error_bound=1e-3, max_bins=16384)
+    steps = compress_series(series, p)
+    assert steps[1].alpha < 0.05
+    assert steps[2].alpha < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Property-based tests
+# ---------------------------------------------------------------------------
+
+finite_f32 = st.floats(min_value=-1e6, max_value=1e6, width=32,
+                       allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(finite_f32, min_size=2, max_size=300),
+       st.sampled_from([1e-2, 1e-3, 1e-4]))
+def test_property_elementwise_bound(values, E):
+    """For arbitrary prev/curr, every reconstructed element is within
+    E * |prev| of the true value, or exactly equal (incompressible)."""
+    curr = np.asarray(values, np.float32)
+    prev = np.roll(curr, 1) * (1 + np.float32(E) / 3)
+    p = NumarckParams(error_bound=E, max_bins=2048, block_bytes=256)
+    step = compress_step(prev, curr, p)
+    rec = decompress_step(step, prev)
+    err = np.abs(rec.astype(np.float64) - curr.astype(np.float64))
+    # slack: centers are stored in the data dtype (paper Fig. 2), so f32
+    # rounding adds ~eps * (|prev| + |curr|) on top of the algorithmic bound
+    bound = (E * np.abs(prev.astype(np.float64)) * (1 + 1e-5)
+             + (np.abs(prev) + np.abs(curr)).astype(np.float64) * 1e-6
+             + 1e-30)
+    exact = rec == curr
+    assert (exact | (err <= bound)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=16),
+       st.integers(min_value=1, max_value=500))
+def test_property_pack_unpack_roundtrip(b_bits, n):
+    from repro.core import packing
+    idx = RNG.integers(0, 1 << b_bits, n).astype(np.int32)
+    packed = packing.pack_indices_np(idx, b_bits)
+    assert packed.size == packing.packed_nbytes(n, b_bits)
+    np.testing.assert_array_equal(
+        packing.unpack_indices_np(packed, n, b_bits), idx)
+    # jnp path agrees
+    import jax.numpy as jnp
+    packed_j = np.asarray(packing.pack_indices_jnp(jnp.asarray(idx), b_bits))
+    np.testing.assert_array_equal(packed_j, packed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=2, max_value=64).map(lambda k: k * 37))
+def test_property_shapes_roundtrip(n):
+    shape = (n // 37, 37)
+    series = temporal_series(shape=shape, steps=3)
+    p = NumarckParams(error_bound=1e-3, max_bins=1024, block_bytes=128)
+    recon = decompress_series(compress_series(series, p))
+    for orig, rec in zip(series, recon):
+        assert rec.shape == orig.shape
+        assert mean_error_rate(orig, rec) <= 1.05e-3

@@ -1,0 +1,71 @@
+"""Sharded pipeline == single-device pipeline, bit-exact.
+
+Runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+so the main pytest process keeps seeing exactly 1 device.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import NumarckParams, compress_step
+    from repro.distributed.pipeline import ShardedCompressor
+
+    assert len(jax.devices()) == 8
+    rng = np.random.default_rng(7)
+    n = 13_777          # odd size: exercises padding + straddling blocks
+    prev = rng.normal(1.0, 0.6, n).astype(np.float32)
+    prev[::101] = 0.0   # invalid ratios
+    curr = (prev * (1 + 0.015 * rng.standard_normal(n))).astype(np.float32)
+    curr[::503] *= 50.0  # outliers -> incompressible
+
+    params = NumarckParams(error_bound=1e-3, block_bytes=512, max_bins=4096,
+                           b_max=12)
+    ref = compress_step(prev, curr, params)
+
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    for use_pallas in (False, True):
+        sc = ShardedCompressor(mesh, "data", params, use_pallas=use_pallas)
+        got = sc.compress(prev, curr)
+        assert got.b_bits == ref.b_bits, (got.b_bits, ref.b_bits)
+        assert got.block_elems == ref.block_elems
+        assert np.array_equal(got.centers, ref.centers)
+        assert len(got.index_blocks) == len(ref.index_blocks)
+        for i, (a, b) in enumerate(zip(got.index_blocks, ref.index_blocks)):
+            assert a == b, f"block {i} differs (use_pallas={use_pallas})"
+        assert np.array_equal(got.incomp_values, ref.incomp_values)
+        assert np.array_equal(got.incomp_block_offsets,
+                              ref.incomp_block_offsets)
+        # and the result decompresses to within the bound
+        from repro.core import decompress_step, mean_error_rate
+        rec = decompress_step(got, prev)
+        me = mean_error_rate(curr, rec)
+        assert me <= params.error_bound * 1.01, me
+
+        # sharded decompression (dequant kernel) == host decompression
+        from repro.distributed.pipeline import ShardedDecompressor
+        sd = ShardedDecompressor(mesh, "data", use_pallas=use_pallas)
+        rec2 = sd.decompress(got, prev)
+        import numpy as _np
+        _np.testing.assert_allclose(rec2, rec, rtol=2e-6, atol=1e-7)
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_equals_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "OK" in res.stdout

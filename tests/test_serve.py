@@ -1,0 +1,66 @@
+"""Serving engine + full-config sanity."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models.model import build
+from repro.serve.engine import Engine
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-780m",
+                                  "mixtral-8x7b"])
+def test_engine_generates(arch):
+    model = build(arch, smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S0, new = 2, 12, 5
+    eng = Engine(model, params, B, S0 + new)
+    prompts = np.random.default_rng(0).integers(
+        0, model.cfg.vocab_size, (B, S0)).astype(np.int32)
+    out = eng.generate(prompts, max_new=new)
+    assert out.shape == (B, new)
+    assert (out >= 0).all() and (out < model.cfg.vocab_size).all()
+    assert eng.stats.tokens_out == B * new
+
+
+def test_engine_deterministic_greedy():
+    model = build("llama3.2-1b", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, 1, 20)
+    p = np.random.default_rng(1).integers(0, model.cfg.vocab_size,
+                                          (1, 10)).astype(np.int32)
+    a = eng.generate(p, max_new=6)
+    b = eng.generate(p, max_new=6)
+    np.testing.assert_array_equal(a, b)
+
+
+# full-config parameter counts vs the published model sizes (rough)
+EXPECTED_PARAMS = {
+    "llama3.2-1b": (1.0e9, 1.7e9),
+    "qwen1.5-110b": (95e9, 120e9),
+    "deepseek-7b": (6e9, 8e9),
+    "minicpm3-4b": (3.3e9, 5e9),
+    "mixtral-8x7b": (42e9, 50e9),       # total (not active) params
+    "phi3.5-moe-42b-a6.6b": (38e9, 45e9),
+    "mamba2-780m": (0.65e9, 0.9e9),
+    "hymba-1.5b": (1.1e9, 1.9e9),
+    "paligemma-3b": (2.2e9, 3.5e9),     # backbone only (SigLIP stubbed)
+    "musicgen-medium": (1.2e9, 2.0e9),  # SwiGLU (3 mats) vs published GELU
+}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_full_config_param_counts(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    lo, hi = EXPECTED_PARAMS[arch]
+    assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params outside [{lo/1e9}," \
+                          f"{hi/1e9}]B"
+
+
+def test_moe_active_params_less_than_total():
+    cfg = get_config("mixtral-8x7b")
+    act = cfg.active_param_count()
+    tot = cfg.param_count()
+    assert act < tot * 0.45                 # top-2 of 8 experts
+    assert 10e9 < act < 16e9                # ~13B active

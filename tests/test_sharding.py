@@ -1,0 +1,75 @@
+"""Sharding rules: param/cache PartitionSpecs in a 4x2 test mesh."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.distributed import sharding as shd
+    from repro.configs import get_smoke_config
+    from repro.models.model import Model
+    import dataclasses
+
+    mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+
+    # ---- dense arch: TP on heads/ffn, FSDP on d_model ------------------
+    cfg = get_smoke_config("llama3.2-1b")
+    # smoke: d=64, H=4, K=2, hd=16, ff=128, vocab=256
+    m = Model(cfg)
+    specs = shd.param_specs(m.shape_params(), cfg, mesh)
+    assert specs["embed"] == P("model", "data"), specs["embed"]
+    lay = specs["layers"]
+    assert lay["attn"]["wq"] == P(None, "data", "model", None)
+    assert lay["attn"]["wk"] == P(None, "data", "model", None)
+    assert lay["attn"]["wo"] == P(None, "model", None, "data")
+    assert lay["mlp"]["w_gate"] == P(None, "data", "model")
+    assert lay["mlp"]["w_down"] == P(None, "model", "data")
+
+    # ---- MoE with ep split: expert slots sharded over model -------------
+    cfg_m = dataclasses.replace(get_smoke_config("mixtral-8x7b"),
+                                n_experts=4, moe_ep_split=1)
+    # slots = 4 >= ... not ep (needs >= 16) -> TP fallback inside expert
+    m2 = Model(cfg_m)
+    sp2 = shd.param_specs(m2.shape_params(), cfg_m, mesh)
+    assert sp2["layers"]["mlp"]["we_gate"] == P(None, None, "data", "model")
+    cfg_m2 = dataclasses.replace(cfg_m, n_experts=16, moe_top_k=2)
+    m3 = Model(cfg_m2)
+    sp3 = shd.param_specs(m3.shape_params(), cfg_m2, mesh)
+    assert sp3["layers"]["mlp"]["we_gate"] == P(None, "model", "data", None)
+
+    # ---- cache specs: kv-head fallback to head_dim -----------------------
+    cache = {
+        "k": jax.ShapeDtypeStruct((8, 64, 3, 16), jnp.bfloat16),  # K=3 !%2
+        "v": jax.ShapeDtypeStruct((8, 64, 3, 16), jnp.bfloat16),
+        "pos_map": jax.ShapeDtypeStruct((64,), jnp.int32),
+    }
+    cs = shd.cache_specs(cache, mesh)
+    assert cs["k"] == P("data", None, None, "model"), cs["k"]   # hd fallback
+    cache2 = {"k": jax.ShapeDtypeStruct((8, 64, 4, 16), jnp.bfloat16)}
+    cs2 = shd.cache_specs(cache2, mesh)
+    assert cs2["k"] == P("data", None, "model", None)           # K divides
+
+    # batch=1 -> replicated
+    cache3 = {"k": jax.ShapeDtypeStruct((1, 64, 4, 16), jnp.bfloat16)}
+    assert shd.cache_specs(cache3, mesh)["k"] == P(None, None, "model",
+                                                   None)
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharding_rules():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "OK" in res.stdout

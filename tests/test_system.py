@@ -1,0 +1,75 @@
+"""End-to-end behaviour tests for the paper's system."""
+import subprocess
+import sys
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (NumarckParams, TemporalArchive, compress_series,
+                        decompress_series, mean_error_rate)
+from repro.data.temporal import generate_series
+
+
+def test_end_to_end_simulation_workflow(tmp_path):
+    """Paper Sec. V workflow: simulate -> compress -> archive -> partial
+    decompress -> verify error bound, on two dataset families."""
+    p = NumarckParams(error_bound=1e-3, block_bytes=1 << 14)
+    for name in ("stir", "cmip"):
+        series = list(generate_series(name, n_iterations=4, seed=1,
+                                      scale=4))
+        steps = compress_series(series, p)
+        # CR > 1 on the delta steps (temporal coherence exploited)
+        assert np.mean([s.compression_ratio() for s in steps[1:]]) > 1.5
+        recon = decompress_series(steps)
+        for orig, rec in zip(series, recon):
+            assert mean_error_rate(orig, rec) <= 1.05e-3
+
+        path = str(tmp_path / f"{name}.nck")
+        TemporalArchive.write(path, name, steps)
+        ar = TemporalArchive(path)
+        n = series[0].size
+        seg = ar.read_range(name, 3, n // 3, n // 3 + 777)
+        np.testing.assert_array_equal(
+            seg, recon[3].reshape(-1)[n // 3: n // 3 + 777])
+
+
+def test_compression_ratio_beats_baselines_end_to_end():
+    from repro.baselines import isabela, zfp_like
+    series = list(generate_series("cmip", n_iterations=2, seed=2, scale=4))
+    prev, curr = series
+    from repro.core import compress_step
+    st = compress_step(prev, curr, NumarckParams(error_bound=1e-3))
+    cr_n = st.compression_ratio()
+    cr_i = curr.nbytes / isabela.compress(curr, 1e-3).nbytes
+    tol = float(np.mean(np.abs(curr))) * 1e-3
+    cr_z = curr.nbytes / zfp_like.compress(curr, tol).nbytes
+    assert cr_n > cr_i and cr_n > cr_z
+
+
+@pytest.mark.slow
+def test_quickstart_example_runs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run(
+        [sys.executable,
+         os.path.join(os.path.dirname(__file__), "..", "examples",
+                      "quickstart.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "partial decompression" in res.stdout
+
+
+@pytest.mark.slow
+def test_train_restart_example_runs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run(
+        [sys.executable,
+         os.path.join(os.path.dirname(__file__), "..", "examples",
+                      "train_restart.py"), "--steps", "60"],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "restored step" in res.stdout
