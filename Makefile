@@ -1,0 +1,19 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench-entropy bench
+
+# Tier-1 verify (full suite).
+test:
+	$(PY) -m pytest -q
+
+# Fast loop: skip the slow end-to-end markers.
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+# Serial vs. parallel host entropy stage across codecs / block sizes.
+bench-entropy:
+	$(PY) benchmarks/bench_entropy.py
+
+bench:
+	$(PY) benchmarks/run.py

@@ -1,0 +1,63 @@
+"""Serial vs. parallel host entropy stage (core.entropy.compress_blocks).
+
+Measures the finalize-stage speedup from the thread-pool dispatcher across
+block sizes and codecs on a >= 64 MB synthetic index table -- the paper's
+phase-6 ZLIB stage, finally parallel (cf. arXiv:1903.07761's threaded
+entropy back-end).
+
+Output (CSV via benchmarks.common.emit):
+    entropy/<codec>/blk=<KB>KB/<mode>, us_per_call, MB/s + speedup
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import timeit, emit  # noqa: E402
+from repro.core import entropy   # noqa: E402
+
+TOTAL_BYTES = 64 << 20           # acceptance floor: >= 64 MB
+BLOCK_BYTES = [256 << 10, 1 << 20, 4 << 20]
+# lzma/bz2 are 10-40x slower than zlib; bench them on a slice so the whole
+# run stays interactive, scaling MB/s accordingly.
+CODEC_BYTES = {"zlib": TOTAL_BYTES, "raw": TOTAL_BYTES,
+               "bz2": 16 << 20, "lzma": 8 << 20}
+
+
+def synth_blocks(total: int, block: int) -> list:
+    """Low-entropy synthetic packed index table: zipf-ish byte stream, the
+    shape real B-bit rank tables have (rank 0 dominates)."""
+    rng = np.random.default_rng(0)
+    data = rng.zipf(1.6, total).astype(np.uint64) % 251
+    raw = data.astype(np.uint8).tobytes()
+    return [raw[s:s + block] for s in range(0, total, block)]
+
+
+def main():
+    rows = []
+    for codec in ("zlib", "raw", "bz2", "lzma"):
+        total = CODEC_BYTES[codec]
+        for block in BLOCK_BYTES:
+            raws = synth_blocks(total, block)
+            t_ser, out_s = timeit(entropy.compress_blocks, raws,
+                                  codec=codec, parallel=False, repeat=2)
+            t_par, out_p = timeit(entropy.compress_blocks, raws,
+                                  codec=codec, parallel=True, repeat=2)
+            assert out_s == out_p, "parallel output must be byte-identical"
+            mb = total / (1 << 20)
+            speedup = t_ser / max(t_par, 1e-9)
+            tag = f"entropy/{codec}/blk={block >> 10}KB"
+            rows.append((f"{tag}/serial", t_ser * 1e6,
+                         f"{mb / t_ser:.0f}MB/s"))
+            rows.append((f"{tag}/parallel", t_par * 1e6,
+                         f"{mb / t_par:.0f}MB/s speedup={speedup:.2f}x"))
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,6 @@ from __future__ import annotations
 import json
 import os
 import threading
-import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -110,7 +109,7 @@ class CheckpointManager:
         self._save_count += 1
         w = NCKWriter()
         stats = {"step": step, "anchor": is_anchor, "orig_bytes": 0,
-                 "comp_bytes": 0}
+                 "comp_bytes": 0, "codec": self.params.codec}
         names = {}
         for i, (key, arr) in enumerate(sorted(flat.items())):
             var = f"t{i:04d}"

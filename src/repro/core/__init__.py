@@ -2,16 +2,20 @@
 from repro.core.compress import (TemporalCompressor, TemporalDecompressor,
                                  compress_series, compress_step,
                                  decompress_series, decompress_step,
-                                 make_anchor)
+                                 encode_device, make_anchor)
 from repro.core.container import NCKReader, NCKWriter
+from repro.core.entropy import (codec_names, get_codec, register_codec)
 from repro.core.partial import TemporalArchive, read_step_range
+from repro.core.pipeline import EncodedIndices, finalize_step
 from repro.core.types import (CompressedStep, NumarckParams,
                               mean_error_rate)
 
 __all__ = [
     "NumarckParams", "CompressedStep", "mean_error_rate",
-    "compress_step", "decompress_step", "make_anchor",
+    "compress_step", "decompress_step", "make_anchor", "encode_device",
     "compress_series", "decompress_series",
     "TemporalCompressor", "TemporalDecompressor",
+    "EncodedIndices", "finalize_step",
+    "codec_names", "get_codec", "register_codec",
     "NCKWriter", "NCKReader", "TemporalArchive", "read_step_range",
 ]

@@ -1,16 +1,27 @@
-"""Single-device NUMARCK compress / decompress orchestration.
+"""Single-device NUMARCK compress / decompress driver.
 
 Device (jit) stages:
   1. `_analyze`     -- ratios, candidate histogram, descending sort, auto-B
   2. `_encode_topk` -- rank LUT + per-element index assignment (top-k)
      `_encode_centers` -- nearest-center assignment (equal/log/kmeans)
-Host finalize: exception compaction (original dtype), per-block bit-pack +
-ZLIB, blob assembly.  The distributed pipeline (repro.distributed.pipeline)
-re-uses stages 1-2 inside shard_map.
+Host finalize is the *shared* stage in ``core.pipeline`` (exception
+compaction, parallel entropy coding via the ``core.entropy`` codec
+registry, blob assembly); the sharded driver
+(``repro.distributed.pipeline``) lands in the same finalize, so the two
+paths emit byte-identical blobs.
+
+`TemporalCompressor(overlap=True)` / `compress_series(..., overlap=True)`
+double-buffer the device/host split (paper Sec. IV-C I/O overlap): the
+device analyze/encode of step i+1 runs while a background thread runs the
+host entropy stage of step i.  The REF_RECONSTRUCTED chain advances from
+the pre-entropy encode result (`pipeline.reconstruct_from_indices`), so
+the blob of step i is never on the critical path of step i+1.
 """
 from __future__ import annotations
 
-import zlib
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
 from functools import partial
 from typing import List, Optional
 
@@ -18,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import binning, blocks, ratios, select_b
+from repro.core import binning, blocks, entropy, ratios, select_b
+from repro.core import pipeline as pipe
 from repro.core.types import (CompressedStep, NumarckParams, REF_ORIGINAL,
                               REF_RECONSTRUCTED, STRATEGY_EQUAL,
                               STRATEGY_KMEANS, STRATEGY_LOG, STRATEGY_TOPK,
@@ -62,41 +74,35 @@ def _encode_centers(r, valid, centers_sorted, error_bound, b_bits):
 def make_anchor(arr: np.ndarray, params: NumarckParams) -> CompressedStep:
     """Losslessly stored first iteration (no previous step to diff against).
 
-    Stored in deflated *blocks* like the index table so that partial
+    Stored in entropy-coded *blocks* like the index table so that partial
     decompression works from iteration 0 onwards.
     """
-    arr = np.asarray(arr)
-    flat = arr.reshape(-1)
-    block_elems = max(1, params.block_bytes // flat.dtype.itemsize)
-    blks = []
-    for s, e in blocks.block_slices(flat.size, block_elems):
-        blks.append(zlib.compress(flat[s:e].tobytes(), params.zlib_level))
-    return CompressedStep(
-        n=arr.size, shape=tuple(arr.shape), dtype=str(arr.dtype),
-        b_bits=0, error_bound=params.error_bound, strategy=params.strategy,
-        reference=params.reference, domain_lo=0.0, bin_width=0.0,
-        centers=np.zeros(0), block_elems=block_elems, index_blocks=blks,
-        meta={"kind": "anchor"})
+    return pipe.finalize_anchor(arr, params)
 
 
 def decode_anchor(step: CompressedStep) -> np.ndarray:
-    raw = b"".join(zlib.decompress(b) for b in step.index_blocks)
+    raw = b"".join(entropy.decompress_blocks(step.index_blocks, step.codec))
     return np.frombuffer(raw, dtype=step.dtype).reshape(step.shape).copy()
 
 
-def compress_step(prev: np.ndarray, curr: np.ndarray,
-                  params: NumarckParams) -> CompressedStep:
-    """Compress `curr` against the reference state `prev` (Eq. 1/4).
+@dataclass
+class DeviceEncoded:
+    """Output of the device analyze+encode stages (pre-entropy)."""
 
-    `prev` is the original previous iteration in REF_ORIGINAL mode, or the
-    previously *reconstructed* state in REF_RECONSTRUCTED mode (the
-    TemporalCompressor picks the right one).
-    """
+    enc: pipe.EncodedIndices
+    centers: np.ndarray          # rounded to the data dtype (float64 view)
+    domain_lo: float
+    width: float
+    meta: dict
+
+
+def encode_device(prev: np.ndarray, curr: np.ndarray,
+                  params: NumarckParams) -> DeviceEncoded:
+    """Device stages for one step: analyze + strategy dispatch + indexing."""
     prev = np.asarray(prev)
     curr = np.asarray(curr)
     if prev.shape != curr.shape:
         raise ValueError("temporal steps must share a shape")
-    n = curr.size
     ebytes = dtype_nbytes(curr.dtype)
     a = _analyze(prev.reshape(-1), curr.reshape(-1),
                  np.float32(params.error_bound), params.max_bins,
@@ -108,9 +114,8 @@ def compress_step(prev: np.ndarray, curr: np.ndarray,
         k_eff = min((1 << b_bits) - 1, params.max_bins)
         idx = _encode_topk(a["bin_ids"], a["ids_desc"], b_bits, k_eff,
                            params.max_bins)
-        sel = np.asarray(a["ids_desc"][:k_eff])
-        centers = (np.float64(a["domain_lo"])
-                   + (sel.astype(np.float64) + 0.5) * np.float64(a["width"]))
+        centers = pipe.topk_centers(np.asarray(a["ids_desc"]), k_eff,
+                                    float(a["domain_lo"]), float(a["width"]))
     else:
         b_bits = int(params.b_bits if params.b_bits is not None else 8)
         k_eff = (1 << b_bits) - 1
@@ -130,34 +135,28 @@ def compress_step(prev: np.ndarray, curr: np.ndarray,
                               np.float32(params.error_bound), b_bits)
         centers = np.asarray(cs, np.float64)
 
-    # Paper stores bin centers in the data's own float type (Fig. 2); round
-    # now so in-memory and from-file reconstructions agree bit-exactly.
-    centers = centers.astype(curr.dtype).astype(np.float64)
-
-    idx_np = np.asarray(idx)
-    marker = (1 << b_bits) - 1
-    incomp_mask = idx_np == marker
-    incomp_values = curr.reshape(-1)[incomp_mask]
-
-    block_elems = params.block_elems(b_bits)
-    blks, raw_sizes, incomp_off = blocks.deflate_blocks(
-        idx_np, b_bits, block_elems, params.zlib_level)
-
-    return CompressedStep(
-        n=n, shape=tuple(curr.shape), dtype=str(curr.dtype), b_bits=b_bits,
-        error_bound=params.error_bound, strategy=params.strategy,
-        reference=params.reference, domain_lo=float(a["domain_lo"]),
-        bin_width=float(a["width"]),
-        centers=centers[:marker] if centers.size > marker else centers,
-        block_elems=block_elems, index_blocks=blks,
-        index_block_nbytes=raw_sizes, incomp_values=incomp_values,
-        incomp_block_offsets=incomp_off,
-        meta={
-            "b_auto": int(a["b_auto"]),
+    centers = pipe.round_centers(centers, curr.dtype)
+    enc = pipe.EncodedIndices(idx=np.asarray(idx), b_bits=b_bits,
+                              block_elems=params.block_elems(b_bits))
+    meta = {"b_auto": int(a["b_auto"]),
             "est_sizes": np.asarray(a["est_sizes"]).tolist(),
-            "ratio_min": float(a["lo"]), "ratio_max": float(a["hi"]),
-            "zlib_ratio": blocks.zlib_ratio(blks, raw_sizes),
-        })
+            "ratio_min": float(a["lo"]), "ratio_max": float(a["hi"])}
+    return DeviceEncoded(enc=enc, centers=centers,
+                         domain_lo=float(a["domain_lo"]),
+                         width=float(a["width"]), meta=meta)
+
+
+def compress_step(prev: np.ndarray, curr: np.ndarray,
+                  params: NumarckParams) -> CompressedStep:
+    """Compress `curr` against the reference state `prev` (Eq. 1/4).
+
+    `prev` is the original previous iteration in REF_ORIGINAL mode, or the
+    previously *reconstructed* state in REF_RECONSTRUCTED mode (the
+    TemporalCompressor picks the right one).
+    """
+    dev = encode_device(prev, curr, params)
+    return pipe.finalize_step(curr, dev.enc, dev.centers, dev.domain_lo,
+                              dev.width, params, dev.meta)
 
 
 def decompress_step(step: CompressedStep,
@@ -174,7 +173,8 @@ def decompress_step(step: CompressedStep,
     ptr_base = step.incomp_block_offsets
     for bi, (s, e) in enumerate(blocks.block_slices(step.n,
                                                     step.block_elems)):
-        idx = blocks.inflate_block(step.index_blocks[bi], e - s, step.b_bits)
+        idx = blocks.inflate_block(step.index_blocks[bi], e - s, step.b_bits,
+                                   codec=step.codec)
         comp = prev_flat[s:e] * (1.0 + centers[idx])
         mask = idx == marker
         if mask.any():
@@ -186,24 +186,69 @@ def decompress_step(step: CompressedStep,
 
 
 class TemporalCompressor:
-    """Streaming compressor over a temporal series (paper Sec. III)."""
+    """Streaming compressor over a temporal series (paper Sec. III).
 
-    def __init__(self, params: NumarckParams = NumarckParams()):
+    With ``overlap=True`` the host finalize of step i (entropy stage +
+    blob assembly) runs on a background thread while the caller's next
+    ``add``/``add_async`` drives the device encode of step i+1.  Results
+    are identical to the serial path; only wall-clock changes.
+    """
+
+    def __init__(self, params: NumarckParams = NumarckParams(),
+                 overlap: bool = False):
         self.params = params
+        self.overlap = overlap
         self._state: Optional[np.ndarray] = None
+        self._ex = (ThreadPoolExecutor(max_workers=1,
+                                       thread_name_prefix="finalize")
+                    if overlap else None)
 
-    def add(self, arr: np.ndarray) -> CompressedStep:
+    def _submit(self, fn, *args) -> "Future[CompressedStep]":
+        if self._ex is not None:
+            return self._ex.submit(fn, *args)
+        f: Future = Future()
+        try:
+            f.set_result(fn(*args))
+        except BaseException as e:  # noqa: BLE001 -- mirror executor behavior
+            f.set_exception(e)
+        return f
+
+    def add_async(self, arr: np.ndarray) -> "Future[CompressedStep]":
+        """Device-encode `arr` now; return a future of the finalized step.
+
+        The internal reference chain advances before returning, so the
+        next call may be issued immediately.
+        """
         arr = np.asarray(arr)
         if self._state is None:
-            step = make_anchor(arr, self.params)
             self._state = arr.copy()
-            return step
-        step = compress_step(self._state, arr, self.params)
+            return self._submit(pipe.finalize_anchor, arr.copy(), self.params)
+        dev = encode_device(self._state, arr, self.params)
         if self.params.reference == REF_RECONSTRUCTED:
-            self._state = decompress_step(step, self._state)
+            self._state = pipe.reconstruct_from_indices(
+                self._state, dev.enc, dev.centers, arr.dtype, curr=arr)
         else:
             self._state = arr.copy()
-        return step
+        # The background finalize reads `arr` (exception values); snapshot
+        # it so callers may reuse/mutate their buffer immediately.
+        curr = arr.copy() if self._ex is not None else arr
+        return self._submit(pipe.finalize_step, curr, dev.enc, dev.centers,
+                            dev.domain_lo, dev.width, self.params, dev.meta)
+
+    def add(self, arr: np.ndarray) -> CompressedStep:
+        return self.add_async(arr).result()
+
+    def flush(self):
+        """Block until every in-flight finalize has completed."""
+        if self._ex is not None:
+            self._ex.shutdown(wait=True)
+            self._ex = ThreadPoolExecutor(max_workers=1,
+                                          thread_name_prefix="finalize")
+
+    def close(self):
+        if self._ex is not None:
+            self._ex.shutdown(wait=True)
+            self._ex = None
 
     def reset(self):
         self._state = None
@@ -223,10 +268,26 @@ class TemporalDecompressor:
         self._state = None
 
 
-def compress_series(arrays, params: NumarckParams = NumarckParams()
-                    ) -> List[CompressedStep]:
-    c = TemporalCompressor(params)
-    return [c.add(a) for a in arrays]
+def compress_series(arrays, params: NumarckParams = NumarckParams(),
+                    overlap: bool = False) -> List[CompressedStep]:
+    """Compress a temporal series; ``overlap=True`` double-buffers the
+    device encode of step i+1 against the host finalize of step i.
+
+    At most two finalizes are in flight at once, so host memory stays
+    bounded at ~2 steps regardless of series length.
+    """
+    c = TemporalCompressor(params, overlap=overlap)
+    out: List[CompressedStep] = []
+    pending: deque = deque()
+    try:
+        for a in arrays:
+            pending.append(c.add_async(a))
+            while len(pending) > 2:
+                out.append(pending.popleft().result())
+        out.extend(f.result() for f in pending)
+        return out
+    finally:
+        c.close()
 
 
 def decompress_series(steps: List[CompressedStep]) -> List[np.ndarray]:
@@ -235,5 +296,6 @@ def decompress_series(steps: List[CompressedStep]) -> List[np.ndarray]:
 
 
 __all__ = ["compress_step", "decompress_step", "make_anchor", "decode_anchor",
+           "encode_device", "DeviceEncoded",
            "TemporalCompressor", "TemporalDecompressor", "compress_series",
            "decompress_series"]

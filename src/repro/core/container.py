@@ -78,6 +78,7 @@ class NCKWriter:
             bin_width=step.bin_width, is_anchor=bool(step.is_anchor),
             n_blocks=step.n_blocks,
             n_incompressible=step.n_incompressible,
+            codec=step.codec,
         )
         offs_all = np.concatenate(
             [step.index_table_offsets(),
@@ -158,7 +159,8 @@ class NCKReader:
                 error_bound=info["error_bound"], strategy=info["strategy"],
                 reference=info["reference"], domain_lo=0.0, bin_width=0.0,
                 centers=np.zeros(0),
-                block_elems=info["elements_per_block"], index_blocks=blks)
+                block_elems=info["elements_per_block"],
+                codec=info.get("codec", "zlib"), index_blocks=blks)
         info = self.attrs(f"{name}_info")
         offs = self.read_array(f"{name}_index_table_offset")
         table = self.read(f"{name}_index_table")
@@ -170,7 +172,8 @@ class NCKReader:
             reference=info["reference"], domain_lo=info["domain_lo"],
             bin_width=info["bin_width"],
             centers=self.read_array(f"{name}_bin_centers").astype(np.float64),
-            block_elems=info["elements_per_block"], index_blocks=blks,
+            block_elems=info["elements_per_block"],
+            codec=info.get("codec", "zlib"), index_blocks=blks,
             incomp_values=self.read_array(f"{name}_incompressible_table"),
             incomp_block_offsets=self.read_array(
                 f"{name}_incompressible_table_offset"))

@@ -1,0 +1,199 @@
+"""Pluggable host-side entropy stage with a parallel block dispatcher.
+
+The paper runs ZLIB on the CPU cores as the final compression phase
+(Sec. IV-C); arXiv:1903.07761 generalizes that into a stage-structured
+pipeline whose entropy back-end is *pluggable* and thread-parallel.  This
+module is our version of that idea:
+
+  * a codec registry -- ``zlib`` (default), ``raw`` (store), ``lzma`` and
+    ``bz2`` behind one two-method interface; new codecs register with
+    :func:`register_codec` and are persisted by name in the NCK container
+    so files remain self-describing.
+  * :func:`compress_blocks` -- the one entropy entry point used by every
+    compressor (single-device, sharded, anchors).  Blocks are batched and
+    dispatched over a shared ``ThreadPoolExecutor``; zlib/bz2/lzma all
+    release the GIL on the C side, so threads give real parallel speedup
+    (see ``benchmarks/bench_entropy.py``).
+
+Batching heuristic (benchmarked in bench_entropy.py): tasks are groups of
+consecutive blocks sized so that (a) every worker gets work and (b) each
+task carries at least ``_TARGET_TASK_BYTES`` of payload so submission
+overhead stays <1% even for tiny blocks.
+"""
+from __future__ import annotations
+
+import bz2
+import lzma
+import os
+import threading
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence
+
+# --------------------------------------------------------------------- codecs
+
+
+class Codec:
+    """Entropy codec interface: bytes -> bytes, self-inverse via decompress."""
+
+    name: str = "abstract"
+
+    def compress(self, raw: bytes, level: int) -> bytes:
+        raise NotImplementedError
+
+    def decompress(self, blob: bytes) -> bytes:
+        raise NotImplementedError
+
+
+class ZlibCodec(Codec):
+    name = "zlib"
+
+    def compress(self, raw: bytes, level: int) -> bytes:
+        return zlib.compress(raw, level)
+
+    def decompress(self, blob: bytes) -> bytes:
+        return zlib.decompress(blob)
+
+
+class RawCodec(Codec):
+    """Store-only codec: no entropy coding (fastest finalize, CR from
+    binning alone).  Useful when the index table is near-incompressible or
+    the host is the bottleneck."""
+
+    name = "raw"
+
+    def compress(self, raw: bytes, level: int) -> bytes:
+        return raw
+
+    def decompress(self, blob: bytes) -> bytes:
+        return blob
+
+
+class LzmaCodec(Codec):
+    """LZMA: slowest, highest ratio; level maps to preset 0-9."""
+
+    name = "lzma"
+
+    def compress(self, raw: bytes, level: int) -> bytes:
+        return lzma.compress(raw, preset=min(max(level, 0), 9))
+
+    def decompress(self, blob: bytes) -> bytes:
+        return lzma.decompress(blob)
+
+
+class Bz2Codec(Codec):
+    name = "bz2"
+
+    def compress(self, raw: bytes, level: int) -> bytes:
+        return bz2.compress(raw, compresslevel=min(max(level, 1), 9))
+
+    def decompress(self, blob: bytes) -> bytes:
+        return bz2.decompress(blob)
+
+
+DEFAULT_CODEC = "zlib"
+_REGISTRY: Dict[str, Codec] = {}
+
+
+def register_codec(codec: Codec) -> Codec:
+    _REGISTRY[codec.name] = codec
+    return codec
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def codec_names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+for _c in (ZlibCodec(), RawCodec(), LzmaCodec(), Bz2Codec()):
+    register_codec(_c)
+
+# ----------------------------------------------------------- parallel stage
+
+# Below this total payload the pool overhead exceeds the win; stay serial.
+_MIN_PARALLEL_BYTES = 1 << 20
+# Batch consecutive blocks until each task carries at least this much.
+_TARGET_TASK_BYTES = 2 << 20
+
+_pool_lock = threading.Lock()
+_pool: Optional[ThreadPoolExecutor] = None
+
+
+def _shared_pool() -> ThreadPoolExecutor:
+    """Process-wide entropy pool (lazily created; sized to the host CPUs)."""
+    global _pool
+    with _pool_lock:
+        if _pool is None:
+            workers = min(32, os.cpu_count() or 1)
+            _pool = ThreadPoolExecutor(max_workers=workers,
+                                       thread_name_prefix="entropy")
+        return _pool
+
+
+def _task_plan(sizes: Sequence[int], workers: int) -> List[range]:
+    """Group consecutive block indices into tasks.
+
+    At least `workers` tasks (so every core is busy) unless the payload is
+    small; no task smaller than one block; tasks cover blocks in order so
+    output order is positional.
+    """
+    total = sum(sizes)
+    n = len(sizes)
+    n_tasks = max(workers, total // _TARGET_TASK_BYTES)
+    n_tasks = max(1, min(n, n_tasks))
+    step = -(-n // n_tasks)
+    return [range(s, min(s + step, n)) for s in range(0, n, step)]
+
+
+def compress_blocks(raws: Sequence[bytes], codec: str = DEFAULT_CODEC,
+                    level: int = 6, parallel: bool = True,
+                    pool: Optional[ThreadPoolExecutor] = None) -> List[bytes]:
+    """Entropy-code every block; the single finalize entry point.
+
+    Serial for small payloads, thread-parallel (shared pool, batched tasks)
+    otherwise.  Output is byte-identical to the serial loop in both modes --
+    per-block codec streams are independent.
+    """
+    c = get_codec(codec)
+    sizes = [len(r) for r in raws]
+    if (not parallel or len(raws) < 2
+            or sum(sizes) < _MIN_PARALLEL_BYTES):
+        return [c.compress(r, level) for r in raws]
+    ex = pool or _shared_pool()
+    workers = getattr(ex, "_max_workers", os.cpu_count() or 1)
+
+    def run(rng: range) -> List[bytes]:
+        return [c.compress(raws[i], level) for i in rng]
+
+    out: List[bytes] = []
+    for part in ex.map(run, _task_plan(sizes, workers)):
+        out.extend(part)
+    return out
+
+
+def decompress_block(blob: bytes, codec: str = DEFAULT_CODEC) -> bytes:
+    return get_codec(codec).decompress(blob)
+
+
+def decompress_blocks(blobs: Sequence[bytes], codec: str = DEFAULT_CODEC,
+                      parallel: bool = True) -> List[bytes]:
+    """Inverse of compress_blocks (parallel when the payload warrants it)."""
+    c = get_codec(codec)
+    if not parallel or len(blobs) < 2 \
+            or sum(len(b) for b in blobs) < _MIN_PARALLEL_BYTES:
+        return [c.decompress(b) for b in blobs]
+    ex = _shared_pool()
+    return list(ex.map(c.decompress, blobs))
+
+
+__all__ = ["Codec", "ZlibCodec", "RawCodec", "LzmaCodec", "Bz2Codec",
+           "DEFAULT_CODEC", "register_codec", "get_codec", "codec_names",
+           "compress_blocks", "decompress_block", "decompress_blocks"]

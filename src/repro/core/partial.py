@@ -9,12 +9,11 @@ paper measures as the near-linear Table 7 behaviour.
 """
 from __future__ import annotations
 
-import zlib
 from typing import Optional
 
 import numpy as np
 
-from repro.core import blocks
+from repro.core import blocks, entropy
 from repro.core.container import NCKReader, NCKWriter
 from repro.core.types import CompressedStep
 
@@ -39,6 +38,7 @@ def read_step_range(reader: NCKReader, name: str, start: int, stop: int,
     if not (0 <= start < stop <= n):
         raise IndexError(f"range [{start},{stop}) outside [0,{n})")
     be = info["elements_per_block"]
+    codec = info.get("codec", "zlib")
     b0, b1 = _range_blocks(start, stop, be)
 
     if is_anchor:
@@ -48,7 +48,8 @@ def read_step_range(reader: NCKReader, name: str, start: int, stop: int,
         pos = 0
         sizes = np.diff(offs[b0:b1 + 2])
         for sz in sizes:
-            out.append(zlib.decompress(raw[pos:pos + int(sz)]))
+            out.append(entropy.decompress_block(raw[pos:pos + int(sz)],
+                                                codec))
             pos += int(sz)
         arr = np.frombuffer(b"".join(out), dtype=info["dtype"])
         lo = b0 * be
@@ -83,7 +84,8 @@ def read_step_range(reader: NCKReader, name: str, start: int, stop: int,
         pos += int(offs[bi + 1] - offs[bi])
         blk_lo = bi * be
         blk_hi = min(blk_lo + be, n)
-        idx = blocks.inflate_block(blob, blk_hi - blk_lo, b_bits)
+        idx = blocks.inflate_block(blob, blk_hi - blk_lo, b_bits,
+                                   codec=codec)
         s = max(start, blk_lo)
         e = min(stop, blk_hi)
         sub = idx[s - blk_lo: e - blk_lo]

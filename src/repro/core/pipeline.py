@@ -1,0 +1,200 @@
+"""Shared NUMARCK pipeline stages: analyze -> encode -> finalize.
+
+Both drivers -- ``core.compress`` (single device) and
+``distributed.pipeline`` (shard_map) -- used to reimplement the host half
+of the pipeline: center computation, exception compaction, per-block
+entropy coding and blob assembly.  This module is the single home of those
+stages, following the stage-structured design of arXiv:1903.07761 (and
+LCP, arXiv:2411.00761): a driver produces an :class:`EncodedIndices`
+(device work) and everything after that is shared, so the two paths emit
+byte-identical ``CompressedStep`` blobs by construction.
+
+Stage map:
+
+  analyze   device  ratios, global range, histogram, auto-B   (per driver)
+  encode    device  rank-LUT indexing + bit-packing           (per driver)
+  finalize  host    exceptions, entropy stage, blob assembly  (HERE)
+
+The finalize entropy stage is the pluggable parallel codec dispatcher in
+``core.entropy``; the codec id is recorded on the step and persisted by
+the NCK container.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import entropy, packing
+from repro.core.types import CompressedStep, NumarckParams
+
+
+def block_slices(n: int, block_elems: int) -> List[Tuple[int, int]]:
+    return [(s, min(s + block_elems, n)) for s in range(0, n, block_elems)]
+
+
+@dataclass
+class EncodedIndices:
+    """Driver-produced encode output: the contract between encode/finalize.
+
+    ``packed`` holds the raw (pre-entropy) packed bytes of every index
+    block in global order; the final block is marker-padded to the full
+    ``block_elems`` so host and device packers emit identical streams.
+    """
+
+    idx: np.ndarray            # (n,) int32 bin ranks, marker = 2**B - 1
+    b_bits: int
+    block_elems: int
+    # Raw packed bytes per block.  Sharded driver fills this from the
+    # device bit-pack kernel; None defers packing to the finalize stage
+    # (host packer), which lets the overlapped stream keep the device
+    # critical path free of host byte work.
+    packed: Optional[List[bytes]] = None
+
+    @property
+    def marker(self) -> int:
+        return (1 << self.b_bits) - 1
+
+
+def topk_centers(ids_desc: np.ndarray, k_eff: int, domain_lo: float,
+                 width: float) -> np.ndarray:
+    """Bin centers of the top-k candidate bins (paper Eq. centre of bin)."""
+    sel = np.asarray(ids_desc)[:k_eff]
+    return (np.float64(domain_lo)
+            + (sel.astype(np.float64) + 0.5) * np.float64(width))
+
+
+def round_centers(centers: np.ndarray, dtype) -> np.ndarray:
+    """Paper stores centers in the data's own float type (Fig. 2); round now
+    so in-memory and from-file reconstructions agree bit-exactly."""
+    return np.asarray(centers).astype(dtype).astype(np.float64)
+
+
+def pack_blocks_host(idx: np.ndarray, b_bits: int,
+                     block_elems: int) -> List[bytes]:
+    """Host bit-pack stage: B-bit indices -> raw bytes per block.
+
+    The final partial block is padded with markers so every block packs to
+    the same byte length (mirrors the device packer; decompressors only
+    read the valid prefix).
+    """
+    marker = (1 << b_bits) - 1
+    out: List[bytes] = []
+    for s, e in block_slices(idx.size, block_elems):
+        chunk = idx[s:e]
+        if e - s < block_elems:
+            chunk = np.concatenate(
+                [chunk, np.full(block_elems - (e - s), marker, idx.dtype)])
+        out.append(packing.pack_indices_np(chunk, b_bits).tobytes())
+    return out
+
+
+def exception_offsets(incomp_mask: np.ndarray,
+                      block_elems: int) -> np.ndarray:
+    """Exclusive per-block prefix of incompressible counts (the
+    decompressor's MPI_Scan analogue, done on host metadata)."""
+    n = incomp_mask.size
+    per_block = np.add.reduceat(incomp_mask,
+                                np.arange(0, n, block_elems)).astype(np.int64)
+    return np.concatenate([[0], np.cumsum(per_block)])[:-1]
+
+
+def exception_table(idx: np.ndarray, marker: int, block_elems: int,
+                    curr_flat: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Compact incompressible values + their per-block offset table."""
+    incomp_mask = idx == marker
+    return curr_flat[incomp_mask], exception_offsets(incomp_mask, block_elems)
+
+
+def entropy_ratio(blobs: List[bytes], raw_sizes: np.ndarray) -> float:
+    """Average entropy-stage compression ratio (paper Table 9)."""
+    comp = sum(len(b) for b in blobs)
+    return float(np.asarray(raw_sizes).sum()) / max(comp, 1)
+
+
+def finalize_step(curr: np.ndarray, enc: EncodedIndices,
+                  centers: np.ndarray, domain_lo: float, width: float,
+                  params: NumarckParams,
+                  meta: Optional[dict] = None) -> CompressedStep:
+    """Shared host finalize: exceptions, parallel entropy stage, assembly.
+
+    Single-device and sharded drivers both land here, so their output
+    blobs are byte-identical for identical encode results.
+    """
+    curr = np.asarray(curr)
+    n = int(enc.idx.size)
+    incomp_values, incomp_off = exception_table(
+        enc.idx, enc.marker, enc.block_elems, curr.reshape(-1))
+    raws = (enc.packed if enc.packed is not None
+            else pack_blocks_host(enc.idx, enc.b_bits, enc.block_elems))
+    blks = entropy.compress_blocks(raws, codec=params.codec,
+                                   level=params.zlib_level,
+                                   parallel=params.parallel_entropy)
+    raw_sizes = np.asarray([len(r) for r in raws], np.int64)
+    centers = round_centers(centers, curr.dtype)
+    if centers.size > enc.marker:
+        centers = centers[:enc.marker]
+    full_meta = {"zlib_ratio": entropy_ratio(blks, raw_sizes)}
+    full_meta.update(meta or {})
+    return CompressedStep(
+        n=n, shape=tuple(curr.shape), dtype=str(curr.dtype),
+        b_bits=enc.b_bits, error_bound=params.error_bound,
+        strategy=params.strategy, reference=params.reference,
+        domain_lo=float(domain_lo), bin_width=float(width),
+        centers=centers, block_elems=enc.block_elems, codec=params.codec,
+        index_blocks=blks, index_block_nbytes=raw_sizes,
+        incomp_values=incomp_values, incomp_block_offsets=incomp_off,
+        meta=full_meta)
+
+
+def finalize_anchor(arr: np.ndarray, params: NumarckParams) -> CompressedStep:
+    """Lossless anchor through the same entropy stage (codec-aware)."""
+    arr = np.asarray(arr)
+    flat = arr.reshape(-1)
+    block_elems = max(1, params.block_bytes // flat.dtype.itemsize)
+    raws = [flat[s:e].tobytes() for s, e in block_slices(flat.size,
+                                                         block_elems)]
+    blks = entropy.compress_blocks(raws, codec=params.codec,
+                                   level=params.zlib_level,
+                                   parallel=params.parallel_entropy)
+    return CompressedStep(
+        n=arr.size, shape=tuple(arr.shape), dtype=str(arr.dtype),
+        b_bits=0, error_bound=params.error_bound, strategy=params.strategy,
+        reference=params.reference, domain_lo=0.0, bin_width=0.0,
+        centers=np.zeros(0), block_elems=block_elems, codec=params.codec,
+        index_blocks=blks, meta={"kind": "anchor"})
+
+
+def reconstruct_from_indices(prev: np.ndarray, enc: EncodedIndices,
+                             centers: np.ndarray, dtype,
+                             incomp_values: Optional[np.ndarray] = None,
+                             curr: Optional[np.ndarray] = None) -> np.ndarray:
+    """Reconstruct R_i from the *pre-entropy* encode result.
+
+    This is what lets the overlapped temporal stream advance: the
+    REF_RECONSTRUCTED chain needs R_i before compressing step i+1, but not
+    the deflated blobs -- so the entropy stage of step i can run in the
+    background while the device encodes step i+1.  Bit-identical to
+    ``decompress_step`` on the finalized blob (same float64 elementwise
+    ops, same exception patch order).
+    """
+    marker = enc.marker
+    prev_flat = np.asarray(prev, np.float64).reshape(-1)
+    centers = np.asarray(centers, np.float64)
+    lut = np.concatenate([centers, np.zeros(marker + 1 - centers.size)])
+    out = prev_flat * (1.0 + lut[enc.idx])
+    mask = enc.idx == marker
+    if mask.any():
+        if incomp_values is None:
+            assert curr is not None
+            incomp_values = np.asarray(curr).reshape(-1)[mask]
+        out[mask] = incomp_values.astype(np.float64)
+    return out.astype(dtype).reshape(np.asarray(prev).shape)
+
+
+__all__ = ["EncodedIndices", "block_slices", "topk_centers", "round_centers",
+           "pack_blocks_host", "exception_offsets", "exception_table",
+           "entropy_ratio", "finalize_step", "finalize_anchor",
+           "reconstruct_from_indices"]

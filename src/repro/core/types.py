@@ -41,7 +41,9 @@ class NumarckParams:
     max_bins: int = 1 << 16            # histogram candidate-bin cap (DESIGN 3)
     strategy: str = STRATEGY_TOPK
     block_bytes: int = 1 << 20         # index-table block size (paper: 1 MB)
-    zlib_level: int = 6
+    codec: str = "zlib"                # entropy codec (core.entropy registry)
+    zlib_level: int = 6                # codec level (name kept for compat)
+    parallel_entropy: bool = True      # thread-pool host finalize
     reference: str = REF_RECONSTRUCTED
     kmeans_iters: int = 20
     kmeans_max_k: int = 4096           # tractability cap for k-means binning
@@ -63,6 +65,8 @@ class NumarckParams:
             raise ValueError("b_bits must be in [1, 24]")
         if self.max_bins < 2:
             raise ValueError("max_bins must be >= 2")
+        from repro.core import entropy  # stdlib-only; no import cycle
+        entropy.get_codec(self.codec)   # raises on unknown codec
 
     def block_elems(self, b_bits: int) -> int:
         """Indices per index-table block (paper: block_bits / B).
@@ -101,7 +105,8 @@ class CompressedStep:
     bin_width: float                    # 2E for top-k
     centers: np.ndarray                 # float64 (k,) bin centers
     block_elems: int                    # elements_per_block
-    index_blocks: list = field(default_factory=list)   # zlib-deflated bytes
+    codec: str = "zlib"                 # entropy codec id (registry name)
+    index_blocks: list = field(default_factory=list)   # entropy-coded bytes
     index_block_nbytes: Optional[np.ndarray] = None    # raw (pre-zlib) sizes
     incomp_values: Optional[np.ndarray] = None         # original dtype
     incomp_block_offsets: Optional[np.ndarray] = None  # int64 (nblocks,)

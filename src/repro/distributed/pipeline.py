@@ -13,15 +13,16 @@ Phases and their parallelization, 1:1 with the paper:
      completed by a fixed-width lax.ppermute edge exchange (MPI_Send/Recv
      analogue, <= 1 block like the paper's <= 2 MB).
   5. bits packing              -- local Pallas kernel over owned blocks.
-  6. ZLIB + file write         -- host stage (entropy coding is not a TPU
-     workload; the paper also runs it on the CPU cores).
+  6. entropy coding + write    -- host stage (not a TPU workload; the paper
+     also runs it on the CPU cores).  Shared with the single-device driver:
+     `core.pipeline.finalize_step` dispatches the pluggable codec
+     (`core.entropy`) over a thread pool.
 
 B must be static for bit-packing, so the pipeline is two jitted stages:
 `analyze` (histogram -> auto-B) and `encode` (indices -> packed blocks).
 """
 from __future__ import annotations
 
-import zlib
 from functools import partial
 from typing import Optional
 
@@ -32,6 +33,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import binning, ratios, select_b
+from repro.core import pipeline as pipe
 from repro.core.types import CompressedStep, NumarckParams
 from repro.distributed import collectives as coll
 from repro.kernels import ops as kops
@@ -205,12 +207,11 @@ class ShardedCompressor:
     def _finalize(self, curr, idx, packed, valid, bb, k_eff, be, n,
                   domain_lo, width, ids_desc, b_auto, est_sizes
                   ) -> CompressedStep:
-        """Host stage: exceptions, ZLIB per block, blob assembly."""
-        p = self.params
-        marker = (1 << bb) - 1
+        """Host stage: hand the device-packed blocks to the shared
+        finalize (`core.pipeline.finalize_step`) -- exceptions, parallel
+        entropy coding, blob assembly.  Byte-identical to the
+        single-device driver by construction."""
         idx = idx.reshape(-1)[:n]
-        incomp_mask = idx == marker
-        incomp_values = np.asarray(curr).reshape(-1)[incomp_mask]
 
         # Valid blocks in global order (shards own contiguous block ranges).
         packed = packed.reshape(-1, packed.shape[-1])
@@ -218,31 +219,13 @@ class ShardedCompressor:
         nblocks = -(-n // be)
         assert rows.shape[0] == nblocks, (rows.shape, nblocks)
         nbytes_block = be * bb // 8
-        blks = []
-        for r in rows:
-            raw = r.astype("<u4").tobytes()[:nbytes_block]
-            blks.append(zlib.compress(raw, p.zlib_level))
-        raw_sizes = np.full(nblocks, nbytes_block, np.int64)
+        raws = [r.astype("<u4").tobytes()[:nbytes_block] for r in rows]
 
-        # Incompressible offsets: exclusive scan of per-block counts
-        # (MPI_Scan analogue done on host metadata).
-        per_block = np.add.reduceat(incomp_mask,
-                                    np.arange(0, n, be)).astype(np.int64)
-        incomp_off = np.concatenate([[0], np.cumsum(per_block)])[:-1]
-
-        sel = ids_desc[:k_eff]
-        centers = (np.float64(domain_lo)
-                   + (sel.astype(np.float64) + 0.5) * np.float64(width))
-        dtype = np.asarray(curr).dtype
-        centers = centers.astype(dtype).astype(np.float64)
-
-        return CompressedStep(
-            n=n, shape=tuple(np.asarray(curr).shape), dtype=str(dtype),
-            b_bits=bb, error_bound=p.error_bound, strategy=p.strategy,
-            reference=p.reference, domain_lo=domain_lo, bin_width=width,
-            centers=centers, block_elems=be, index_blocks=blks,
-            index_block_nbytes=raw_sizes, incomp_values=incomp_values,
-            incomp_block_offsets=incomp_off,
+        enc = pipe.EncodedIndices(idx=idx, b_bits=bb, block_elems=be,
+                                  packed=raws)
+        centers = pipe.topk_centers(ids_desc, k_eff, domain_lo, width)
+        return pipe.finalize_step(
+            np.asarray(curr), enc, centers, domain_lo, width, self.params,
             meta={"b_auto": b_auto, "est_sizes": est_sizes.tolist(),
                   "n_shards": self.n_shards, "pipeline": "sharded"})
 
@@ -275,7 +258,7 @@ class ShardedDecompressor:
         idx = np.concatenate([
             blk.inflate_block(b, min(step.block_elems,
                                      n - i * step.block_elems),
-                              step.b_bits)
+                              step.b_bits, codec=step.codec)
             for i, b in enumerate(step.index_blocks)])
         P_ = self.n_shards
         ln = -(-n // P_)

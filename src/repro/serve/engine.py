@@ -4,18 +4,97 @@ Serves any arch in the zoo.  Requests are padded into a fixed batch; the
 engine jits one prefill and one decode executable per (batch, s_max) and
 streams tokens.  This is the serve-side end-to-end driver (examples/
 serve_lm.py uses it).
+
+Session persistence: `snapshot_cache` / `load_cache` store a decode cache
+(KV or SSM state) in an NCK container through the unified compression
+pipeline's entropy stage (`core.entropy` codec registry, parallel host
+finalize), so a long-lived session's prefix state can be evicted to disk
+and resumed later without re-running prefill.
 """
 from __future__ import annotations
 
+import json
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import NumarckParams, make_anchor
+from repro.core.compress import decode_anchor
+from repro.core.container import NCKReader, NCKWriter
 from repro.models.model import Model
+
+
+def _path_part(k) -> str:
+    # DictKey -> .key, SequenceKey -> .idx, GetAttrKey -> .name
+    for attr in ("key", "idx", "name"):
+        v = getattr(k, attr, None)
+        if v is not None:
+            return str(v)
+    return str(k)
+
+
+def _tree_keys(tree) -> List:
+    flat = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        parts = [_path_part(k) for k in path]
+        if any("/" in p for p in parts):
+            raise ValueError(
+                f"cache key component contains '/': {parts}; rename the "
+                "key or restore with load_cache(path, template=...)")
+        flat.append(("/".join(parts), leaf))
+    return flat
+
+
+def snapshot_cache(cache: Any, path: str, codec: str = "zlib",
+                   level: int = 6) -> Dict[str, int]:
+    """Persist a decode-cache pytree losslessly (entropy-coded anchors)."""
+    params = NumarckParams(codec=codec, zlib_level=level)
+    w = NCKWriter()
+    names = {}
+    orig = comp = 0
+    for i, (key, leaf) in enumerate(sorted(_tree_keys(cache))):
+        arr = np.asarray(leaf)
+        var = f"c{i:04d}"
+        names[var] = key
+        st = make_anchor(arr, params)
+        orig += arr.nbytes
+        comp += st.nbytes
+        w.add_step(var, st)
+    w.add_array("__names__",
+                np.frombuffer(json.dumps(names).encode(), np.uint8))
+    w.write(path)
+    return {"orig_bytes": orig, "comp_bytes": comp}
+
+
+def load_cache(path: str, template: Any = None) -> Any:
+    """Inverse of snapshot_cache; with `template`, leaves are reshaped and
+    cast onto the template pytree (e.g. restoring device placement via a
+    jitted identity afterwards)."""
+    r = NCKReader(path)
+    names = json.loads(bytes(r.read_array("__names__")).decode())
+    flat = {key: decode_anchor(r.read_step(var))
+            for var, key in names.items()}
+    if template is None:
+        root: Dict = {}
+        for key, arr in flat.items():
+            parts = key.split("/")
+            d = root
+            for p in parts[:-1]:
+                d = d.setdefault(p, {})
+            d[parts[-1]] = arr
+        return root
+    keyed = _tree_keys(template)
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for key, leaf in keyed:
+        arr = flat[key].reshape(np.shape(leaf))
+        dtype = getattr(leaf, "dtype", None)
+        leaves.append(arr.astype(dtype) if dtype is not None else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 @dataclass
@@ -30,16 +109,36 @@ class ServeStats:
 
 
 class Engine:
-    def __init__(self, model: Model, params, batch_size: int, s_max: int):
+    def __init__(self, model: Model, params, batch_size: int, s_max: int,
+                 keep_session: bool = False):
+        """`keep_session=True` retains each generate()'s final decode cache
+        on `self.last_cache` for save_session (costs one cache of device
+        memory between requests; off by default)."""
         self.model = model
         self.params = params
         self.B = batch_size
         self.s_max = s_max
+        self.keep_session = keep_session
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, s_max=s_max))
         self._decode = jax.jit(
             lambda p, c, tok, pos: model.decode(p, c, token=tok, pos=pos))
         self.stats = ServeStats()
+        self.last_cache = None           # decode cache of the last generate
+
+    def save_session(self, path: str, codec: str = "zlib") -> Dict[str, int]:
+        """Snapshot the last request batch's decode cache to disk."""
+        if self.last_cache is None:
+            raise RuntimeError(
+                "no session cache retained: construct the Engine with "
+                "keep_session=True and call generate() first")
+        return snapshot_cache(self.last_cache, path, codec=codec)
+
+    def load_session(self, path: str):
+        """Reload a snapshotted decode cache (host arrays, template-shaped
+        if a previous generate defined one)."""
+        self.last_cache = load_cache(path, template=self.last_cache)
+        return self.last_cache
 
     def generate(self, prompts: np.ndarray, max_new: int = 16,
                  greedy: bool = True, key=None) -> np.ndarray:
@@ -67,7 +166,9 @@ class Engine:
         jax.block_until_ready(tok)
         self.stats.decode_s += time.perf_counter() - t0
         self.stats.tokens_out += max_new * self.B
+        if self.keep_session:
+            self.last_cache = cache
         return np.stack(out, axis=1)
 
 
-__all__ = ["Engine", "ServeStats"]
+__all__ = ["Engine", "ServeStats", "snapshot_cache", "load_cache"]

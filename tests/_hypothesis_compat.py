@@ -1,0 +1,119 @@
+"""Deterministic fallback for `hypothesis` when it is not installed.
+
+The container image has no `hypothesis`; rather than losing every test in
+a module to a collection error, test files import through:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+
+The shim replays each property over a bounded set of examples drawn from
+a per-test seeded RNG, with boundary values (min/max/zero, min/max sizes)
+issued first.  No shrinking, no database -- just deterministic coverage so
+the suite keeps its signal.  Installing the real hypothesis
+(requirements-dev.txt) upgrades these tests in place.
+"""
+from __future__ import annotations
+
+import zlib as _zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A strategy is a function (rng, example_index) -> value."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng, i):
+        return self._draw(rng, i)
+
+    def map(self, f):
+        return _Strategy(lambda rng, i: f(self._draw(rng, i)))
+
+
+class _St:
+    @staticmethod
+    def floats(min_value=-1e9, max_value=1e9, allow_nan=False,
+               allow_infinity=False, width=64):
+        cast = np.float32 if width == 32 else np.float64
+        bounds = [cast(min_value), cast(max_value), cast(0.0)]
+
+        def draw(rng, i):
+            if i < len(bounds):
+                v = bounds[i]
+            else:
+                v = cast(rng.uniform(min_value, max_value))
+            return float(np.clip(v, min_value, max_value))
+        return _Strategy(draw)
+
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        bounds = [min_value, max_value]
+
+        def draw(rng, i):
+            if i < len(bounds):
+                return bounds[i]
+            return int(rng.integers(min_value, max_value + 1))
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+
+        def draw(rng, i):
+            if i < len(seq):
+                return seq[i]
+            return seq[int(rng.integers(len(seq)))]
+        return _Strategy(draw)
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10):
+        def draw(rng, i):
+            if i == 0:
+                size = min_size
+            elif i == 1:
+                size = max_size
+            else:
+                size = int(rng.integers(min_size, max_size + 1))
+            return [elem.example(rng, int(rng.integers(1 << 16)))
+                    for _ in range(size)]
+        return _Strategy(draw)
+
+
+st = _St()
+
+
+def settings(max_examples=None, deadline=None, **_ignored):
+    def deco(fn):
+        if max_examples is not None:
+            fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        # NOTE: deliberately no functools.wraps -- pytest would follow
+        # __wrapped__ to the inner signature and demand fixtures for the
+        # property arguments.  The wrapper must look zero-argument.
+        def wrapper():
+            n = min(getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES),
+                    _DEFAULT_MAX_EXAMPLES)
+            seed = _zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                fn(*(s.example(rng, i) for s in strategies))
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+__all__ = ["given", "settings", "st"]

@@ -2,7 +2,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:             # image without hypothesis: deterministic shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import binning, dp_oracle, ratios
 

@@ -1,7 +1,11 @@
 """Core NUMARCK behaviour: round trips, error bounds, strategies, auto-B."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:             # image without hypothesis: deterministic shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import (NumarckParams, TemporalCompressor,
                         TemporalDecompressor, compress_series, compress_step,

@@ -1,0 +1,158 @@
+"""Entropy stage: codec registry, parallel finalize, codec persistence."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (NCKReader, NCKWriter, NumarckParams, codec_names,
+                        compress_series, compress_step, decompress_series,
+                        decompress_step, get_codec, make_anchor,
+                        mean_error_rate)
+from repro.core import entropy
+from repro.core.compress import decode_anchor
+
+RNG = np.random.default_rng(11)
+CODECS = ["zlib", "raw", "lzma", "bz2"]
+
+
+def _series(shape=(96, 40), steps=4, vol=0.01, dtype=np.float32):
+    base = RNG.normal(1.0, 0.5, shape).astype(dtype)
+    out = [base]
+    for _ in range(steps - 1):
+        out.append((out[-1] * (1 + vol * RNG.standard_normal(shape)))
+                   .astype(dtype))
+    return out
+
+
+def test_registry_contents():
+    assert set(CODECS) <= set(codec_names())
+    for name in CODECS:
+        c = get_codec(name)
+        blob = c.compress(b"hello entropy stage" * 100, 6)
+        assert c.decompress(blob) == b"hello entropy stage" * 100
+    with pytest.raises(ValueError):
+        get_codec("snappy")
+
+
+def test_unknown_codec_rejected_by_params():
+    with pytest.raises(ValueError):
+        NumarckParams(codec="nope")
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_round_trip_every_codec(codec):
+    series = _series()
+    p = NumarckParams(error_bound=1e-3, codec=codec)
+    steps = compress_series(series, p)
+    assert all(s.codec == codec for s in steps)
+    recon = decompress_series(steps)
+    for orig, rec in zip(series, recon):
+        assert mean_error_rate(orig, rec) <= 1e-3 * 1.01
+
+
+def test_parallel_finalize_byte_identical():
+    """Thread-pool dispatch must not change a single byte of any blob."""
+    raws = [RNG.integers(0, 50, 1 << 16).astype(np.uint8).tobytes()
+            for _ in range(64)]
+    for codec in ("zlib", "raw", "bz2"):
+        serial = entropy.compress_blocks(raws, codec=codec, parallel=False)
+        parallel = entropy.compress_blocks(raws, codec=codec, parallel=True)
+        assert serial == parallel
+        for raw, blob in zip(raws, serial):
+            assert entropy.decompress_block(blob, codec) == raw
+
+
+def test_parallel_step_equals_serial_step():
+    series = _series(shape=(512, 130))
+    prev, curr = series[0], series[1]
+    a = compress_step(prev, curr, NumarckParams(parallel_entropy=False,
+                                                block_bytes=2048))
+    b = compress_step(prev, curr, NumarckParams(parallel_entropy=True,
+                                                block_bytes=2048))
+    assert a.index_blocks == b.index_blocks
+    np.testing.assert_array_equal(a.centers, b.centers)
+    np.testing.assert_array_equal(a.incomp_values, b.incomp_values)
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_container_round_trips_codec(tmp_path, codec):
+    series = _series()
+    p = NumarckParams(error_bound=1e-3, codec=codec, block_bytes=4096)
+    steps = compress_series(series, p)
+    path = os.path.join(tmp_path, f"{codec}.nck")
+    w = NCKWriter()
+    for i, st in enumerate(steps):
+        w.add_step(f"v_it{i:05d}", st)
+    w.write(path)
+
+    r = NCKReader(path)
+    prev = None
+    for i, orig_step in enumerate(steps):
+        st = r.read_step(f"v_it{i:05d}")
+        assert st.codec == codec
+        rec_file = decompress_step(st, prev)
+        rec_mem = decompress_step(orig_step, prev)
+        np.testing.assert_array_equal(rec_file, rec_mem)  # bit-exact
+        prev = rec_file
+
+
+def test_legacy_header_defaults_to_zlib(tmp_path):
+    """Files written before the codec field existed must load as zlib."""
+    series = _series(steps=2)
+    steps = compress_series(series, NumarckParams())
+    path = os.path.join(tmp_path, "legacy.nck")
+    w = NCKWriter()
+    w.add_step("v", steps[1])
+    # simulate a pre-codec writer by stripping the attribute
+    del w._vars["v_info"]["attributes"]["codec"]
+    w.write(path)
+    st = NCKReader(path).read_step("v")
+    assert st.codec == "zlib"
+    np.testing.assert_array_equal(decompress_step(st, series[0]),
+                                  decompress_step(steps[1], series[0]))
+
+
+def test_overlapped_series_identical_to_serial():
+    series = _series(steps=6)
+    p = NumarckParams(error_bound=1e-3)
+    serial = compress_series(series, p, overlap=False)
+    overlapped = compress_series(series, p, overlap=True)
+    assert len(serial) == len(overlapped)
+    for a, b in zip(serial, overlapped):
+        assert a.index_blocks == b.index_blocks
+        assert a.b_bits == b.b_bits
+        np.testing.assert_array_equal(a.centers, b.centers)
+        np.testing.assert_array_equal(a.incomp_values, b.incomp_values)
+        np.testing.assert_array_equal(a.incomp_block_offsets,
+                                      b.incomp_block_offsets)
+
+
+@pytest.mark.parametrize("codec", ["zlib", "raw"])
+def test_tiny_and_empty_arrays(codec):
+    p = NumarckParams(error_bound=1e-3, codec=codec)
+    # single-element series round-trips through anchor + delta
+    tiny = [np.array([1.25], np.float32), np.array([1.27], np.float32)]
+    rec = decompress_series(compress_series(tiny, p))
+    assert abs(rec[1][0] - 1.27) <= 1.27 * 1e-3 * 1.01
+    # empty anchor survives the entropy stage
+    empty = np.zeros((0,), np.float32)
+    st = make_anchor(empty, p)
+    assert st.codec == codec
+    assert decode_anchor(st).size == 0
+
+
+def test_serve_cache_snapshot_round_trip(tmp_path):
+    from repro.serve.engine import load_cache, snapshot_cache
+    cache = {"layer0": {"k": RNG.normal(size=(2, 8, 4)).astype(np.float32),
+                        "v": RNG.normal(size=(2, 8, 4)).astype(np.float32)},
+             "pos": np.arange(8, dtype=np.int32)}
+    path = os.path.join(tmp_path, "session.nck")
+    stats = snapshot_cache(cache, path, codec="zlib")
+    assert stats["orig_bytes"] > 0
+    out = load_cache(path)
+    np.testing.assert_array_equal(out["layer0"]["k"], cache["layer0"]["k"])
+    np.testing.assert_array_equal(out["layer0"]["v"], cache["layer0"]["v"])
+    np.testing.assert_array_equal(out["pos"], cache["pos"])
+    # template-shaped restore
+    out2 = load_cache(path, template=cache)
+    np.testing.assert_array_equal(out2["pos"], cache["pos"])
