@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-entropy bench
+.PHONY: test test-fast test-dist bench-entropy bench
 
 # Tier-1 verify (full suite).
 test:
@@ -10,6 +10,14 @@ test:
 # Fast loop: skip the slow end-to-end markers.
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
+
+# Distributed + checkpoint suite under a 2-device host-platform mesh.
+# (The sharded tests re-exec themselves with their own device count; the
+# flag here covers any test that runs a mesh in-process.)
+test-dist:
+	XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+	$(PY) -m pytest -q tests/test_distributed.py tests/test_checkpoint.py \
+	    tests/test_sharding.py tests/test_elastic.py
 
 # Serial vs. parallel host entropy stage across codecs / block sizes.
 bench-entropy:

@@ -1,7 +1,17 @@
 """Paper Figs. 9-12 + Tables 4/5/6: compression ratios, incompressible
 ratios, and compress/decompress times for NUMARCK vs ISABELA vs ZFP vs ZLIB
-on the four dataset families (synthetic analogues, DESIGN.md data layer)."""
+on the four dataset families (synthetic analogues, DESIGN.md data layer).
+
+Also: the sharded overlapped-streaming wall-clock comparison (paper
+Sec. IV-C compute/IO overlap at rank scale) -- run in a subprocess so the
+2-device host-platform mesh doesn't leak into the caller's jax config.
+"""
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 
@@ -66,4 +76,74 @@ def run(datasets=("sedov", "stir", "asr", "cmip")) -> list:
         t_zl, blob_l = timeit(zlib_lossless.compress, curr, repeat=1)
         rows.append((f"fig9_12_cr_zlib_{name}", t_zl * 1e6,
                      f"CR={nbytes/blob_l.nbytes:.2f} ME=0"))
+    rows.extend(run_sharded_overlap())
+    return rows
+
+
+_OVERLAP_BENCH = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import time
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import NumarckParams
+    from repro.distributed.pipeline import ShardedCompressor
+
+    rng = np.random.default_rng(5)
+    n = 4_000_000                     # 16 MB/step f32
+    steps = 8
+    base = rng.normal(1.0, 0.5, n).astype(np.float32)
+    series = [base]
+    for _ in range(steps - 1):
+        series.append((series[-1]
+                       * (1 + 0.01 * rng.standard_normal(n)))
+                      .astype(np.float32))
+
+    params = NumarckParams(error_bound=1e-3, zlib_level=9)
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+
+    def run(overlap):
+        sc = ShardedCompressor(mesh, "data", params, use_pallas=False,
+                               overlap=overlap)
+        sc.compress_series(series)    # warm the jit caches + pools
+        t0 = time.perf_counter()
+        blobs = sc.compress_series(series)
+        dt = time.perf_counter() - t0
+        sc.close()
+        return dt, blobs
+
+    t_sync, b_sync = run(False)
+    t_over, b_over = run(True)
+    assert all(a.index_blocks == b.index_blocks
+               for a, b in zip(b_sync, b_over))
+    mb = n * 4 * steps / (1 << 20)
+    print(f"RESULT sync_s={t_sync:.4f} overlap_s={t_over:.4f} "
+          f"speedup={t_sync / max(t_over, 1e-9):.3f} mb={mb:.0f}")
+""")
+
+
+def run_sharded_overlap() -> list:
+    """Sharded overlap=False vs overlap=True on a multi-step series under a
+    host-platform 2-device mesh (byte-equality asserted in-process)."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    res = subprocess.run([sys.executable, "-c", _OVERLAP_BENCH], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    rows: list[Row] = []
+    for line in res.stdout.splitlines():
+        if line.startswith("RESULT "):
+            kv = dict(p.split("=") for p in line.split()[1:])
+            rows.append(("sharded_stream/sync",
+                         float(kv["sync_s"]) * 1e6,
+                         f"MBps={float(kv['mb'])/float(kv['sync_s']):.0f}"))
+            rows.append(("sharded_stream/overlap",
+                         float(kv["overlap_s"]) * 1e6,
+                         f"MBps={float(kv['mb'])/float(kv['overlap_s']):.0f}"
+                         f" speedup={kv['speedup']}x"))
+    if not rows:
+        rows.append(("sharded_stream/overlap", 0.0,
+                     f"FAILED rc={res.returncode}"))
     return rows

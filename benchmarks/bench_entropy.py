@@ -38,6 +38,41 @@ def synth_blocks(total: int, block: int) -> list:
     return [raw[s:s + block] for s in range(0, total, block)]
 
 
+def synth_payloads(total: int) -> dict:
+    """Payload families spanning the compressibility range the auto codec
+    discriminates on: redundant (-> lzma), zipf index-like (-> zlib),
+    random (-> raw)."""
+    rng = np.random.default_rng(1)
+    zipf = (rng.zipf(1.6, total).astype(np.uint64) % 251).astype(np.uint8)
+    return {
+        "redundant": np.zeros(total, np.uint8).tobytes(),
+        "zipf-index": zipf.tobytes(),
+        "random": rng.integers(0, 256, total).astype(np.uint8).tobytes(),
+    }
+
+
+def bench_auto_codec(rows: list, block: int = 1 << 20,
+                     total: int = 8 << 20):
+    """Auto pick vs every fixed codec: report the (ratio, time) gap between
+    the adaptive choice and the best fixed codec per payload family."""
+    for family, raw in synth_payloads(total).items():
+        raws = [raw[s:s + block] for s in range(0, total, block)]
+        pick = entropy.choose_codec(raws)
+        results = {}
+        for codec in ("zlib", "raw", "lzma"):
+            t, out = timeit(entropy.compress_blocks, raws, codec=codec,
+                            parallel=True, repeat=1)
+            results[codec] = (t, sum(len(b) for b in out))
+        best_ratio = min(results, key=lambda c: results[c][1])
+        t_pick, sz_pick = results[pick]
+        _, sz_best = results[best_ratio]
+        gap = sz_pick / max(sz_best, 1)
+        rows.append((f"entropy/auto/{family}", t_pick * 1e6,
+                     f"pick={pick} best_fixed={best_ratio} "
+                     f"size_vs_best={gap:.2f}x "
+                     f"CR={total / max(sz_pick, 1):.1f}"))
+
+
 def main():
     rows = []
     for codec in ("zlib", "raw", "bz2", "lzma"):
@@ -56,6 +91,7 @@ def main():
                          f"{mb / t_ser:.0f}MB/s"))
             rows.append((f"{tag}/parallel", t_par * 1e6,
                          f"{mb / t_par:.0f}MB/s speedup={speedup:.2f}x"))
+    bench_auto_codec(rows)
     emit(rows)
 
 

@@ -11,16 +11,22 @@ Layout:
     <dir>/MANIFEST.json        {steps: [...], last_good: int, params: ...}
 
 Fault tolerance:
-  * atomic rename on both .nck and manifest (no torn checkpoints)
+  * atomic rename on both .nck and manifest, fsync'd before the rename --
+    the manifest is only committed AFTER its step file is durable, so a
+    crash at any point leaves a manifest that references complete files
+    only (tested)
   * restore walks back past corrupted/incomplete files (tested)
   * retention keeps the last `keep` checkpoints plus their anchors
-  * optional async save thread (overlap with compute)
+  * async saves ride the same double-buffered machinery as the overlapped
+    compression stream: the caller thread snapshots the tree to host and
+    returns; a single background worker runs compress+write, with at most
+    two saves in flight (one executing + one queued) and a `wait()`
+    barrier
 """
 from __future__ import annotations
 
 import json
 import os
-import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -30,14 +36,20 @@ from repro.core import (NumarckParams, compress_step, decompress_step,
                         make_anchor)
 from repro.core.compress import decode_anchor
 from repro.core.container import NCKReader, NCKWriter
+from repro.core.overlap import FinalizeQueue
 
 
-def _flatten(tree, materialize: bool = True) -> Dict[str, np.ndarray]:
+def _flatten(tree, snapshot: bool = False) -> Dict[str, np.ndarray]:
+    """Host copy of a pytree.  `snapshot=True` forces a private copy even
+    for numpy leaves (async saves read the arrays on another thread after
+    the caller may have mutated them in place)."""
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                        for k in path)
-        flat[key] = np.asarray(leaf) if materialize else leaf
+        arr = np.asarray(leaf)
+        flat[key] = np.array(arr, copy=True) if (
+            snapshot and isinstance(leaf, np.ndarray)) else arr
     return flat
 
 
@@ -60,7 +72,9 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self._recon_state: Dict[str, np.ndarray] = {}
         self._save_count = 0
-        self._thread: Optional[threading.Thread] = None
+        # Single worker serializes compress+write (manifest ordering stays
+        # trivially correct); the queue bounds in-flight saves at two.
+        self._q = FinalizeQueue(overlap=True, name="ckpt-save")
         self._treedef = None
 
     # ------------------------------------------------------------------ io
@@ -81,36 +95,41 @@ class CheckpointManager:
         tmp = self._manifest_path() + ".tmp"
         with open(tmp, "w") as f:
             json.dump(m, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, self._manifest_path())
 
     # ---------------------------------------------------------------- save
     def save(self, step: int, tree: Any, blocking: Optional[bool] = None):
-        """Checkpoint a pytree (params/opt state/...); returns stats dict."""
-        if self._thread is not None:
-            self._thread.join()          # one in-flight save at a time
-            self._thread = None
-        flat = _flatten(tree)            # host copy happens on caller thread
+        """Checkpoint a pytree (params/opt state/...).
+
+        Blocking saves return the stats dict.  Async saves snapshot the
+        tree to host on the caller thread and return a Future of the stats
+        dict immediately; compress+write run on the background worker,
+        double-buffered (at most two saves in flight -- the third `save`
+        call blocks until the oldest completes, bounding host memory at
+        ~two checkpoints).  `wait()` is the barrier.
+        """
         blocking = (not self.async_save) if blocking is None else blocking
+        flat = _flatten(tree, snapshot=not blocking)  # caller-thread copy
         if blocking:
+            self.wait()                  # keep manifest commit order
             return self._save_inner(step, flat)
-        self._thread = threading.Thread(
-            target=self._save_inner, args=(step, flat), daemon=True)
-        self._thread.start()
-        return {"async": True}
+        return self._q.submit(self._save_inner, step, flat)
 
     def wait(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        """Barrier: block until every in-flight async save is durable;
+        re-raises the first background exception, if any."""
+        self._q.flush()
 
     def _save_inner(self, step: int, flat: Dict[str, np.ndarray]):
         is_anchor = (self._save_count % self.anchor_every == 0
                      or not self._recon_state)
-        self._save_count += 1
         w = NCKWriter()
         stats = {"step": step, "anchor": is_anchor, "orig_bytes": 0,
                  "comp_bytes": 0, "codec": self.params.codec}
         names = {}
+        new_recon: Dict[str, np.ndarray] = {}
         for i, (key, arr) in enumerate(sorted(flat.items())):
             var = f"t{i:04d}"
             names[var] = key
@@ -122,10 +141,10 @@ class CheckpointManager:
                         or key not in self._recon_state)
             if lossless:
                 st = make_anchor(arr, self.params)
-                self._recon_state[key] = arr.copy()
+                new_recon[key] = arr.copy()
             else:
                 st = compress_step(self._recon_state[key], arr, self.params)
-                self._recon_state[key] = decompress_step(
+                new_recon[key] = decompress_step(
                     st, self._recon_state[key])
             stats["comp_bytes"] += st.nbytes
             w.add_step(var, st)
@@ -133,6 +152,12 @@ class CheckpointManager:
                     np.frombuffer(json.dumps(names).encode(), np.uint8),
                     attrs={"step": step})
         w.write(self._step_path(step))
+        # Commit the in-memory delta chain only after the step file is
+        # durable: a save that dies mid-write must leave the next delta
+        # encoding against the last *persisted* state, or every subsequent
+        # delta would silently chain off a ghost step.
+        self._recon_state.update(new_recon)
+        self._save_count += 1
 
         m = self._read_manifest()
         m["steps"] = sorted(set(m["steps"] + [step]))
@@ -193,6 +218,7 @@ class CheckpointManager:
         """(step, tree) from the newest valid checkpoint; walks back past
         corrupt files.  With `template`, leaves are reshaped/cast onto the
         template pytree (elastic restore does its resharding there)."""
+        self.wait()                      # drain in-flight async saves
         m = self._read_manifest()
         for step in reversed(m["steps"]):
             try:

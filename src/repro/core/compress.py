@@ -20,7 +20,7 @@ the blob of step i is never on the critical path of step i+1.
 from __future__ import annotations
 
 from collections import deque
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import Future
 from dataclasses import dataclass
 from functools import partial
 from typing import List, Optional
@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core import binning, blocks, entropy, ratios, select_b
 from repro.core import pipeline as pipe
+from repro.core.overlap import FinalizeQueue
 from repro.core.types import (CompressedStep, NumarckParams, REF_ORIGINAL,
                               REF_RECONSTRUCTED, STRATEGY_EQUAL,
                               STRATEGY_KMEANS, STRATEGY_LOG, STRATEGY_TOPK,
@@ -199,19 +200,10 @@ class TemporalCompressor:
         self.params = params
         self.overlap = overlap
         self._state: Optional[np.ndarray] = None
-        self._ex = (ThreadPoolExecutor(max_workers=1,
-                                       thread_name_prefix="finalize")
-                    if overlap else None)
-
-    def _submit(self, fn, *args) -> "Future[CompressedStep]":
-        if self._ex is not None:
-            return self._ex.submit(fn, *args)
-        f: Future = Future()
-        try:
-            f.set_result(fn(*args))
-        except BaseException as e:  # noqa: BLE001 -- mirror executor behavior
-            f.set_exception(e)
-        return f
+        # Bounded at two in-flight finalizes (one executing + one queued),
+        # so direct add_async callers get the same ~2-step host-memory
+        # bound as compress_series / the sharded driver.
+        self._q = FinalizeQueue(overlap)
 
     def add_async(self, arr: np.ndarray) -> "Future[CompressedStep]":
         """Device-encode `arr` now; return a future of the finalized step.
@@ -222,7 +214,8 @@ class TemporalCompressor:
         arr = np.asarray(arr)
         if self._state is None:
             self._state = arr.copy()
-            return self._submit(pipe.finalize_anchor, arr.copy(), self.params)
+            return self._q.submit(pipe.finalize_anchor, arr.copy(),
+                                  self.params)
         dev = encode_device(self._state, arr, self.params)
         if self.params.reference == REF_RECONSTRUCTED:
             self._state = pipe.reconstruct_from_indices(
@@ -231,24 +224,21 @@ class TemporalCompressor:
             self._state = arr.copy()
         # The background finalize reads `arr` (exception values); snapshot
         # it so callers may reuse/mutate their buffer immediately.
-        curr = arr.copy() if self._ex is not None else arr
-        return self._submit(pipe.finalize_step, curr, dev.enc, dev.centers,
-                            dev.domain_lo, dev.width, self.params, dev.meta)
+        curr = arr.copy() if self.overlap else arr
+        return self._q.submit(pipe.finalize_step, curr, dev.enc,
+                              dev.centers, dev.domain_lo, dev.width,
+                              self.params, dev.meta)
 
     def add(self, arr: np.ndarray) -> CompressedStep:
         return self.add_async(arr).result()
 
     def flush(self):
-        """Block until every in-flight finalize has completed."""
-        if self._ex is not None:
-            self._ex.shutdown(wait=True)
-            self._ex = ThreadPoolExecutor(max_workers=1,
-                                          thread_name_prefix="finalize")
+        """Block until every in-flight finalize has completed (re-raises
+        the first background exception, if any)."""
+        self._q.flush()
 
     def close(self):
-        if self._ex is not None:
-            self._ex.shutdown(wait=True)
-            self._ex = None
+        self._q.close()
 
     def reset(self):
         self._state = None

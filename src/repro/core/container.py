@@ -111,6 +111,8 @@ class NCKWriter:
             for raw in self._sections:
                 f.write(raw)
                 f.write(b"\0" * _pad(len(raw)))
+            f.flush()
+            os.fsync(f.fileno())   # durable BEFORE the rename publishes it
         os.replace(tmp, path)  # atomic publish (fault tolerance)
 
 

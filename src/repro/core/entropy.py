@@ -13,7 +13,16 @@ module is our version of that idea:
     compressor (single-device, sharded, anchors).  Blocks are batched and
     dispatched over a shared ``ThreadPoolExecutor``; zlib/bz2/lzma all
     release the GIL on the C side, so threads give real parallel speedup
-    (see ``benchmarks/bench_entropy.py``).
+    (see ``benchmarks/bench_entropy.py``).  Codecs that *hold* the GIL
+    (``Codec.holds_gil = True``) are dispatched over a forked
+    ``ProcessPoolExecutor`` instead, with a transparent serial fallback
+    when process pools are unavailable.
+  * the ``"auto"`` pseudo-codec id -- :func:`resolve_codec` probes a
+    sampled prefix of the payload with a fast zlib pass and picks
+    raw / zlib / lzma from the measured compressibility (the per-chunk
+    adaptive codec choice of LCP, arXiv:2411.00761).  ``"auto"`` is a
+    *parameter-level* id only: finalize resolves it per step and the NCK
+    container always persists a concrete registry name.
 
 Batching heuristic (benchmarked in bench_entropy.py): tasks are groups of
 consecutive blocks sized so that (a) every worker gets work and (b) each
@@ -24,10 +33,11 @@ from __future__ import annotations
 
 import bz2
 import lzma
+import multiprocessing
 import os
 import threading
 import zlib
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional, Sequence
 
 # --------------------------------------------------------------------- codecs
@@ -37,6 +47,10 @@ class Codec:
     """Entropy codec interface: bytes -> bytes, self-inverse via decompress."""
 
     name: str = "abstract"
+    # Pure-python codecs that never release the GIL get no speedup from the
+    # thread pool; mark them and compress_blocks dispatches them over a
+    # forked process pool instead.
+    holds_gil: bool = False
 
     def compress(self, raw: bytes, level: int) -> bytes:
         raise NotImplementedError
@@ -92,6 +106,7 @@ class Bz2Codec(Codec):
 
 
 DEFAULT_CODEC = "zlib"
+AUTO_CODEC = "auto"
 _REGISTRY: Dict[str, Codec] = {}
 
 
@@ -113,8 +128,61 @@ def codec_names() -> List[str]:
     return sorted(_REGISTRY)
 
 
+def validate_codec_id(name: str) -> str:
+    """Accept any registered codec plus the ``"auto"`` pseudo-id.
+
+    Parameters may carry ``"auto"``; persisted steps never do (finalize
+    resolves it to a concrete registry name first).
+    """
+    if name != AUTO_CODEC:
+        get_codec(name)                  # raises on unknown codec
+    return name
+
+
 for _c in (ZlibCodec(), RawCodec(), LzmaCodec(), Bz2Codec()):
     register_codec(_c)
+
+# ------------------------------------------------------ adaptive selection
+
+# Probe: deflate a bounded prefix at level 1 (cheap, ~100 MB/s) and read the
+# achieved ratio.  Thresholds picked from benchmarks/bench_entropy.py on
+# zipf index tables vs random bytes: near-incompressible payloads waste
+# zlib time for <3% size, while highly redundant payloads close most of
+# the lzma-vs-zlib gap at acceptable cost.
+_AUTO_SAMPLE_BYTES = 64 << 10
+_AUTO_RAW_THRESHOLD = 0.95       # probe ratio above this -> store raw
+_AUTO_LZMA_THRESHOLD = 0.30      # probe ratio below this -> lzma pays off
+# lzma is 10-40x slower than zlib; cap the payload size we are willing to
+# hand it so finalize latency stays bounded on huge steps.
+_AUTO_LZMA_MAX_BYTES = 256 << 20
+
+
+def choose_codec(raws: Sequence[bytes], level: int = 6) -> str:
+    """Pick a concrete codec from the measured compressibility of a sampled
+    block prefix (LCP-style per-chunk adaptivity, arXiv:2411.00761)."""
+    sample = b""
+    for r in raws:
+        if r:
+            sample = r[:_AUTO_SAMPLE_BYTES]
+            break
+    if not sample:
+        return DEFAULT_CODEC
+    ratio = len(zlib.compress(sample, 1)) / len(sample)
+    if ratio >= _AUTO_RAW_THRESHOLD:
+        return "raw"
+    total = sum(len(r) for r in raws)
+    if ratio <= _AUTO_LZMA_THRESHOLD and total <= _AUTO_LZMA_MAX_BYTES:
+        return "lzma"
+    return DEFAULT_CODEC
+
+
+def resolve_codec(codec: str, raws: Sequence[bytes], level: int = 6) -> str:
+    """Map the parameter-level codec id to the concrete one used for this
+    payload.  Identity for everything but ``"auto"``."""
+    if codec == AUTO_CODEC:
+        return choose_codec(raws, level)
+    get_codec(codec)
+    return codec
 
 # ----------------------------------------------------------- parallel stage
 
@@ -122,9 +190,14 @@ for _c in (ZlibCodec(), RawCodec(), LzmaCodec(), Bz2Codec()):
 _MIN_PARALLEL_BYTES = 1 << 20
 # Batch consecutive blocks until each task carries at least this much.
 _TARGET_TASK_BYTES = 2 << 20
+# Per-task ceiling for process-pool results; beyond it the pool is marked
+# broken and the codec degrades to the (serializing but correct) threads.
+_PROC_RESULT_TIMEOUT_S = 120.0
 
 _pool_lock = threading.Lock()
 _pool: Optional[ThreadPoolExecutor] = None
+_proc_pool: Optional[ProcessPoolExecutor] = None
+_proc_pool_broken = False
 
 
 def _shared_pool() -> ThreadPoolExecutor:
@@ -136,6 +209,46 @@ def _shared_pool() -> ThreadPoolExecutor:
             _pool = ThreadPoolExecutor(max_workers=workers,
                                        thread_name_prefix="entropy")
         return _pool
+
+
+def _shared_proc_pool() -> Optional[ProcessPoolExecutor]:
+    """Forked process pool for GIL-holding codecs.
+
+    Fork (not spawn) so workers inherit the codec registry, including
+    codecs registered after import; codecs registered after the pool's
+    first use are not visible to workers -- register before compressing.
+    Returns None where fork is unavailable (callers fall back to the
+    thread pool, which is correct, just not parallel).
+    """
+    global _proc_pool, _proc_pool_broken
+    with _pool_lock:
+        if _proc_pool is None and not _proc_pool_broken:
+            try:
+                ctx = multiprocessing.get_context("fork")
+                workers = min(8, os.cpu_count() or 1)
+                _proc_pool = ProcessPoolExecutor(max_workers=workers,
+                                                 mp_context=ctx)
+            except (ValueError, OSError):
+                _proc_pool_broken = True
+        return _proc_pool
+
+
+def _retire_proc_pool(px: ProcessPoolExecutor):
+    """Permanently disable process dispatch and tear the pool down (without
+    waiting on possibly-wedged workers)."""
+    global _proc_pool, _proc_pool_broken
+    with _pool_lock:
+        _proc_pool_broken = True
+        if _proc_pool is px:
+            _proc_pool = None
+    px.shutdown(wait=False, cancel_futures=True)
+
+
+def _compress_batch(codec_name: str, raws: List[bytes],
+                    level: int) -> List[bytes]:
+    """Process-pool task body: resolve the codec by name in the worker."""
+    c = get_codec(codec_name)
+    return [c.compress(r, level) for r in raws]
 
 
 def _task_plan(sizes: Sequence[int], workers: int) -> List[range]:
@@ -162,11 +275,41 @@ def compress_blocks(raws: Sequence[bytes], codec: str = DEFAULT_CODEC,
     otherwise.  Output is byte-identical to the serial loop in both modes --
     per-block codec streams are independent.
     """
+    codec = resolve_codec(codec, raws, level)
     c = get_codec(codec)
     sizes = [len(r) for r in raws]
     if (not parallel or len(raws) < 2
             or sum(sizes) < _MIN_PARALLEL_BYTES):
         return [c.compress(r, level) for r in raws]
+
+    if c.holds_gil and pool is None:
+        # GIL-holding codec: threads would serialize, so fan batches out to
+        # forked worker processes instead (payload ships by pickle; the
+        # >= _TARGET_TASK_BYTES batching keeps the IPC amortized).  Workers
+        # run pure-python codec code only -- never jax -- which keeps the
+        # fork-after-jax-init hazard theoretical; the result timeout is the
+        # backstop: a wedged child degrades us to the thread path instead
+        # of hanging the finalize stage.
+        px = _shared_proc_pool()
+        if px is not None:
+            workers = getattr(px, "_max_workers", os.cpu_count() or 1)
+            plan = _task_plan(sizes, workers)
+            try:
+                futs = [px.submit(_compress_batch, codec,
+                                  [raws[i] for i in rng], level)
+                        for rng in plan]
+                out = []
+                for f in futs:
+                    out.extend(f.result(timeout=_PROC_RESULT_TIMEOUT_S))
+                return out
+            except Exception:
+                # Sandboxed fork, wedged worker, codec error in the child:
+                # retire the pool entirely (a wedged pool would otherwise
+                # re-stall every later call) and degrade to threads.  If
+                # the codec itself is at fault the thread path below
+                # re-raises the same error to the caller.
+                _retire_proc_pool(px)
+
     ex = pool or _shared_pool()
     workers = getattr(ex, "_max_workers", os.cpu_count() or 1)
 
@@ -195,5 +338,7 @@ def decompress_blocks(blobs: Sequence[bytes], codec: str = DEFAULT_CODEC,
 
 
 __all__ = ["Codec", "ZlibCodec", "RawCodec", "LzmaCodec", "Bz2Codec",
-           "DEFAULT_CODEC", "register_codec", "get_codec", "codec_names",
-           "compress_blocks", "decompress_block", "decompress_blocks"]
+           "DEFAULT_CODEC", "AUTO_CODEC", "register_codec", "get_codec",
+           "codec_names", "validate_codec_id", "choose_codec",
+           "resolve_codec", "compress_blocks", "decompress_block",
+           "decompress_blocks"]

@@ -1,0 +1,68 @@
+"""Double-buffer discipline shared by every overlapped host stage.
+
+The overlapped compressors (``TemporalCompressor``, ``ShardedCompressor``)
+and the async checkpoint writer all follow the same pattern: one background
+worker thread, at most two tasks in flight (one executing + one queued),
+submit blocks past the bound so host memory stays bounded regardless of
+stream length, and completed futures are ``.result()``-ed on the next
+submit/flush so background failures surface instead of vanishing with
+their Future.  This is that pattern, once.
+"""
+from __future__ import annotations
+
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Deque, Optional
+
+
+class FinalizeQueue:
+    """Bounded single-worker task queue with an inline (serial) mode.
+
+    With ``overlap=False`` every ``submit`` runs the callable inline and
+    returns an already-resolved Future -- identical interface, serial
+    semantics, so callers never branch on the mode.
+    """
+
+    def __init__(self, overlap: bool, name: str = "finalize",
+                 max_in_flight: int = 2):
+        self.overlap = overlap
+        self._name = name
+        self._max = max(1, max_in_flight)
+        self._ex: Optional[ThreadPoolExecutor] = None
+        self._pending: Deque[Future] = deque()
+
+    def submit(self, fn, *args) -> Future:
+        if not self.overlap:
+            f: Future = Future()
+            try:
+                f.set_result(fn(*args))
+            except BaseException as e:  # noqa: BLE001 -- mirror executor
+                f.set_exception(e)
+            return f
+        # .result() on completed futures too: a failed background task must
+        # surface on the next submit/flush, not vanish with its Future.
+        while self._pending and self._pending[0].done():
+            self._pending.popleft().result()
+        while len(self._pending) >= self._max:
+            self._pending.popleft().result()
+        if self._ex is None:
+            self._ex = ThreadPoolExecutor(max_workers=1,
+                                          thread_name_prefix=self._name)
+        f = self._ex.submit(fn, *args)
+        self._pending.append(f)
+        return f
+
+    def flush(self):
+        """Barrier: block until every in-flight task has completed
+        (re-raises the first background exception, if any)."""
+        while self._pending:
+            self._pending.popleft().result()
+
+    def close(self):
+        self.flush()
+        if self._ex is not None:
+            self._ex.shutdown(wait=True)
+            self._ex = None
+
+
+__all__ = ["FinalizeQueue"]

@@ -129,7 +129,11 @@ def finalize_step(curr: np.ndarray, enc: EncodedIndices,
         enc.idx, enc.marker, enc.block_elems, curr.reshape(-1))
     raws = (enc.packed if enc.packed is not None
             else pack_blocks_host(enc.idx, enc.b_bits, enc.block_elems))
-    blks = entropy.compress_blocks(raws, codec=params.codec,
+    # "auto" resolves per step from the measured payload compressibility;
+    # the step (and therefore the NCK container) always records the
+    # concrete codec, so readers never see the pseudo-id.
+    codec = entropy.resolve_codec(params.codec, raws, params.zlib_level)
+    blks = entropy.compress_blocks(raws, codec=codec,
                                    level=params.zlib_level,
                                    parallel=params.parallel_entropy)
     raw_sizes = np.asarray([len(r) for r in raws], np.int64)
@@ -143,7 +147,7 @@ def finalize_step(curr: np.ndarray, enc: EncodedIndices,
         b_bits=enc.b_bits, error_bound=params.error_bound,
         strategy=params.strategy, reference=params.reference,
         domain_lo=float(domain_lo), bin_width=float(width),
-        centers=centers, block_elems=enc.block_elems, codec=params.codec,
+        centers=centers, block_elems=enc.block_elems, codec=codec,
         index_blocks=blks, index_block_nbytes=raw_sizes,
         incomp_values=incomp_values, incomp_block_offsets=incomp_off,
         meta=full_meta)
@@ -156,14 +160,15 @@ def finalize_anchor(arr: np.ndarray, params: NumarckParams) -> CompressedStep:
     block_elems = max(1, params.block_bytes // flat.dtype.itemsize)
     raws = [flat[s:e].tobytes() for s, e in block_slices(flat.size,
                                                          block_elems)]
-    blks = entropy.compress_blocks(raws, codec=params.codec,
+    codec = entropy.resolve_codec(params.codec, raws, params.zlib_level)
+    blks = entropy.compress_blocks(raws, codec=codec,
                                    level=params.zlib_level,
                                    parallel=params.parallel_entropy)
     return CompressedStep(
         n=arr.size, shape=tuple(arr.shape), dtype=str(arr.dtype),
         b_bits=0, error_bound=params.error_bound, strategy=params.strategy,
         reference=params.reference, domain_lo=0.0, bin_width=0.0,
-        centers=np.zeros(0), block_elems=block_elems, codec=params.codec,
+        centers=np.zeros(0), block_elems=block_elems, codec=codec,
         index_blocks=blks, meta={"kind": "anchor"})
 
 

@@ -41,7 +41,7 @@ class NumarckParams:
     max_bins: int = 1 << 16            # histogram candidate-bin cap (DESIGN 3)
     strategy: str = STRATEGY_TOPK
     block_bytes: int = 1 << 20         # index-table block size (paper: 1 MB)
-    codec: str = "zlib"                # entropy codec (core.entropy registry)
+    codec: str = "zlib"                # entropy codec (registry id or "auto")
     zlib_level: int = 6                # codec level (name kept for compat)
     parallel_entropy: bool = True      # thread-pool host finalize
     reference: str = REF_RECONSTRUCTED
@@ -66,7 +66,7 @@ class NumarckParams:
         if self.max_bins < 2:
             raise ValueError("max_bins must be >= 2")
         from repro.core import entropy  # stdlib-only; no import cycle
-        entropy.get_codec(self.codec)   # raises on unknown codec
+        entropy.validate_codec_id(self.codec)  # registry name or "auto"
 
     def block_elems(self, b_bits: int) -> int:
         """Indices per index-table block (paper: block_bits / B).

@@ -20,11 +20,19 @@ Phases and their parallelization, 1:1 with the paper:
 
 B must be static for bit-packing, so the pipeline is two jitted stages:
 `analyze` (histogram -> auto-B) and `encode` (indices -> packed blocks).
+Both stages are jit-cached per (shape, B) signature so a temporal series
+traces once and replays, and with ``overlap=True`` the host finalize
+(exceptions + entropy + assembly) of step i runs on a background thread
+while the caller drives the device encode of step i+1 -- the sharded
+version of the paper's Sec. IV-C compute/IO overlap (at 12800 ranks the
+entropy+write stage is exactly where NUMARCK's wall-clock hides).
 """
 from __future__ import annotations
 
+from collections import deque
+from concurrent.futures import Future
 from functools import partial
-from typing import Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +42,10 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import binning, ratios, select_b
 from repro.core import pipeline as pipe
-from repro.core.types import CompressedStep, NumarckParams
+from repro.core.compress import DeviceEncoded
+from repro.core.overlap import FinalizeQueue
+from repro.core.types import (CompressedStep, NumarckParams,
+                              REF_RECONSTRUCTED)
 from repro.distributed import collectives as coll
 from repro.kernels import ops as kops
 
@@ -121,23 +132,75 @@ def _encode_shard(prev_l, curr_l, ids_desc, domain_lo, width, *, b_bits,
 
 
 class ShardedCompressor:
-    """Distributed NUMARCK over one mesh axis (or a flattened mesh)."""
+    """Distributed NUMARCK over one mesh axis (or a flattened mesh).
+
+    ``overlap=True`` double-buffers the device/host split across temporal
+    steps: the host finalize (exceptions + entropy + blob assembly) of
+    step i runs on a background thread while the caller's next
+    ``compress_async``/``add_async`` drives the device analyze/encode of
+    step i+1.  At most two finalizes are in flight (one executing + one
+    queued), inputs are snapshotted before handing them to the background
+    thread, and the blobs are byte-identical to ``overlap=False`` -- both
+    modes run the exact same shared finalize.
+    """
 
     def __init__(self, mesh: Mesh, axis: str = "data",
                  params: NumarckParams = NumarckParams(),
-                 use_pallas: bool = True):
+                 use_pallas: bool = True, overlap: bool = False):
         self.mesh = mesh
         self.axis = axis
         self.params = params
         self.use_pallas = use_pallas
+        self.overlap = overlap
         self.n_shards = mesh.shape[axis]
+        self._q = FinalizeQueue(overlap, name="shard-finalize")
+        self._state: Optional[np.ndarray] = None     # temporal chain
+        # jit caches: a temporal series traces each stage once per
+        # (shape, B) signature instead of once per step -- without this the
+        # per-step shard_map retrace dominates the sharded hot path.
+        self._analyze_fns: Dict[Tuple, object] = {}
+        self._encode_fns: Dict[Tuple, object] = {}
 
     def _shardings(self):
         return (NamedSharding(self.mesh, P(self.axis)),
                 NamedSharding(self.mesh, P()))
 
-    def compress(self, prev: np.ndarray, curr: np.ndarray,
-                 b_bits: Optional[int] = None) -> CompressedStep:
+    def _analyze_fn(self, ebytes: int, n: int):
+        key = (ebytes, n)
+        if key not in self._analyze_fns:
+            p = self.params
+            fn = shard_map(
+                partial(_analyze_shard, max_bins=p.max_bins, b_max=p.b_max,
+                        elem_bytes=ebytes, n_total=n, axis=self.axis,
+                        use_pallas=self.use_pallas,
+                        fixed_domain=p.fixed_domain),
+                mesh=self.mesh,
+                in_specs=(P(self.axis), P(self.axis), P()),
+                out_specs=(P(self.axis),) * 6, check_rep=False)
+            self._analyze_fns[key] = jax.jit(fn)
+        return self._analyze_fns[key]
+
+    def _encode_fn(self, bb: int, k_eff: int, be: int, ln: int, n: int):
+        key = (bb, k_eff, be, ln, n)
+        if key not in self._encode_fns:
+            p = self.params
+            fn = shard_map(
+                partial(_encode_shard, b_bits=bb, k_eff=k_eff,
+                        max_bins=p.max_bins, block_elems=be, ln=ln,
+                        n_total=n, axis=self.axis,
+                        use_pallas=self.use_pallas),
+                mesh=self.mesh,
+                in_specs=(P(self.axis),) * 5,
+                out_specs=(P(self.axis),) * 3, check_rep=False)
+            self._encode_fns[key] = jax.jit(fn)
+        return self._encode_fns[key]
+
+    # -------------------------------------------------------- device stage
+    def _device_encode(self, prev: np.ndarray, curr: np.ndarray,
+                       b_bits: Optional[int] = None) -> DeviceEncoded:
+        """Phases 1-5 on device; returns the pre-entropy encode result
+        (host numpy) that both the finalize stage and the reconstructed-
+        reference chain consume."""
         p = self.params
         prev_f = np.asarray(prev, np.float32).reshape(-1)
         curr_f = np.asarray(curr, np.float32).reshape(-1)
@@ -151,20 +214,9 @@ class ShardedCompressor:
         prev_p = _pad_to(prev_f, P_ * ln, 0.0)
         curr_p = _pad_to(curr_f, P_ * ln, 0.0)
         ebytes = np.dtype(np.asarray(curr).dtype).itemsize
+        sharded, _ = self._shardings()
 
-        sharded, rep = self._shardings()
-        spec_s, spec_r = P(self.axis), P()
-
-        analyze = shard_map(
-            partial(_analyze_shard, max_bins=p.max_bins, b_max=p.b_max,
-                    elem_bytes=ebytes, n_total=n, axis=self.axis,
-                    use_pallas=self.use_pallas,
-                    fixed_domain=p.fixed_domain),
-            mesh=self.mesh,
-            in_specs=(spec_s, spec_s, spec_r),
-            out_specs=(spec_s,) * 6, check_rep=False)
-        analyze = jax.jit(analyze)
-
+        analyze = self._analyze_fn(ebytes, n)
         (b_auto, ids_desc, counts_desc, domain_lo, width,
          est_sizes) = analyze(
             jax.device_put(prev_p, sharded), jax.device_put(curr_p, sharded),
@@ -182,37 +234,16 @@ class ShardedCompressor:
                     f"shard length {ln} smaller than minimum block (32); "
                     f"use fewer shards or larger inputs")
 
-        encode = shard_map(
-            partial(_encode_shard, b_bits=bb, k_eff=k_eff,
-                    max_bins=p.max_bins, block_elems=be, ln=ln, n_total=n,
-                    axis=self.axis, use_pallas=self.use_pallas),
-            mesh=self.mesh,
-            in_specs=(spec_s, spec_s, spec_s, spec_s, spec_s),
-            out_specs=(spec_s, spec_s, spec_s), check_rep=False)
-        encode = jax.jit(encode)
-
+        encode = self._encode_fn(bb, k_eff, be, ln, n)
         idx, packed, valid = encode(
             jax.device_put(prev_p, sharded), jax.device_put(curr_p, sharded),
             ids_desc, domain_lo, width)
 
-        return self._finalize(np.asarray(curr), np.asarray(idx),
-                              np.asarray(packed), np.asarray(valid),
-                              bb, k_eff, be, n,
-                              float(np.asarray(domain_lo)[0]),
-                              float(np.asarray(width)[0]),
-                              np.asarray(ids_desc)[0],
-                              int(b_auto),
-                              np.asarray(est_sizes)[0])
-
-    def _finalize(self, curr, idx, packed, valid, bb, k_eff, be, n,
-                  domain_lo, width, ids_desc, b_auto, est_sizes
-                  ) -> CompressedStep:
-        """Host stage: hand the device-packed blocks to the shared
-        finalize (`core.pipeline.finalize_step`) -- exceptions, parallel
-        entropy coding, blob assembly.  Byte-identical to the
-        single-device driver by construction."""
-        idx = idx.reshape(-1)[:n]
-
+        # Fetch to host (blocks until the device work of THIS step is done;
+        # the previous step's finalize may still be running behind us).
+        idx = np.asarray(idx).reshape(-1)[:n]
+        packed = np.asarray(packed)
+        valid = np.asarray(valid)
         # Valid blocks in global order (shards own contiguous block ranges).
         packed = packed.reshape(-1, packed.shape[-1])
         rows = packed[valid.reshape(-1)]     # (nblocks, words_per_block)
@@ -223,11 +254,87 @@ class ShardedCompressor:
 
         enc = pipe.EncodedIndices(idx=idx, b_bits=bb, block_elems=be,
                                   packed=raws)
-        centers = pipe.topk_centers(ids_desc, k_eff, domain_lo, width)
-        return pipe.finalize_step(
-            np.asarray(curr), enc, centers, domain_lo, width, self.params,
-            meta={"b_auto": b_auto, "est_sizes": est_sizes.tolist(),
-                  "n_shards": self.n_shards, "pipeline": "sharded"})
+        domain_lo = float(np.asarray(domain_lo)[0])
+        width = float(np.asarray(width)[0])
+        centers = pipe.topk_centers(np.asarray(ids_desc)[0], k_eff,
+                                    domain_lo, width)
+        centers = pipe.round_centers(centers, np.asarray(curr).dtype)
+        meta = {"b_auto": b_auto,
+                "est_sizes": np.asarray(est_sizes)[0].tolist(),
+                "n_shards": self.n_shards, "pipeline": "sharded"}
+        return DeviceEncoded(enc=enc, centers=centers, domain_lo=domain_lo,
+                             width=width, meta=meta)
+
+    # --------------------------------------------------------- host stage
+    def compress_async(self, prev: np.ndarray, curr: np.ndarray,
+                       b_bits: Optional[int] = None
+                       ) -> "Future[CompressedStep]":
+        """Device-encode now; return a future of the finalized step
+        (finalize runs on the background thread when overlap=True, with at
+        most two in flight).
+
+        `curr` is snapshotted before the background finalize reads it
+        (exception values), so callers may reuse their buffers.
+        """
+        dev = self._device_encode(prev, curr, b_bits)
+        curr_s = (np.array(curr, copy=True) if self.overlap
+                  else np.asarray(curr))
+        return self._q.submit(pipe.finalize_step, curr_s, dev.enc,
+                              dev.centers, dev.domain_lo, dev.width,
+                              self.params, dev.meta)
+
+    def compress(self, prev: np.ndarray, curr: np.ndarray,
+                 b_bits: Optional[int] = None) -> CompressedStep:
+        return self.compress_async(prev, curr, b_bits).result()
+
+    # ------------------------------------------------- temporal streaming
+    def add_async(self, arr: np.ndarray) -> "Future[CompressedStep]":
+        """Streaming interface over a temporal series (first call stores a
+        lossless anchor).  The reference chain advances from the
+        pre-entropy encode result before returning, so the next step's
+        device work never waits on this step's entropy stage."""
+        arr = np.asarray(arr)
+        if self._state is None:
+            self._state = arr.copy()
+            return self._q.submit(pipe.finalize_anchor, arr.copy(),
+                                  self.params)
+        dev = self._device_encode(self._state, arr)
+        if self.params.reference == REF_RECONSTRUCTED:
+            self._state = pipe.reconstruct_from_indices(
+                self._state, dev.enc, dev.centers, arr.dtype, curr=arr)
+        else:
+            self._state = arr.copy()
+        curr_s = np.array(arr, copy=True) if self.overlap else arr
+        return self._q.submit(pipe.finalize_step, curr_s, dev.enc,
+                              dev.centers, dev.domain_lo, dev.width,
+                              self.params, dev.meta)
+
+    def add(self, arr: np.ndarray) -> CompressedStep:
+        return self.add_async(arr).result()
+
+    def compress_series(self, arrays) -> List[CompressedStep]:
+        """Compress a temporal series; double-buffered when overlap=True."""
+        self.reset()
+        out: List[CompressedStep] = []
+        futs: Deque[Future] = deque()
+        for a in arrays:
+            futs.append(self.add_async(a))
+            while len(futs) > 2:
+                out.append(futs.popleft().result())
+        out.extend(f.result() for f in futs)
+        return out
+
+    def flush(self):
+        """Block until every in-flight finalize has completed (re-raises
+        the first background exception, if any)."""
+        self._q.flush()
+
+    def close(self):
+        self._q.close()
+
+    def reset(self):
+        """Drop the temporal chain state (next add() writes an anchor)."""
+        self._state = None
 
 
 def _decode_shard(idx_l, prev_l, centers, *, b_bits, use_pallas):

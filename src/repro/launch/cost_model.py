@@ -17,11 +17,33 @@ truth.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Dict
 
 from repro.models.config import SHAPES, ModelConfig
 
 BF16 = 2
 F32 = 4
+
+
+def hlo_cost(compiled) -> Dict[str, float]:
+    """Normalize `compiled.cost_analysis()` across jax versions.
+
+    jax <= 0.4.30 returns a per-platform *list* of dicts; newer versions
+    return the dict directly (and some builds return None for trivial
+    programs).  Every consumer of HLO cost numbers in this repo goes
+    through here so the analytic-vs-HLO validation keeps working across
+    the toolchain.
+    """
+    cost = compiled.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
+def hlo_flops(compiled) -> float:
+    return float(hlo_cost(compiled).get("flops", 0.0))
 
 
 @dataclass

@@ -206,7 +206,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir=None,
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
-        cost = compiled.cost_analysis()
+        from repro.launch.cost_model import hlo_cost
+        cost = hlo_cost(compiled)
         mem = compiled.memory_analysis()
         colls = collective_bytes(compiled.as_text(),
                                  loop_trip=cfg.n_layers)
@@ -344,7 +345,8 @@ def run_compression_dryrun(mesh_kind: str, out_dir=None,
         sds = jax.ShapeDtypeStruct((n_shards * ln_a,), jnp.float32)
         low = jax.jit(analyze).lower(sds, sds, jnp.float32(1e-3))
         comp = low.compile()
-        cost = comp.cost_analysis()
+        from repro.launch.cost_model import hlo_cost
+        cost = hlo_cost(comp)
         colls = collective_bytes(comp.as_text())
         mem = comp.memory_analysis()
         rec = dict(arch="numarck-pipeline", shape=f"n{n_elems:.0e}",

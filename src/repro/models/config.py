@@ -148,6 +148,16 @@ def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
         n_prefix=8 if cfg.n_prefix else 0,
         dtype="float32", remat="none",
     )
+    if base["n_experts"]:
+        # Drop-free MoE capacity (cap == T exactly when cf = E/k): capacity
+        # overflow assigns buffer slots through a cumsum over ALL tokens, so
+        # a drop couples a token's output to arbitrarily distant tokens'
+        # routing -- which breaks the locality properties the smoke tests
+        # assert (e.g. SWA receptive-field isolation).  Production configs
+        # keep their trained capacity_factor; drop behavior itself is
+        # covered by test_moe.py with an explicit tiny factor.
+        base["capacity_factor"] = max(
+            cfg.capacity_factor, base["n_experts"] / base["moe_top_k"])
     base.update(overrides)
     return replace(cfg, **base)
 

@@ -111,9 +111,10 @@ class ServeStats:
 class Engine:
     def __init__(self, model: Model, params, batch_size: int, s_max: int,
                  keep_session: bool = False):
-        """`keep_session=True` retains each generate()'s final decode cache
-        on `self.last_cache` for save_session (costs one cache of device
-        memory between requests; off by default)."""
+        """`keep_session=True` retains each generate()'s final decode state
+        (cache + next token + position) on the engine for
+        save_session/resume (costs one cache of device memory between
+        requests; off by default)."""
         self.model = model
         self.params = params
         self.B = batch_size
@@ -125,33 +126,58 @@ class Engine:
             lambda p, c, tok, pos: model.decode(p, c, token=tok, pos=pos))
         self.stats = ServeStats()
         self.last_cache = None           # decode cache of the last generate
+        self.last_tok = None             # next (not yet emitted) token
+        self.last_pos = None             # absolute position of last_tok
+        # aval-only (shape/dtype) session template, recorded on the first
+        # decode loop: lets load_session restore the exact traced avals on
+        # any engine that has generated once, even with keep_session=False
+        self._sess_template = None
 
     def save_session(self, path: str, codec: str = "zlib") -> Dict[str, int]:
-        """Snapshot the last request batch's decode cache to disk."""
+        """Snapshot the last request batch's decode state to disk (cache +
+        resume token/position, so the session restarts mid-stream)."""
         if self.last_cache is None:
             raise RuntimeError(
                 "no session cache retained: construct the Engine with "
                 "keep_session=True and call generate() first")
-        return snapshot_cache(self.last_cache, path, codec=codec)
+        sess = {"cache": self.last_cache, "tok": self.last_tok,
+                "pos": self.last_pos}
+        return snapshot_cache(sess, path, codec=codec)
 
     def load_session(self, path: str):
-        """Reload a snapshotted decode cache (host arrays, template-shaped
-        if a previous generate defined one)."""
-        self.last_cache = load_cache(path, template=self.last_cache)
+        """Reload a snapshotted decode state and place it on device.
+
+        Leaves come back from the NCK container as host numpy; re-casting
+        through the recorded session template and `jax.device_put`
+        reproduces the exact avals the jitted decode executable was traced
+        with, so `resume()` streams through the cached executable without
+        a retrace (and without a per-step host->device transfer).
+        Requires one prior `generate()` on this engine (any keep_session
+        setting) to have recorded the template.
+        """
+        names = json.loads(bytes(
+            NCKReader(path).read_array("__names__")).decode())
+        if not any(k == "pos" or k.split("/", 1)[0] == "cache"
+                   for k in names.values()):
+            raise ValueError(
+                f"{path}: not an Engine session file (no cache/tok/pos "
+                "record -- bare snapshot_cache() files predate the resume "
+                "format; re-save with Engine.save_session)")
+        if self._sess_template is None:
+            raise RuntimeError(
+                "load_session needs the session template: call generate() "
+                "once on this engine first (any keep_session setting)")
+        sess = jax.device_put(load_cache(path,
+                                         template=self._sess_template))
+        self.last_cache = sess["cache"]
+        self.last_tok = sess["tok"]
+        self.last_pos = sess["pos"]
         return self.last_cache
 
-    def generate(self, prompts: np.ndarray, max_new: int = 16,
-                 greedy: bool = True, key=None) -> np.ndarray:
-        """prompts (B, S0) int32 -> (B, max_new) int32 generated tokens."""
-        assert prompts.shape[0] == self.B
-        t0 = time.perf_counter()
-        logits, cache, pos = self._prefill(self.params,
-                                           {"tokens": jnp.asarray(prompts)})
-        jax.block_until_ready(logits)
-        self.stats.prefill_s += time.perf_counter() - t0
-
+    def _decode_loop(self, cache, tok, pos, max_new: int, greedy: bool,
+                     key, keep: bool) -> np.ndarray:
+        """Shared streaming loop of generate/resume (same jitted callable)."""
         out = []
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         t0 = time.perf_counter()
         for i in range(max_new):
             out.append(np.asarray(tok)[:, 0])
@@ -166,9 +192,41 @@ class Engine:
         jax.block_until_ready(tok)
         self.stats.decode_s += time.perf_counter() - t0
         self.stats.tokens_out += max_new * self.B
-        if self.keep_session:
-            self.last_cache = cache
+        if self._sess_template is None:
+            self._sess_template = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                {"cache": cache, "tok": tok, "pos": pos})
+        if keep:
+            self.last_cache, self.last_tok, self.last_pos = cache, tok, pos
         return np.stack(out, axis=1)
+
+    def generate(self, prompts: np.ndarray, max_new: int = 16,
+                 greedy: bool = True, key=None) -> np.ndarray:
+        """prompts (B, S0) int32 -> (B, max_new) int32 generated tokens."""
+        assert prompts.shape[0] == self.B
+        t0 = time.perf_counter()
+        logits, cache, pos = self._prefill(self.params,
+                                           {"tokens": jnp.asarray(prompts)})
+        jax.block_until_ready(logits)
+        self.stats.prefill_s += time.perf_counter() - t0
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return self._decode_loop(cache, tok, pos, max_new, greedy, key,
+                                 keep=self.keep_session)
+
+    def resume(self, max_new: int = 16, greedy: bool = True,
+               key=None) -> np.ndarray:
+        """Continue a retained or load_session()-restored stream: no
+        prefill, same jitted decode executable as generate().  Always
+        advances the session state, so consecutive resume() calls stream
+        onward (keep_session only governs whether generate() retains its
+        cache between requests)."""
+        if self.last_cache is None:
+            raise RuntimeError(
+                "no session to resume: generate() with keep_session=True "
+                "or load_session() first")
+        return self._decode_loop(self.last_cache, self.last_tok,
+                                 self.last_pos, max_new, greedy, key,
+                                 keep=True)
 
 
 __all__ = ["Engine", "ServeStats", "snapshot_cache", "load_cache"]

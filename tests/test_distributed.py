@@ -69,3 +69,74 @@ def test_sharded_equals_single_device():
                          capture_output=True, text=True, timeout=600)
     assert res.returncode == 0, res.stdout + res.stderr
     assert "OK" in res.stdout
+
+
+_OVERLAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import NumarckParams, compress_series
+    from repro.distributed.pipeline import ShardedCompressor
+
+    assert len(jax.devices()) == 2
+    rng = np.random.default_rng(13)
+    n = 37_111            # odd: padding + straddling blocks on both shards
+    base = rng.normal(1.0, 0.5, n).astype(np.float32)
+    series = [base]
+    for _ in range(4):
+        series.append((series[-1]
+                       * (1 + 0.012 * rng.standard_normal(n)))
+                      .astype(np.float32))
+    series[2][::701] *= 40.0          # sprinkle incompressibles mid-stream
+
+    params = NumarckParams(error_bound=1e-3, block_bytes=2048,
+                           max_bins=4096, b_max=12)
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+
+    sc_sync = ShardedCompressor(mesh, "data", params, use_pallas=False,
+                                overlap=False)
+    blobs_sync = sc_sync.compress_series(series)
+    sc_over = ShardedCompressor(mesh, "data", params, use_pallas=False,
+                                overlap=True)
+    blobs_over = sc_over.compress_series(series)
+    sc_over.close()
+
+    assert len(blobs_sync) == len(blobs_over) == len(series)
+    for i, (a, b) in enumerate(zip(blobs_sync, blobs_over)):
+        assert a.b_bits == b.b_bits and a.codec == b.codec, i
+        assert a.index_blocks == b.index_blocks, f"step {i} blobs differ"
+        assert np.array_equal(a.centers, b.centers), i
+        if a.incomp_values is not None:
+            assert np.array_equal(a.incomp_values, b.incomp_values), i
+            assert np.array_equal(a.incomp_block_offsets,
+                                  b.incomp_block_offsets), i
+
+    # and the sharded temporal chain matches the single-device one
+    ref = compress_series(series, params)
+    for i, (a, b) in enumerate(zip(ref, blobs_sync)):
+        assert a.index_blocks == b.index_blocks, f"step {i} != single-dev"
+
+    # explicit pair API: overlap future vs immediate result, byte-equal
+    f = sc_sync.compress_async(series[0], series[1])
+    pair = ShardedCompressor(mesh, "data", params, use_pallas=False,
+                             overlap=True)
+    g = pair.compress_async(series[0], series[1])
+    assert f.result().index_blocks == g.result().index_blocks
+    pair.close()
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_overlap_byte_identical():
+    """overlap=True double-buffering must not change a byte of any blob,
+    and the sharded temporal chain must equal the single-device chain."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, "-c", _OVERLAP_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "OK" in res.stdout

@@ -141,6 +141,85 @@ def test_tiny_and_empty_arrays(codec):
     assert decode_anchor(st).size == 0
 
 
+def test_auto_codec_policy():
+    """choose_codec picks from the measured prefix compressibility."""
+    rnd = np.random.default_rng(3).integers(0, 256, 1 << 16)
+    assert entropy.choose_codec([rnd.astype(np.uint8).tobytes()]) == "raw"
+    assert entropy.choose_codec([b"\x00" * (1 << 16)]) == "lzma"
+    # mid-entropy payload stays on the fast default
+    mid = np.random.default_rng(4).integers(0, 17, 1 << 16)
+    assert entropy.choose_codec([mid.astype(np.uint8).tobytes()]) == "zlib"
+    # empty payload: never crash, fall back to the default codec
+    assert entropy.choose_codec([]) == entropy.DEFAULT_CODEC
+    assert entropy.choose_codec([b""]) == entropy.DEFAULT_CODEC
+
+
+def test_auto_codec_round_trip_through_container(tmp_path):
+    """codec="auto" resolves per step; the NCK container persists the
+    concrete pick and readers decompress without ever seeing "auto"."""
+    series = _series(steps=4)
+    p = NumarckParams(error_bound=1e-3, codec="auto", block_bytes=4096)
+    steps = compress_series(series, p)
+    assert all(s.codec != "auto" for s in steps)
+    assert all(s.codec in codec_names() for s in steps)
+
+    path = os.path.join(tmp_path, "auto.nck")
+    w = NCKWriter()
+    for i, st in enumerate(steps):
+        w.add_step(f"v_it{i:05d}", st)
+    w.write(path)
+    r = NCKReader(path)
+    prev = None
+    for i, orig in enumerate(steps):
+        st = r.read_step(f"v_it{i:05d}")
+        assert st.codec == orig.codec
+        prev = decompress_step(st, prev)
+    assert mean_error_rate(series[-1], prev) <= 1e-3 * 1.01
+
+    # an incompressible series resolves to raw on the anchor
+    noise = np.frombuffer(np.random.default_rng(9).integers(
+        0, 256, 1 << 16).astype(np.uint8).tobytes(), np.uint8)
+    st = make_anchor(noise, NumarckParams(codec="auto"))
+    assert st.codec == "raw"
+    np.testing.assert_array_equal(decode_anchor(st), noise)
+
+
+def test_auto_codec_accepted_by_params_but_never_persisted():
+    p = NumarckParams(codec="auto")
+    assert p.codec == "auto"              # parameter keeps the pseudo-id
+    with pytest.raises(ValueError):
+        entropy.get_codec("auto")         # registry never resolves it
+
+
+class _GilBoundCodec(entropy.Codec):
+    """Pure-python codec (holds the GIL): exercises the process-pool
+    dispatch path.  Module level so forked workers can unpickle tasks."""
+
+    name = "_test_gil_xor"
+    holds_gil = True
+
+    def compress(self, raw: bytes, level: int) -> bytes:
+        return bytes(b ^ 0xA5 for b in raw)
+
+    def decompress(self, blob: bytes) -> bytes:
+        return bytes(b ^ 0xA5 for b in blob)
+
+
+def test_gil_holding_codec_process_pool_dispatch():
+    """GIL-holding codecs go through the forked process pool (or its
+    serial fallback) and stay byte-identical to the serial loop."""
+    entropy.register_codec(_GilBoundCodec())
+    raws = [np.random.default_rng(i).integers(0, 256, 1 << 19)
+            .astype(np.uint8).tobytes() for i in range(8)]
+    serial = entropy.compress_blocks(raws, codec="_test_gil_xor",
+                                     parallel=False)
+    parallel = entropy.compress_blocks(raws, codec="_test_gil_xor",
+                                       parallel=True)
+    assert serial == parallel
+    for raw, blob in zip(raws, serial):
+        assert entropy.decompress_block(blob, "_test_gil_xor") == raw
+
+
 def test_serve_cache_snapshot_round_trip(tmp_path):
     from repro.serve.engine import load_cache, snapshot_cache
     cache = {"layer0": {"k": RNG.normal(size=(2, 8, 4)).astype(np.float32),

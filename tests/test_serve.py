@@ -23,6 +23,76 @@ def test_engine_generates(arch):
     assert eng.stats.tokens_out == B * new
 
 
+def test_session_save_load_resume_no_retrace(tmp_path):
+    """A restored session continues the stream exactly where it stopped,
+    on device, through the already-traced decode executable."""
+    model = build("llama3.2-1b", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    p = np.random.default_rng(2).integers(0, model.cfg.vocab_size,
+                                          (1, 10)).astype(np.int32)
+    full = Engine(model, params, 1, 32).generate(p, max_new=10)
+
+    eng = Engine(model, params, 1, 32, keep_session=True)
+    first = eng.generate(p, max_new=5)
+    path = str(tmp_path / "sess.nck")
+    stats = eng.save_session(path)
+    assert stats["orig_bytes"] > 0
+
+    eng2 = Engine(model, params, 1, 32, keep_session=True)
+    eng2.generate(p, max_new=5)           # trace decode + define template
+    n_traces = eng2._decode._cache_size()
+    eng2.load_session(path)
+    rest = eng2.resume(max_new=5)
+    # greedy continuation == uninterrupted run (cache restore is lossless)
+    np.testing.assert_array_equal(np.concatenate([first, rest], axis=1),
+                                  full)
+    # the restored leaves matched the traced avals: no re-trace happened
+    assert eng2._decode._cache_size() == n_traces
+
+
+def test_resume_advances_without_keep_session(tmp_path):
+    """Consecutive resume() calls stream onward even on an engine built
+    with keep_session=False (load_session establishes the session)."""
+    model = build("llama3.2-1b", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    p = np.random.default_rng(3).integers(0, model.cfg.vocab_size,
+                                          (1, 8)).astype(np.int32)
+    full = Engine(model, params, 1, 24).generate(p, max_new=9)
+
+    saver = Engine(model, params, 1, 24, keep_session=True)
+    first = saver.generate(p, max_new=3)
+    path = str(tmp_path / "s.nck")
+    saver.save_session(path)
+
+    eng = Engine(model, params, 1, 24)        # keep_session=False
+    eng.generate(p, max_new=2)                # records the aval template
+    eng.load_session(path)
+    a = eng.resume(max_new=3)
+    b = eng.resume(max_new=3)                 # must continue, not replay
+    np.testing.assert_array_equal(
+        np.concatenate([first, a, b], axis=1), full)
+
+
+def test_load_session_rejects_bare_cache_snapshot(tmp_path):
+    """Pre-resume-format files (bare snapshot_cache) fail loudly."""
+    from repro.serve.engine import snapshot_cache
+    model = build("llama3.2-1b", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, 1, 16)
+    path = str(tmp_path / "old.nck")
+    snapshot_cache({"layer0": np.zeros((2, 2), np.float32)}, path)
+    with pytest.raises(ValueError, match="session file"):
+        eng.load_session(path)
+
+
+def test_resume_without_session_raises():
+    model = build("llama3.2-1b", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, 1, 16)
+    with pytest.raises(RuntimeError, match="no session"):
+        eng.resume(max_new=2)
+
+
 def test_engine_deterministic_greedy():
     model = build("llama3.2-1b", smoke=True)
     params = model.init(jax.random.PRNGKey(0))
