@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dist bench-entropy bench
+.PHONY: test test-fast test-dist bench-entropy bench-chain bench
 
 # Tier-1 verify (full suite).
 test:
@@ -22,6 +22,11 @@ test-dist:
 # Serial vs. parallel host entropy stage across codecs / block sizes.
 bench-entropy:
 	$(PY) benchmarks/bench_entropy.py
+
+# Host-resident vs device-resident reference chain (single + sharded).
+# Also rides along in `make bench` via bench_compression.
+bench-chain:
+	$(PY) benchmarks/bench_chain.py
 
 bench:
 	$(PY) benchmarks/run.py

@@ -77,6 +77,10 @@ def run(datasets=("sedov", "stir", "asr", "cmip")) -> list:
         rows.append((f"fig9_12_cr_zlib_{name}", t_zl * 1e6,
                      f"CR={nbytes/blob_l.nbytes:.2f} ME=0"))
     rows.extend(run_sharded_overlap())
+    # host-chain vs device-chain residency (single-device and sharded,
+    # overlap on/off) -- the ReferenceChain refactor, measured.
+    from benchmarks import bench_chain
+    rows.extend(bench_chain.run())
     return rows
 
 

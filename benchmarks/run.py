@@ -21,11 +21,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: scaling,compression,partial,binning,"
-                         "autob,kernels")
+                         "autob,kernels,chain")
     args = ap.parse_args()
 
-    from benchmarks import (bench_autob, bench_binning, bench_compression,
-                            bench_kernels, bench_partial, bench_scaling)
+    from benchmarks import (bench_autob, bench_binning, bench_chain,
+                            bench_compression, bench_kernels, bench_partial,
+                            bench_scaling)
     benches = {
         "compression": bench_compression.run,
         "scaling": bench_scaling.run,
@@ -33,8 +34,12 @@ def main() -> None:
         "binning": bench_binning.run,
         "autob": bench_autob.run,
         "kernels": bench_kernels.run,
+        "chain": bench_chain.run,
     }
-    wanted = args.only.split(",") if args.only else list(benches)
+    # "chain" rows already ride along inside bench_compression; keep them
+    # out of the default sweep so `make bench` doesn't run them twice.
+    wanted = (args.only.split(",") if args.only
+              else [b for b in benches if b != "chain"])
     print("name,us_per_call,derived")
     from benchmarks.common import emit
     for name in wanted:

@@ -32,9 +32,10 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.core import (NumarckParams, compress_step, decompress_step,
-                        make_anchor)
-from repro.core.compress import decode_anchor
+from repro.core import (NumarckParams, decompress_step, make_anchor)
+from repro.core import chain as chainmod
+from repro.core import pipeline as pipe
+from repro.core.compress import decode_anchor, encode_device
 from repro.core.container import NCKReader, NCKWriter
 from repro.core.overlap import FinalizeQueue
 
@@ -59,9 +60,20 @@ class CheckpointManager:
                  anchor_every: int = 4, keep: int = 3,
                  compress: bool = True, async_save: bool = False,
                  exempt_substrings: Tuple[str, ...] = ("scale", "step",
-                                                       "pos_map")):
+                                                       "pos_map"),
+                 chain: str = chainmod.CHAIN_HOST):
         """`exempt_substrings`: tensor paths stored losslessly regardless
-        (norm scales and counters are tiny but precision-critical)."""
+        (norm scales and counters are tiny but precision-critical).
+
+        `chain`: residency of the per-tensor reference chains the deltas
+        encode against ("host" default -- checkpoint trees are snapshotted
+        to host anyway; "auto"/"device" keeps the reconstructed state on
+        the accelerator between saves at the cost of one state copy of
+        device memory).  Applied per tensor: checkpoint trees mix float
+        params with int counters/steps, so tensors the device cannot hold
+        bit-exactly always get host chains instead of failing the save."""
+        if chain not in chainmod.RESIDENCIES:
+            raise ValueError(f"unknown chain residency {chain!r}")
         self.dir = directory
         self.params = params
         self.anchor_every = max(1, anchor_every)
@@ -69,8 +81,12 @@ class CheckpointManager:
         self.compress = compress
         self.async_save = async_save
         self.exempt = exempt_substrings
+        self.chain = chain
         os.makedirs(directory, exist_ok=True)
-        self._recon_state: Dict[str, np.ndarray] = {}
+        # One ReferenceChain per tensor path: the prev->recon state every
+        # delta encodes against.  Raw ndarrays never leak out of the
+        # chains except through an explicit .to_host()/seed boundary.
+        self._recon_state: Dict[str, chainmod.ReferenceChain] = {}
         self._save_count = 0
         # Single worker serializes compress+write (manifest ordering stays
         # trivially correct); the queue bounds in-flight saves at two.
@@ -122,6 +138,17 @@ class CheckpointManager:
         re-raises the first background exception, if any."""
         self._q.flush()
 
+    def _seeded_chain(self, arr: np.ndarray) -> chainmod.ReferenceChain:
+        # Per-tensor residency: "device" degrades to host for dtypes the
+        # device cannot hold bit-exactly (ints, f16, f64 without x64) --
+        # those tensors are lossless-only anyway.
+        residency = self.chain
+        if not chainmod.device_supports(arr.dtype):
+            residency = chainmod.CHAIN_HOST
+        c = chainmod.make_reference_chain(residency, arr.dtype)
+        c.seed(arr)
+        return c
+
     def _save_inner(self, step: int, flat: Dict[str, np.ndarray]):
         is_anchor = (self._save_count % self.anchor_every == 0
                      or not self._recon_state)
@@ -129,7 +156,7 @@ class CheckpointManager:
         stats = {"step": step, "anchor": is_anchor, "orig_bytes": 0,
                  "comp_bytes": 0, "codec": self.params.codec}
         names = {}
-        new_recon: Dict[str, np.ndarray] = {}
+        staged: Dict[str, chainmod.ReferenceChain] = {}
         for i, (key, arr) in enumerate(sorted(flat.items())):
             var = f"t{i:04d}"
             names[var] = key
@@ -141,22 +168,34 @@ class CheckpointManager:
                         or key not in self._recon_state)
             if lossless:
                 st = make_anchor(arr, self.params)
-                new_recon[key] = arr.copy()
+                staged[key] = self._seeded_chain(arr)
             else:
-                st = compress_step(self._recon_state[key], arr, self.params)
-                new_recon[key] = decompress_step(
-                    st, self._recon_state[key])
+                # Encode against the chain state; advance a *fork* from
+                # the pre-entropy result (bit-identical to decompressing
+                # the blob, without inflating it back).  Checkpoints
+                # always chain the reconstruction, whatever
+                # params.reference says -- restore only ever replays
+                # reconstructions.
+                prev_chain = self._recon_state[key]
+                dev = encode_device(prev_chain.peek(), arr, self.params)
+                st = pipe.finalize_step(arr, dev.enc, dev.centers,
+                                        dev.domain_lo, dev.width,
+                                        self.params, dev.meta)
+                c = prev_chain.fork()
+                c.advance(dev, arr)
+                staged[key] = c
             stats["comp_bytes"] += st.nbytes
             w.add_step(var, st)
         w.add_array("__names__",
                     np.frombuffer(json.dumps(names).encode(), np.uint8),
                     attrs={"step": step})
         w.write(self._step_path(step))
-        # Commit the in-memory delta chain only after the step file is
+        # Commit the in-memory delta chains only after the step file is
         # durable: a save that dies mid-write must leave the next delta
         # encoding against the last *persisted* state, or every subsequent
-        # delta would silently chain off a ghost step.
-        self._recon_state.update(new_recon)
+        # delta would silently chain off a ghost step.  The forks above
+        # make this a handle swap, never an in-place mutation.
+        self._recon_state.update(staged)
         self._save_count += 1
 
         m = self._read_manifest()
@@ -223,7 +262,8 @@ class CheckpointManager:
         for step in reversed(m["steps"]):
             try:
                 flat = self._load_flat(step, m)
-                self._recon_state = {k: v.copy() for k, v in flat.items()}
+                self._recon_state = {k: self._seeded_chain(v)
+                                     for k, v in flat.items()}
                 self._save_count = len(
                     [s for s in m["steps"] if s <= step])
                 return step, self._unflatten(flat, template)

@@ -1,4 +1,8 @@
 """NUMARCK core: the paper's contribution as a composable JAX module."""
+from repro.core.chain import (CHAIN_AUTO, CHAIN_DEVICE, CHAIN_HOST,
+                              DeviceReferenceChain, HostReferenceChain,
+                              ReferenceChain, SessionChain,
+                              make_reference_chain, resolve_residency)
 from repro.core.compress import (TemporalCompressor, TemporalDecompressor,
                                  compress_series, compress_step,
                                  decompress_series, decompress_step,
@@ -6,7 +10,8 @@ from repro.core.compress import (TemporalCompressor, TemporalDecompressor,
 from repro.core.container import NCKReader, NCKWriter
 from repro.core.entropy import (codec_names, get_codec, register_codec)
 from repro.core.partial import TemporalArchive, read_step_range
-from repro.core.pipeline import EncodedIndices, finalize_step
+from repro.core.pipeline import (DeviceEncoded, EncodedIndices,
+                                 finalize_step, reconstruction_dtype)
 from repro.core.types import (CompressedStep, NumarckParams,
                               mean_error_rate)
 
@@ -15,7 +20,11 @@ __all__ = [
     "compress_step", "decompress_step", "make_anchor", "encode_device",
     "compress_series", "decompress_series",
     "TemporalCompressor", "TemporalDecompressor",
-    "EncodedIndices", "finalize_step",
+    "ReferenceChain", "HostReferenceChain", "DeviceReferenceChain",
+    "SessionChain", "make_reference_chain", "resolve_residency",
+    "CHAIN_HOST", "CHAIN_DEVICE", "CHAIN_AUTO",
+    "EncodedIndices", "DeviceEncoded", "finalize_step",
+    "reconstruction_dtype",
     "codec_names", "get_codec", "register_codec",
     "NCKWriter", "NCKReader", "TemporalArchive", "read_step_range",
 ]

@@ -13,15 +13,16 @@ paths emit byte-identical blobs.
 `TemporalCompressor(overlap=True)` / `compress_series(..., overlap=True)`
 double-buffer the device/host split (paper Sec. IV-C I/O overlap): the
 device analyze/encode of step i+1 runs while a background thread runs the
-host entropy stage of step i.  The REF_RECONSTRUCTED chain advances from
-the pre-entropy encode result (`pipeline.reconstruct_from_indices`), so
-the blob of step i is never on the critical path of step i+1.
+host entropy stage of step i.  The REF_RECONSTRUCTED chain is a
+``core.chain.ReferenceChain``: device-resident by default (f32, or f64
+under jax_enable_x64) so R_i never leaves the accelerator between steps,
+host-resident (``pipeline.reconstruct_from_indices``) otherwise --
+byte-identical blobs either way.
 """
 from __future__ import annotations
 
 from collections import deque
 from concurrent.futures import Future
-from dataclasses import dataclass
 from functools import partial
 from typing import List, Optional
 
@@ -30,8 +31,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import binning, blocks, entropy, ratios, select_b
+from repro.core import chain as chainmod
 from repro.core import pipeline as pipe
 from repro.core.overlap import FinalizeQueue
+from repro.core.pipeline import DeviceEncoded
 from repro.core.types import (CompressedStep, NumarckParams, REF_ORIGINAL,
                               REF_RECONSTRUCTED, STRATEGY_EQUAL,
                               STRATEGY_KMEANS, STRATEGY_LOG, STRATEGY_TOPK,
@@ -86,22 +89,18 @@ def decode_anchor(step: CompressedStep) -> np.ndarray:
     return np.frombuffer(raw, dtype=step.dtype).reshape(step.shape).copy()
 
 
-@dataclass
-class DeviceEncoded:
-    """Output of the device analyze+encode stages (pre-entropy)."""
+def encode_device(prev, curr, params: NumarckParams) -> DeviceEncoded:
+    """Device stages for one step: analyze + strategy dispatch + indexing.
 
-    enc: pipe.EncodedIndices
-    centers: np.ndarray          # rounded to the data dtype (float64 view)
-    domain_lo: float
-    width: float
-    meta: dict
-
-
-def encode_device(prev: np.ndarray, curr: np.ndarray,
-                  params: NumarckParams) -> DeviceEncoded:
-    """Device stages for one step: analyze + strategy dispatch + indexing."""
-    prev = np.asarray(prev)
-    curr = np.asarray(curr)
+    `prev`/`curr` may be host ndarrays or device jax.Arrays (a
+    device-resident ReferenceChain feeds its state straight back in
+    without a host copy); the returned ``DeviceEncoded`` carries device
+    handles of the index table and `curr` for the chain advance.
+    """
+    if not isinstance(prev, jax.Array):
+        prev = np.asarray(prev)
+    if not isinstance(curr, jax.Array):
+        curr = np.asarray(curr)
     if prev.shape != curr.shape:
         raise ValueError("temporal steps must share a shape")
     ebytes = dtype_nbytes(curr.dtype)
@@ -144,7 +143,10 @@ def encode_device(prev: np.ndarray, curr: np.ndarray,
             "ratio_min": float(a["lo"]), "ratio_max": float(a["hi"])}
     return DeviceEncoded(enc=enc, centers=centers,
                          domain_lo=float(a["domain_lo"]),
-                         width=float(a["width"]), meta=meta)
+                         width=float(a["width"]), meta=meta,
+                         idx_dev=idx,
+                         curr_dev=curr if isinstance(curr, jax.Array)
+                         else None)
 
 
 def compress_step(prev: np.ndarray, curr: np.ndarray,
@@ -162,26 +164,34 @@ def compress_step(prev: np.ndarray, curr: np.ndarray,
 
 def decompress_step(step: CompressedStep,
                     prev: Optional[np.ndarray]) -> np.ndarray:
-    """Reconstruct R_i = R_{i-1} * (1 + center)  (corrected Eq. 4)."""
+    """Reconstruct R_i = R_{i-1} * (1 + center)  (corrected Eq. 4).
+
+    Arithmetic runs in the step's source precision
+    (``pipeline.reconstruction_dtype``) so the replayed chain is
+    bit-identical to the compressor's reference chain, host- or
+    device-resident, for float32 and float64 data alike.
+    """
     if step.is_anchor:
         return decode_anchor(step)
     assert prev is not None, "non-anchor steps need the previous state"
-    prev_flat = np.asarray(prev, np.float64).reshape(-1)
-    out = np.empty(step.n, dtype=np.float64)
+    cdt = pipe.reconstruction_dtype(step.dtype)
+    prev_flat = np.asarray(prev).reshape(-1).astype(cdt, copy=False)
+    out = np.empty(step.n, dtype=cdt)
     marker = (1 << step.b_bits) - 1
     centers = np.concatenate([step.centers,
-                              np.zeros(marker + 1 - step.centers.size)])
+                              np.zeros(marker + 1 - step.centers.size)
+                              ]).astype(cdt)
     ptr_base = step.incomp_block_offsets
     for bi, (s, e) in enumerate(blocks.block_slices(step.n,
                                                     step.block_elems)):
         idx = blocks.inflate_block(step.index_blocks[bi], e - s, step.b_bits,
                                    codec=step.codec)
-        comp = prev_flat[s:e] * (1.0 + centers[idx])
+        comp = prev_flat[s:e] * (1 + centers[idx])
         mask = idx == marker
         if mask.any():
             start = int(ptr_base[bi])
             stop = start + int(mask.sum())
-            comp[mask] = step.incomp_values[start:stop].astype(np.float64)
+            comp[mask] = step.incomp_values[start:stop].astype(cdt)
         out[s:e] = comp
     return out.astype(step.dtype).reshape(step.shape)
 
@@ -193,13 +203,22 @@ class TemporalCompressor:
     blob assembly) runs on a background thread while the caller's next
     ``add``/``add_async`` drives the device encode of step i+1.  Results
     are identical to the serial path; only wall-clock changes.
+
+    ``chain`` picks the residency of the prev->recon reference chain
+    (``core.chain``): "auto" (default) keeps it device-resident whenever
+    the device can hold the dtype bit-exactly, "host" forces the original
+    NumPy chain, "device" forces the accelerator chain.  Blobs are
+    byte-identical across residencies.
     """
 
     def __init__(self, params: NumarckParams = NumarckParams(),
-                 overlap: bool = False):
+                 overlap: bool = False, chain: str = chainmod.CHAIN_AUTO):
+        if chain not in chainmod.RESIDENCIES:
+            raise ValueError(f"unknown chain residency {chain!r}")
         self.params = params
         self.overlap = overlap
-        self._state: Optional[np.ndarray] = None
+        self.chain = chain
+        self._chain: Optional[chainmod.ReferenceChain] = None
         # Bounded at two in-flight finalizes (one executing + one queued),
         # so direct add_async callers get the same ~2-step host-memory
         # bound as compress_series / the sharded driver.
@@ -212,16 +231,25 @@ class TemporalCompressor:
         next call may be issued immediately.
         """
         arr = np.asarray(arr)
-        if self._state is None:
-            self._state = arr.copy()
+        if self._chain is None or self._chain.empty:
+            self._chain = chainmod.make_reference_chain(self.chain,
+                                                        arr.dtype)
+            self._chain.seed(arr)
             return self._q.submit(pipe.finalize_anchor, arr.copy(),
                                   self.params)
-        dev = encode_device(self._state, arr, self.params)
+        # One H2D of `curr`, reused by both the encode and the chain
+        # advance when the chain lives on device.  jnp.array (a private
+        # copy, never a zero-copy alias): the chain advance reads it
+        # asynchronously after add_async returns, and callers are allowed
+        # to reuse their buffers immediately.
+        curr_in = (jnp.array(arr)
+                   if self._chain.residency == chainmod.CHAIN_DEVICE
+                   else arr)
+        dev = encode_device(self._chain.peek(), curr_in, self.params)
         if self.params.reference == REF_RECONSTRUCTED:
-            self._state = pipe.reconstruct_from_indices(
-                self._state, dev.enc, dev.centers, arr.dtype, curr=arr)
+            self._chain.advance(dev, arr)
         else:
-            self._state = arr.copy()
+            self._chain.replace(arr)
         # The background finalize reads `arr` (exception values); snapshot
         # it so callers may reuse/mutate their buffer immediately.
         curr = arr.copy() if self.overlap else arr
@@ -232,6 +260,14 @@ class TemporalCompressor:
     def add(self, arr: np.ndarray) -> CompressedStep:
         return self.add_async(arr).result()
 
+    def reference_state(self) -> Optional[np.ndarray]:
+        """Host copy of the current chain state (None before the anchor).
+        This is the only place the device-resident chain crosses to host;
+        the hot loop never does."""
+        if self._chain is None or self._chain.empty:
+            return None
+        return self._chain.to_host()
+
     def flush(self):
         """Block until every in-flight finalize has completed (re-raises
         the first background exception, if any)."""
@@ -241,7 +277,7 @@ class TemporalCompressor:
         self._q.close()
 
     def reset(self):
-        self._state = None
+        self._chain = None
 
 
 class TemporalDecompressor:
@@ -259,14 +295,15 @@ class TemporalDecompressor:
 
 
 def compress_series(arrays, params: NumarckParams = NumarckParams(),
-                    overlap: bool = False) -> List[CompressedStep]:
+                    overlap: bool = False,
+                    chain: str = chainmod.CHAIN_AUTO) -> List[CompressedStep]:
     """Compress a temporal series; ``overlap=True`` double-buffers the
     device encode of step i+1 against the host finalize of step i.
 
     At most two finalizes are in flight at once, so host memory stays
     bounded at ~2 steps regardless of series length.
     """
-    c = TemporalCompressor(params, overlap=overlap)
+    c = TemporalCompressor(params, overlap=overlap, chain=chain)
     out: List[CompressedStep] = []
     pending: deque = deque()
     try:

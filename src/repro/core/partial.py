@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core import blocks, entropy
 from repro.core.container import NCKReader, NCKWriter
+from repro.core.pipeline import reconstruction_dtype
 from repro.core.types import CompressedStep
 
 
@@ -57,9 +58,12 @@ def read_step_range(reader: NCKReader, name: str, start: int, stop: int,
 
     b_bits = info["B"]
     marker = (1 << b_bits) - 1
-    centers = reader.read_array(f"{name}_bin_centers").astype(np.float64)
+    # Reconstruction arithmetic in the source precision (matches
+    # decompress_step and the reference chain bit-exactly).
+    cdt = reconstruction_dtype(info["dtype"])
+    centers = reader.read_array(f"{name}_bin_centers").astype(cdt)
     centers = np.concatenate([centers,
-                              np.zeros(marker + 1 - centers.size)])
+                              np.zeros(marker + 1 - centers.size, cdt)])
     offs = reader.read_array(f"{name}_index_table_offset")
     inc_offs = reader.read_array(f"{name}_incompressible_table_offset")
     n_incomp = info["n_incompressible"]
@@ -75,9 +79,9 @@ def read_step_range(reader: NCKReader, name: str, start: int, stop: int,
         reader.read(f"{name}_incompressible_table", inc_lo * esize,
                     inc_hi * esize), dtype=info["dtype"])
 
-    prev_slice = np.asarray(prev_slice, np.float64).reshape(-1)
+    prev_slice = np.asarray(prev_slice).reshape(-1).astype(cdt, copy=False)
     assert prev_slice.size == stop - start
-    out = np.empty(stop - start, np.float64)
+    out = np.empty(stop - start, cdt)
     pos = 0
     for bi in range(b0, b1 + 1):
         blob = raw[pos:pos + int(offs[bi + 1] - offs[bi])]
@@ -91,7 +95,7 @@ def read_step_range(reader: NCKReader, name: str, start: int, stop: int,
         sub = idx[s - blk_lo: e - blk_lo]
         mask = sub == marker
         pv = prev_slice[s - start: e - start]
-        comp = pv * (1.0 + centers[sub])
+        comp = pv * (1 + centers[sub])
         if mask.any():
             # exceptions preceding `s` inside this block:
             lead = int(np.count_nonzero(idx[: s - blk_lo] == marker))

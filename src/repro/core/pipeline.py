@@ -22,12 +22,26 @@ the NCK container.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import entropy, packing
 from repro.core.types import CompressedStep, NumarckParams
+
+
+def reconstruction_dtype(dtype) -> np.dtype:
+    """Arithmetic precision of the reconstruction R_i = R_{i-1}*(1+c).
+
+    Reconstruction runs in the *source* precision -- float64 data in
+    float64, everything else in float32 -- so the host chain, the device
+    chain (Pallas or gather lowering) and every decompressor produce
+    bit-identical state.  Sub-f32 dtypes still compute in f32 (their
+    epsilon is comparable to typical error bounds) and round once at the
+    end, exactly like every path does.
+    """
+    dt = np.dtype(dtype)
+    return np.dtype(np.float64) if dt == np.float64 else np.dtype(np.float32)
 
 
 def block_slices(n: int, block_elems: int) -> List[Tuple[int, int]]:
@@ -55,6 +69,26 @@ class EncodedIndices:
     @property
     def marker(self) -> int:
         return (1 << self.b_bits) - 1
+
+
+@dataclass
+class DeviceEncoded:
+    """Output of the device analyze+encode stages (pre-entropy).
+
+    ``idx_dev``/``curr_dev`` are optional device handles (jax.Array) of
+    the index table and the current step, kept so a device-resident
+    ReferenceChain can advance without a host round-trip.  ``curr_dev``
+    uses the driver's own layout (the sharded driver hands over its
+    padded, mesh-sharded f32 copy).  Host consumers only read ``enc``.
+    """
+
+    enc: EncodedIndices
+    centers: np.ndarray          # rounded to the data dtype (float64 view)
+    domain_lo: float
+    width: float
+    meta: dict
+    idx_dev: Optional[Any] = None
+    curr_dev: Optional[Any] = None
 
 
 def topk_centers(ids_desc: np.ndarray, k_eff: int, domain_lo: float,
@@ -182,24 +216,29 @@ def reconstruct_from_indices(prev: np.ndarray, enc: EncodedIndices,
     REF_RECONSTRUCTED chain needs R_i before compressing step i+1, but not
     the deflated blobs -- so the entropy stage of step i can run in the
     background while the device encodes step i+1.  Bit-identical to
-    ``decompress_step`` on the finalized blob (same float64 elementwise
-    ops, same exception patch order).
+    ``decompress_step`` on the finalized blob AND to the device-resident
+    chain: arithmetic runs in ``reconstruction_dtype(dtype)`` (the source
+    precision), never silently promoting f32 chains through float64.
     """
     marker = enc.marker
-    prev_flat = np.asarray(prev, np.float64).reshape(-1)
-    centers = np.asarray(centers, np.float64)
-    lut = np.concatenate([centers, np.zeros(marker + 1 - centers.size)])
-    out = prev_flat * (1.0 + lut[enc.idx])
+    prev = np.asarray(prev)
+    cdt = reconstruction_dtype(dtype)
+    prev_flat = prev.reshape(-1).astype(cdt, copy=False)
+    centers = np.asarray(centers, np.float64).astype(cdt)
+    lut = np.concatenate([centers, np.zeros(marker + 1 - centers.size,
+                                            cdt)])
+    out = prev_flat * (1 + lut[enc.idx])
     mask = enc.idx == marker
     if mask.any():
         if incomp_values is None:
             assert curr is not None
             incomp_values = np.asarray(curr).reshape(-1)[mask]
-        out[mask] = incomp_values.astype(np.float64)
-    return out.astype(dtype).reshape(np.asarray(prev).shape)
+        out[mask] = incomp_values.astype(cdt)
+    return out.astype(dtype).reshape(prev.shape)
 
 
-__all__ = ["EncodedIndices", "block_slices", "topk_centers", "round_centers",
-           "pack_blocks_host", "exception_offsets", "exception_table",
-           "entropy_ratio", "finalize_step", "finalize_anchor",
-           "reconstruct_from_indices"]
+__all__ = ["EncodedIndices", "DeviceEncoded", "block_slices", "topk_centers",
+           "round_centers", "pack_blocks_host", "exception_offsets",
+           "exception_table", "entropy_ratio", "finalize_step",
+           "finalize_anchor", "reconstruct_from_indices",
+           "reconstruction_dtype"]

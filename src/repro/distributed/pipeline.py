@@ -26,6 +26,14 @@ traces once and replays, and with ``overlap=True`` the host finalize
 while the caller drives the device encode of step i+1 -- the sharded
 version of the paper's Sec. IV-C compute/IO overlap (at 12800 ranks the
 entropy+write stage is exactly where NUMARCK's wall-clock hides).
+
+The temporal reference chain (REF_RECONSTRUCTED) is mesh-resident by
+default: a third jit-cached shard_map stage reuses the `_decode_shard`
+dequantize kernel plus an on-device exception patch from the current
+step, so between-step state stays sharded on the devices instead of
+round-tripping through host `reconstruct_from_indices` every step.
+Byte-identical to the host chain (``chain="host"``) by construction --
+reconstruction arithmetic runs in the source precision on both paths.
 """
 from __future__ import annotations
 
@@ -41,12 +49,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import binning, ratios, select_b
+from repro.core import chain as chainmod
 from repro.core import pipeline as pipe
-from repro.core.compress import DeviceEncoded
+from repro.core.compress import decompress_step
 from repro.core.overlap import FinalizeQueue
+from repro.core.pipeline import DeviceEncoded
 from repro.core.types import (CompressedStep, NumarckParams,
                               REF_RECONSTRUCTED)
 from repro.distributed import collectives as coll
+from repro.kernels import dequant
 from repro.kernels import ops as kops
 
 
@@ -142,24 +153,36 @@ class ShardedCompressor:
     queued), inputs are snapshotted before handing them to the background
     thread, and the blobs are byte-identical to ``overlap=False`` -- both
     modes run the exact same shared finalize.
+
+    ``chain`` picks the temporal reference chain residency: "auto"
+    (default) keeps between-step state sharded and device-resident on the
+    mesh whenever the dtype allows (f32, or f64 under jax_enable_x64),
+    advancing it with the `_advance_shard` stage; "host" restores the
+    original host `reconstruct_from_indices` round-trip.  Blobs are
+    byte-identical across residencies and overlap modes.
     """
 
     def __init__(self, mesh: Mesh, axis: str = "data",
                  params: NumarckParams = NumarckParams(),
-                 use_pallas: bool = True, overlap: bool = False):
+                 use_pallas: bool = True, overlap: bool = False,
+                 chain: str = chainmod.CHAIN_AUTO):
+        if chain not in chainmod.RESIDENCIES:
+            raise ValueError(f"unknown chain residency {chain!r}")
         self.mesh = mesh
         self.axis = axis
         self.params = params
         self.use_pallas = use_pallas
         self.overlap = overlap
+        self.chain = chain
         self.n_shards = mesh.shape[axis]
         self._q = FinalizeQueue(overlap, name="shard-finalize")
-        self._state: Optional[np.ndarray] = None     # temporal chain
+        self._chain: Optional[chainmod.ReferenceChain] = None
         # jit caches: a temporal series traces each stage once per
         # (shape, B) signature instead of once per step -- without this the
         # per-step shard_map retrace dominates the sharded hot path.
         self._analyze_fns: Dict[Tuple, object] = {}
         self._encode_fns: Dict[Tuple, object] = {}
+        self._advance_fns: Dict[Tuple, object] = {}
 
     def _shardings(self):
         return (NamedSharding(self.mesh, P(self.axis)),
@@ -195,14 +218,32 @@ class ShardedCompressor:
             self._encode_fns[key] = jax.jit(fn)
         return self._encode_fns[key]
 
+    def _advance_fn(self, bb: int):
+        """Chain-advance stage: `_decode_shard` dequantize + on-device
+        exception patch from `curr` (jit-cached per B; input shapes key
+        the jit cache underneath)."""
+        key = (bb,)
+        if key not in self._advance_fns:
+            fn = shard_map(
+                partial(_advance_shard, b_bits=bb,
+                        use_pallas=self.use_pallas),
+                mesh=self.mesh,
+                in_specs=(P(self.axis), P(self.axis), P(self.axis), P()),
+                out_specs=P(self.axis), check_rep=False)
+            self._advance_fns[key] = jax.jit(fn)
+        return self._advance_fns[key]
+
     # -------------------------------------------------------- device stage
-    def _device_encode(self, prev: np.ndarray, curr: np.ndarray,
+    def _device_encode(self, prev, curr: np.ndarray,
                        b_bits: Optional[int] = None) -> DeviceEncoded:
         """Phases 1-5 on device; returns the pre-entropy encode result
         (host numpy) that both the finalize stage and the reconstructed-
-        reference chain consume."""
+        reference chain consume.
+
+        `prev` is either a host array (padded + device_put here) or the
+        mesh-resident chain state: an already padded, sharded f32
+        jax.Array of shape (n_shards * ln,), fed straight back in."""
         p = self.params
-        prev_f = np.asarray(prev, np.float32).reshape(-1)
         curr_f = np.asarray(curr, np.float32).reshape(-1)
         n = curr_f.size
         if n >= (1 << 31):
@@ -210,17 +251,26 @@ class ShardedCompressor:
                              "(see pipeline offset note)")
         P_ = self.n_shards
         ln = -(-n // P_)
-        # Pad so every shard holds ln elements; pads are invalid (prev=0).
-        prev_p = _pad_to(prev_f, P_ * ln, 0.0)
-        curr_p = _pad_to(curr_f, P_ * ln, 0.0)
-        ebytes = np.dtype(np.asarray(curr).dtype).itemsize
         sharded, _ = self._shardings()
+        # Pad so every shard holds ln elements; pads are invalid (prev=0).
+        if isinstance(prev, jax.Array):
+            if prev.shape != (P_ * ln,):
+                raise ValueError(
+                    f"device-resident chain state {prev.shape} does not "
+                    f"match this step's padded layout ({P_ * ln},); "
+                    "reset() the compressor before changing shapes")
+            prev_dev = prev
+        else:
+            prev_f = np.asarray(prev, np.float32).reshape(-1)
+            prev_dev = jax.device_put(_pad_to(prev_f, P_ * ln, 0.0),
+                                      sharded)
+        curr_dev = jax.device_put(_pad_to(curr_f, P_ * ln, 0.0), sharded)
+        ebytes = np.dtype(np.asarray(curr).dtype).itemsize
 
         analyze = self._analyze_fn(ebytes, n)
         (b_auto, ids_desc, counts_desc, domain_lo, width,
-         est_sizes) = analyze(
-            jax.device_put(prev_p, sharded), jax.device_put(curr_p, sharded),
-            jnp.float32(p.error_bound))
+         est_sizes) = analyze(prev_dev, curr_dev,
+                              jnp.float32(p.error_bound))
         # Out specs are sharded over P copies of identical values; take row 0.
         b_auto = int(np.asarray(b_auto)[0])
         bb = int(b_bits if b_bits is not None
@@ -235,13 +285,13 @@ class ShardedCompressor:
                     f"use fewer shards or larger inputs")
 
         encode = self._encode_fn(bb, k_eff, be, ln, n)
-        idx, packed, valid = encode(
-            jax.device_put(prev_p, sharded), jax.device_put(curr_p, sharded),
-            ids_desc, domain_lo, width)
+        idx_dev, packed, valid = encode(prev_dev, curr_dev,
+                                        ids_desc, domain_lo, width)
 
         # Fetch to host (blocks until the device work of THIS step is done;
         # the previous step's finalize may still be running behind us).
-        idx = np.asarray(idx).reshape(-1)[:n]
+        # idx_dev stays on the mesh for the chain-advance stage.
+        idx = np.asarray(idx_dev).reshape(-1)[:n]
         packed = np.asarray(packed)
         valid = np.asarray(valid)
         # Valid blocks in global order (shards own contiguous block ranges).
@@ -263,7 +313,8 @@ class ShardedCompressor:
                 "est_sizes": np.asarray(est_sizes)[0].tolist(),
                 "n_shards": self.n_shards, "pipeline": "sharded"}
         return DeviceEncoded(enc=enc, centers=centers, domain_lo=domain_lo,
-                             width=width, meta=meta)
+                             width=width, meta=meta,
+                             idx_dev=idx_dev, curr_dev=curr_dev)
 
     # --------------------------------------------------------- host stage
     def compress_async(self, prev: np.ndarray, curr: np.ndarray,
@@ -287,23 +338,31 @@ class ShardedCompressor:
                  b_bits: Optional[int] = None) -> CompressedStep:
         return self.compress_async(prev, curr, b_bits).result()
 
+    def _make_chain(self, dtype) -> chainmod.ReferenceChain:
+        if (chainmod.resolve_residency(self.chain, dtype)
+                == chainmod.CHAIN_DEVICE):
+            return _ShardedDeviceChain(self)
+        return chainmod.HostReferenceChain()
+
     # ------------------------------------------------- temporal streaming
     def add_async(self, arr: np.ndarray) -> "Future[CompressedStep]":
         """Streaming interface over a temporal series (first call stores a
         lossless anchor).  The reference chain advances from the
         pre-entropy encode result before returning, so the next step's
-        device work never waits on this step's entropy stage."""
+        device work never waits on this step's entropy stage; with the
+        default device-resident chain the state also never leaves the
+        mesh."""
         arr = np.asarray(arr)
-        if self._state is None:
-            self._state = arr.copy()
+        if self._chain is None or self._chain.empty:
+            self._chain = self._make_chain(arr.dtype)
+            self._chain.seed(arr)
             return self._q.submit(pipe.finalize_anchor, arr.copy(),
                                   self.params)
-        dev = self._device_encode(self._state, arr)
+        dev = self._device_encode(self._chain.peek(), arr)
         if self.params.reference == REF_RECONSTRUCTED:
-            self._state = pipe.reconstruct_from_indices(
-                self._state, dev.enc, dev.centers, arr.dtype, curr=arr)
+            self._chain.advance(dev, arr)
         else:
-            self._state = arr.copy()
+            self._chain.replace(arr)
         curr_s = np.array(arr, copy=True) if self.overlap else arr
         return self._q.submit(pipe.finalize_step, curr_s, dev.enc,
                               dev.centers, dev.domain_lo, dev.width,
@@ -332,9 +391,17 @@ class ShardedCompressor:
     def close(self):
         self._q.close()
 
+    def reference_state(self) -> Optional[np.ndarray]:
+        """Host copy of the current chain state (None before the anchor);
+        the one explicit boundary where the mesh-resident chain crosses
+        to host."""
+        if self._chain is None or self._chain.empty:
+            return None
+        return self._chain.to_host()
+
     def reset(self):
         """Drop the temporal chain state (next add() writes an anchor)."""
-        self._state = None
+        self._chain = None
 
 
 def _decode_shard(idx_l, prev_l, centers, *, b_bits, use_pallas):
@@ -344,10 +411,79 @@ def _decode_shard(idx_l, prev_l, centers, *, b_bits, use_pallas):
     return out[None]
 
 
+def _advance_shard(idx_l, prev_l, curr_l, centers, *, b_bits, use_pallas):
+    """Temporal chain advance on the mesh: the same dequantize kernel as
+    `_decode_shard` composed with the on-device exception patch from the
+    current step (one shared body, ``kops.chain_advance_core``), so
+    between-step chain state never leaves the devices."""
+    return kops.chain_advance_core(idx_l, prev_l, curr_l, centers[0],
+                                   b_bits=b_bits, use_pallas=use_pallas)
+
+
+class _ShardedDeviceChain(chainmod.ReferenceChain):
+    """Mesh-resident reference chain: state is the padded, sharded f32
+    (or f64 under x64) array the encode stages consume directly, advanced
+    by the driver's jit-cached `_advance_shard` stage."""
+
+    residency = chainmod.CHAIN_DEVICE
+
+    def __init__(self, driver: "ShardedCompressor"):
+        super().__init__()
+        self._d = driver
+        self._n = 0
+        self._shape: Optional[tuple] = None
+        self._dtype = None
+
+    def _pad_put(self, arr: np.ndarray):
+        d = self._d
+        flat = np.asarray(arr, pipe.reconstruction_dtype(arr.dtype)
+                          ).reshape(-1)
+        ln = -(-flat.size // d.n_shards)
+        sharded, _ = d._shardings()
+        return jax.device_put(_pad_to(flat, d.n_shards * ln, 0.0), sharded)
+
+    def seed(self, arr) -> None:
+        arr = np.asarray(arr)
+        if not chainmod.device_supports(arr.dtype):
+            raise ValueError(
+                f"mesh-resident chain cannot hold {arr.dtype} bit-exactly "
+                "(float64 needs jax_enable_x64)")
+        self._n, self._shape, self._dtype = arr.size, arr.shape, arr.dtype
+        self._state = self._pad_put(arr)
+
+    def replace(self, arr) -> None:
+        self.seed(arr)
+
+    def advance(self, dev: DeviceEncoded, curr) -> None:
+        bb = dev.enc.b_bits
+        # Exact cast: centers are a f64 view of dtype-rounded values.
+        centers = jnp.asarray(
+            np.asarray(dev.centers).astype(self._state.dtype))[None]
+        # dev.curr_dev is the encode stages' f32 copy; a float64 chain
+        # (x64) must patch exceptions from the source-precision values.
+        curr_dev = (dev.curr_dev if self._state.dtype == jnp.float32
+                    else self._pad_put(np.asarray(curr)))
+        fn = self._d._advance_fn(bb)
+        self._state = fn(dev.idx_dev.reshape(-1), self._state,
+                         curr_dev, centers)
+
+    def to_host(self) -> np.ndarray:
+        return (np.asarray(self._state)[: self._n]
+                .astype(self._dtype).reshape(self._shape))
+
+
 class ShardedDecompressor:
     """Distributed reconstruction: hosts inflate+unpack blocks (entropy
     stage stays on CPU, like the paper), devices run the fused dequantize
-    kernel, hosts patch exceptions."""
+    kernel **and** the exception patch (`kernels.dequant.patch_exceptions`
+    scatters the exception table on device), so reconstruction leaves the
+    accelerator exactly once -- at the final host fetch.
+
+    Reconstruction preserves the source dtype: float32 runs the f32
+    kernel, float64 runs the dtype-preserving gather path under
+    jax_enable_x64 and falls back to the (bit-identical) host
+    `decompress_step` when x64 is off -- it never silently truncates f64
+    data through an f32 kernel."""
 
     def __init__(self, mesh: Mesh, axis: str = "data",
                  use_pallas: bool = True):
@@ -359,6 +495,9 @@ class ShardedDecompressor:
     def decompress(self, step: CompressedStep,
                    prev: np.ndarray) -> np.ndarray:
         from repro.core import blocks as blk
+        cdt = pipe.reconstruction_dtype(step.dtype)
+        if cdt == np.float64 and not jax.config.jax_enable_x64:
+            return decompress_step(step, prev)
         n = step.n
         marker = (1 << step.b_bits) - 1
         # host: inflate + unpack (per-block; each block independently)
@@ -370,10 +509,8 @@ class ShardedDecompressor:
         P_ = self.n_shards
         ln = -(-n // P_)
         idx_p = _pad_to(idx.astype(np.int32), P_ * ln, marker)
-        prev_p = _pad_to(np.asarray(prev, np.float32).reshape(-1),
-                         P_ * ln, 0.0)
-        k = max(1, step.centers.size)
-        centers = step.centers.astype(np.float32)[None]
+        prev_p = _pad_to(np.asarray(prev, cdt).reshape(-1), P_ * ln, 0.0)
+        centers = step.centers.astype(cdt)[None]
 
         sharded = NamedSharding(self.mesh, P(self.axis))
         rep = NamedSharding(self.mesh, P())
@@ -383,14 +520,17 @@ class ShardedDecompressor:
             mesh=self.mesh,
             in_specs=(P(self.axis), P(self.axis), P()),
             out_specs=P(self.axis), check_rep=False)
-        out = np.asarray(jax.jit(fn)(
-            jax.device_put(idx_p, sharded), jax.device_put(prev_p, sharded),
-            jax.device_put(centers, rep))).reshape(-1)[:n]
-        # host: patch exceptions in stream order
-        mask = idx == marker
-        out = out.astype(np.float64)
-        out[mask] = step.incomp_values.astype(np.float64)
-        return out.astype(step.dtype).reshape(step.shape)
+        idx_dev = jax.device_put(idx_p, sharded)
+        out = jax.jit(fn)(idx_dev, jax.device_put(prev_p, sharded),
+                          jax.device_put(centers, rep)).reshape(-1)
+        # device: scatter the exception table over the marker lanes (the
+        # padded tail is also marker, but real markers all precede it in
+        # stream order, so the table lands exactly on the first n lanes).
+        if step.n_incompressible:
+            out = dequant.patch_exceptions(
+                out, idx_dev, jnp.asarray(step.incomp_values.astype(cdt)),
+                b_bits=step.b_bits)
+        return np.asarray(out)[:n].astype(step.dtype).reshape(step.shape)
 
 
 __all__ = ["ShardedCompressor", "ShardedDecompressor"]

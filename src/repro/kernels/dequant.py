@@ -8,8 +8,14 @@ the MXU** -- for each 1024-wide chunk of the codebook, build the one-hot
 matrix of the tile's indices against that chunk and contract with the chunk
 of centers.  For B <= 13 this is <= 8 MXU matvecs per tile, all VMEM-resident.
 
-Incompressible lanes (idx == 2^B - 1) are produced as 0 and patched by the
-caller from the exception table (irregular scatter stays on host).
+Incompressible lanes (idx == 2^B - 1) are produced as 0 by the raw kernel;
+`patch_exceptions` scatters the exception table back over them **on
+device** (one `.at[].set`), so full reconstruction never has to leave the
+accelerator.  `dequantize_jnp` is the dtype-preserving gather path used
+for float64 chains (under jax_enable_x64) and as the no-Pallas fallback;
+for float32 it is bit-identical to the Pallas kernel (the one-hot MXU
+matmul is an exact select, and the elementwise `prev * (1 + c)` is the
+same IEEE f32 op in both lowerings).
 """
 from __future__ import annotations
 
@@ -82,4 +88,44 @@ def dequantize(idx: jax.Array, prev: jax.Array, centers: jax.Array, *,
     return out.reshape(-1)[:n]
 
 
-__all__ = ["dequantize"]
+@functools.partial(jax.jit, static_argnames=("b_bits",))
+def dequantize_jnp(idx: jax.Array, prev: jax.Array, centers: jax.Array, *,
+                   b_bits: int):
+    """Dtype-preserving gather dequantize (no Pallas).
+
+    Arithmetic runs in `prev.dtype` -- the float64 chain path under
+    jax_enable_x64 -- and for float32 inputs is bit-identical to the
+    Pallas one-hot-MXU kernel.  Marker lanes return 0 like `dequantize`.
+    """
+    idx = jnp.asarray(idx)
+    prev = jnp.asarray(prev)
+    marker = (1 << b_bits) - 1
+    lut = jnp.zeros((marker + 1,), prev.dtype)
+    lut = lut.at[: centers.shape[0]].set(centers.astype(prev.dtype))
+    comp = prev * (1 + lut[jnp.clip(idx, 0, marker)])
+    return jnp.where(idx == marker, jnp.zeros((), prev.dtype), comp)
+
+
+@functools.partial(jax.jit, static_argnames=("b_bits",))
+def patch_exceptions(recon: jax.Array, idx: jax.Array,
+                     exc_values: jax.Array, *, b_bits: int):
+    """Scatter the compacted exception table over the marker lanes on
+    device: one segment-wise ``.at[].set`` replaces the host boolean-mask
+    scatter the dequantize kernel used to punt to.
+
+    The exception table is compacted in stream order, which equals the
+    per-block offset-table order (blocks partition the stream), so a
+    single global scatter patches every block's segment at once; ranged
+    readers slice the table by the offset table first and pass the slice.
+    ``exc_values`` may be padded past the true marker count -- surplus
+    positions resolve to ``idx.size`` and are dropped by the scatter.
+    """
+    marker = (1 << b_bits) - 1
+    m = exc_values.shape[0]
+    if m == 0:
+        return recon
+    pos = jnp.flatnonzero(idx == marker, size=m, fill_value=idx.shape[0])
+    return recon.at[pos].set(exc_values.astype(recon.dtype), mode="drop")
+
+
+__all__ = ["dequantize", "dequantize_jnp", "patch_exceptions"]

@@ -34,7 +34,9 @@ def _kernel(id_ref, out_ref):
     local = ids - base
     onehot = (local[:, None] == jnp.arange(BIN_CHUNK,
                                            dtype=jnp.int32)[None, :])
-    counts = jnp.sum(onehot.astype(jnp.int32), axis=0)
+    # Accumulate in the output ref's dtype: under jax_enable_x64 the sum
+    # would otherwise promote to int64 and fail the int32 ref store.
+    counts = jnp.sum(onehot, axis=0, dtype=out_ref.dtype)
     out_ref[...] += counts
 
 

@@ -8,7 +8,10 @@ compare both lowerings.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import bitpack, change_ratio, dequant, hist, ref
 
@@ -34,8 +37,11 @@ def pack_bits(idx, *, b_bits, use_pallas: bool = True):
 
 
 def dequantize(idx, prev, centers, *, b_bits, use_pallas: bool = True):
-    if not use_pallas:
-        return ref.dequantize_ref(idx, prev, centers, b_bits=b_bits)
+    # The Pallas one-hot-MXU kernel is f32-only; other dtypes (the f64
+    # chain under jax_enable_x64) take the dtype-preserving gather path,
+    # which is bit-identical for f32 anyway.
+    if not use_pallas or jnp.asarray(prev).dtype != jnp.float32:
+        return dequant.dequantize_jnp(idx, prev, centers, b_bits=b_bits)
     return dequant.dequantize(idx, prev, centers, b_bits=b_bits,
                               interpret=_interpret())
 
@@ -47,4 +53,38 @@ def histogram(bin_ids, *, max_bins, use_pallas: bool = True):
                           interpret=_interpret())
 
 
-__all__ = ["change_ratio_bins", "pack_bits", "dequantize", "histogram"]
+def patch_exceptions(recon, idx, exc_values, *, b_bits):
+    """Device-side exception scatter (see kernels.dequant)."""
+    return dequant.patch_exceptions(recon, idx, exc_values, b_bits=b_bits)
+
+
+def chain_advance_core(idx, prev, curr, centers, *, b_bits,
+                       use_pallas: bool = True):
+    """Unjitted REF_RECONSTRUCTED chain-advance body:
+
+        R_i = prev * (1 + centers[idx]);  R_i[idx == marker] = curr[...]
+
+    The exception patch comes straight from `curr` (the values the
+    finalize stage will compact into the exception table), so the result
+    is bit-identical to reconstructing from the finalized blob.  The one
+    home of the marker-patch semantics: the jitted single-device
+    `chain_advance` and the sharded `_advance_shard` stage both call it.
+    """
+    recon = dequantize(idx, prev, centers, b_bits=b_bits,
+                       use_pallas=use_pallas)
+    marker = (1 << b_bits) - 1
+    return jnp.where(jnp.asarray(idx) == marker,
+                     jnp.asarray(curr).astype(recon.dtype), recon)
+
+
+@functools.partial(jax.jit, static_argnames=("b_bits", "use_pallas"))
+def chain_advance(idx, prev, curr, centers, *, b_bits,
+                  use_pallas: bool = True):
+    """Fused device chain advance (jitted `chain_advance_core`)."""
+    return chain_advance_core(idx, prev, curr, centers, b_bits=b_bits,
+                              use_pallas=use_pallas)
+
+
+__all__ = ["change_ratio_bins", "pack_bits", "dequantize",
+           "patch_exceptions", "chain_advance", "chain_advance_core",
+           "histogram"]

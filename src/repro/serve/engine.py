@@ -10,6 +10,11 @@ Session persistence: `snapshot_cache` / `load_cache` store a decode cache
 pipeline's entropy stage (`core.entropy` codec registry, parallel host
 finalize), so a long-lived session's prefix state can be evicted to disk
 and resumed later without re-running prefill.
+
+Sessions are held as `core.chain.SessionChain` handles: the decode cache,
+resume token and position stay device-resident between requests and only
+cross to host through the handle's explicit `.to_host()` at the
+durable-write boundary (`save_session`).
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import NumarckParams, make_anchor
+from repro.core.chain import SessionChain
 from repro.core.compress import decode_anchor
 from repro.core.container import NCKReader, NCKWriter
 from repro.models.model import Model
@@ -125,24 +131,41 @@ class Engine:
         self._decode = jax.jit(
             lambda p, c, tok, pos: model.decode(p, c, token=tok, pos=pos))
         self.stats = ServeStats()
-        self.last_cache = None           # decode cache of the last generate
-        self.last_tok = None             # next (not yet emitted) token
-        self.last_pos = None             # absolute position of last_tok
+        # Device-resident session handle (cache + next token + position);
+        # host copies happen only through its .to_host() in save_session.
+        self._session: Optional[SessionChain] = None
         # aval-only (shape/dtype) session template, recorded on the first
         # decode loop: lets load_session restore the exact traced avals on
         # any engine that has generated once, even with keep_session=False
         self._sess_template = None
 
+    # Back-compat views of the session handle.
+    @property
+    def last_cache(self):
+        """Decode cache of the last retained generate (device-resident)."""
+        return self._session["cache"] if self._session is not None else None
+
+    @property
+    def last_tok(self):
+        """Next (not yet emitted) token of the retained session."""
+        return self._session["tok"] if self._session is not None else None
+
+    @property
+    def last_pos(self):
+        """Absolute position of last_tok."""
+        return self._session["pos"] if self._session is not None else None
+
     def save_session(self, path: str, codec: str = "zlib") -> Dict[str, int]:
         """Snapshot the last request batch's decode state to disk (cache +
-        resume token/position, so the session restarts mid-stream)."""
-        if self.last_cache is None:
+        resume token/position, so the session restarts mid-stream).
+
+        This is the durable-write boundary: the one place the
+        device-resident session handle crosses to host (`.to_host()`)."""
+        if self._session is None:
             raise RuntimeError(
                 "no session cache retained: construct the Engine with "
                 "keep_session=True and call generate() first")
-        sess = {"cache": self.last_cache, "tok": self.last_tok,
-                "pos": self.last_pos}
-        return snapshot_cache(sess, path, codec=codec)
+        return snapshot_cache(self._session.to_host(), path, codec=codec)
 
     def load_session(self, path: str):
         """Reload a snapshotted decode state and place it on device.
@@ -169,9 +192,7 @@ class Engine:
                 "once on this engine first (any keep_session setting)")
         sess = jax.device_put(load_cache(path,
                                          template=self._sess_template))
-        self.last_cache = sess["cache"]
-        self.last_tok = sess["tok"]
-        self.last_pos = sess["pos"]
+        self._session = SessionChain(sess)
         return self.last_cache
 
     def _decode_loop(self, cache, tok, pos, max_new: int, greedy: bool,
@@ -197,7 +218,8 @@ class Engine:
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                 {"cache": cache, "tok": tok, "pos": pos})
         if keep:
-            self.last_cache, self.last_tok, self.last_pos = cache, tok, pos
+            self._session = SessionChain({"cache": cache, "tok": tok,
+                                          "pos": pos})
         return np.stack(out, axis=1)
 
     def generate(self, prompts: np.ndarray, max_new: int = 16,
@@ -220,12 +242,13 @@ class Engine:
         advances the session state, so consecutive resume() calls stream
         onward (keep_session only governs whether generate() retains its
         cache between requests)."""
-        if self.last_cache is None:
+        if self._session is None:
             raise RuntimeError(
                 "no session to resume: generate() with keep_session=True "
                 "or load_session() first")
-        return self._decode_loop(self.last_cache, self.last_tok,
-                                 self.last_pos, max_new, greedy, key,
+        return self._decode_loop(self._session["cache"],
+                                 self._session["tok"],
+                                 self._session["pos"], max_new, greedy, key,
                                  keep=True)
 
 

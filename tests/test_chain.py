@@ -1,0 +1,320 @@
+"""ReferenceChain: device-resident vs host-resident temporal chains.
+
+The contract under test (ISSUE 4 acceptance): for the same series, a
+device-resident chain must produce blobs **byte-identical** to the host
+chain, its state must stay **bit-exact** with the decompressor's replay
+at every step (anchor -> delta -> delta boundary included), `reset()`
+must re-anchor cleanly, and reconstruction must preserve the source
+dtype (float32 vs float64) end to end.
+"""
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                               # pragma: no cover
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import (NumarckParams, TemporalCompressor,
+                        TemporalDecompressor, compress_series,
+                        decompress_series, decompress_step,
+                        mean_error_rate, reconstruction_dtype)
+from repro.core.chain import (CHAIN_AUTO, CHAIN_DEVICE, CHAIN_HOST,
+                              DeviceReferenceChain, HostReferenceChain,
+                              make_reference_chain, resolve_residency)
+from repro.core.pipeline import reconstruct_from_indices
+from repro.kernels import dequant
+
+PARAMS = NumarckParams(error_bound=1e-3, block_bytes=1024, max_bins=2048,
+                       b_max=10)
+
+
+def _series(n, steps, seed, dtype=np.float32):
+    """Temporal series with invalid ratios (zeros) and outlier exceptions
+    sprinkled on every step, so the exception path is always exercised."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(1.0, 0.4, n).astype(dtype)
+    base[::97] = 0.0
+    out = [base]
+    for t in range(steps - 1):
+        nxt = (out[-1] * (1 + 0.01 * rng.standard_normal(n))).astype(dtype)
+        nxt[(t * 13) % max(n // 8, 1):: 211] *= 30.0
+        out.append(nxt)
+    return out
+
+
+def _assert_steps_equal(a, b, label=""):
+    assert a.b_bits == b.b_bits, label
+    assert a.block_elems == b.block_elems, label
+    assert a.codec == b.codec, label
+    assert a.index_blocks == b.index_blocks, f"{label}: blobs differ"
+    assert np.array_equal(a.centers, b.centers), label
+    if a.incomp_values is None:
+        assert b.incomp_values is None, label
+    else:
+        assert np.array_equal(a.incomp_values, b.incomp_values), label
+        assert np.array_equal(a.incomp_block_offsets,
+                              b.incomp_block_offsets), label
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=600, max_value=4000))
+def test_device_chain_byte_identical_to_host_chain(seed, n):
+    """Property: over a >=8-step series with exceptions, host- and
+    device-resident chains emit byte-identical blobs and their states
+    stay bit-exact with the blob replay at every step."""
+    series = _series(n, 8, seed)
+    host = TemporalCompressor(PARAMS, chain=CHAIN_HOST)
+    dev = TemporalCompressor(PARAMS, chain=CHAIN_DEVICE)
+    replay = TemporalDecompressor()
+    assert host.reference_state() is None
+    for t, arr in enumerate(series):
+        sh = host.add(arr)
+        sd = dev.add(arr)
+        _assert_steps_equal(sh, sd, f"step {t}")
+        # anchor (t=0), first delta (t=1) and later deltas all bit-exact
+        r = replay.add(sh)
+        np.testing.assert_array_equal(r, host.reference_state(),
+                                      err_msg=f"host chain, step {t}")
+        np.testing.assert_array_equal(r, dev.reference_state(),
+                                      err_msg=f"device chain, step {t}")
+        assert r.dtype == np.float32
+
+
+def test_reset_reanchors_both_residencies():
+    series = _series(1500, 4, 7)
+    host = TemporalCompressor(PARAMS, chain=CHAIN_HOST)
+    dev = TemporalCompressor(PARAMS, chain=CHAIN_DEVICE)
+    for arr in series:
+        _ = host.add(arr), dev.add(arr)
+    host.reset()
+    dev.reset()
+    replay = TemporalDecompressor()
+    for t, arr in enumerate(_series(1500, 4, 8)):
+        sh, sd = host.add(arr), dev.add(arr)
+        if t == 0:
+            assert sh.is_anchor and sd.is_anchor
+        _assert_steps_equal(sh, sd, f"post-reset step {t}")
+        np.testing.assert_array_equal(replay.add(sh),
+                                      dev.reference_state())
+
+
+def test_overlap_modes_byte_identical_across_residencies():
+    """overlap x residency: all four mode combinations emit the same
+    bytes."""
+    series = _series(2000, 6, 21)
+    ref = compress_series(series, PARAMS, chain=CHAIN_HOST)
+    for overlap in (False, True):
+        for chain in (CHAIN_HOST, CHAIN_DEVICE, CHAIN_AUTO):
+            got = compress_series(series, PARAMS, overlap=overlap,
+                                  chain=chain)
+            for t, (a, b) in enumerate(zip(ref, got)):
+                _assert_steps_equal(a, b,
+                                    f"overlap={overlap} chain={chain} "
+                                    f"step {t}")
+
+
+def test_float64_round_trip_preserves_dtype():
+    """Satellite: reconstruction must preserve float64 (no silent f32
+    truncation, no f64 promotion of the arithmetic for f32 data)."""
+    series = _series(2500, 6, 5, dtype=np.float64)
+    comp = TemporalCompressor(PARAMS)           # auto residency
+    replay = TemporalDecompressor()
+    for t, arr in enumerate(series):
+        stp = comp.add(arr)
+        assert stp.dtype == "float64"
+        r = replay.add(stp)
+        assert r.dtype == np.float64
+        np.testing.assert_array_equal(r, comp.reference_state(),
+                                      err_msg=f"step {t}")
+        if t:
+            assert mean_error_rate(arr, r) <= PARAMS.error_bound * 1.01
+    # without x64 the auto chain must have stayed on host
+    expect = (CHAIN_DEVICE if jax.config.jax_enable_x64 else CHAIN_HOST)
+    assert comp._chain.residency == expect
+
+
+def test_reconstruction_dtype_policy():
+    assert reconstruction_dtype(np.float32) == np.float32
+    assert reconstruction_dtype(np.float64) == np.float64
+    assert reconstruction_dtype(np.float16) == np.float32
+    assert reconstruction_dtype("float64") == np.float64
+
+
+def test_reconstruct_from_indices_preserves_dtype():
+    from repro.core.compress import encode_device
+    series = _series(1200, 2, 3, dtype=np.float64)
+    prev, curr = series
+    dev = encode_device(prev, curr, PARAMS)
+    rec = reconstruct_from_indices(prev, dev.enc, dev.centers, curr.dtype,
+                                   curr=curr)
+    assert rec.dtype == np.float64
+    stp = compress_series(series, PARAMS)[1]
+    np.testing.assert_array_equal(rec, decompress_step(stp, prev))
+
+
+def test_resolve_residency_policy():
+    assert resolve_residency(CHAIN_HOST, np.float32) == CHAIN_HOST
+    assert resolve_residency(CHAIN_AUTO, np.float32) == CHAIN_DEVICE
+    assert resolve_residency(CHAIN_DEVICE, np.float32) == CHAIN_DEVICE
+    # float16 computes in f32 but must round per step on the host
+    assert resolve_residency(CHAIN_AUTO, np.float16) == CHAIN_HOST
+    if not jax.config.jax_enable_x64:
+        assert resolve_residency(CHAIN_AUTO, np.float64) == CHAIN_HOST
+        with pytest.raises(ValueError):
+            resolve_residency(CHAIN_DEVICE, np.float64)
+    with pytest.raises(ValueError):
+        resolve_residency("hovercraft", np.float32)
+
+
+def test_make_reference_chain_flavors():
+    assert isinstance(make_reference_chain(CHAIN_HOST, np.float32),
+                      HostReferenceChain)
+    c = make_reference_chain(CHAIN_AUTO, np.float32)
+    assert isinstance(c, DeviceReferenceChain)
+    c.seed(np.ones(64, np.float32))
+    assert isinstance(c.peek(), jax.Array)
+    np.testing.assert_array_equal(c.to_host(), np.ones(64, np.float32))
+
+
+def test_chain_fork_isolates_state():
+    """fork() stages an advance without mutating the parent (the
+    checkpoint manager's durability ordering relies on this)."""
+    from repro.core.compress import encode_device
+    prev, curr = _series(1000, 2, 11)
+    for residency in (CHAIN_HOST, CHAIN_DEVICE):
+        c = make_reference_chain(residency, prev.dtype)
+        c.seed(prev)
+        before = c.to_host()
+        dev = encode_device(c.peek(), curr, PARAMS)
+        f = c.fork()
+        f.advance(dev, curr)
+        np.testing.assert_array_equal(c.to_host(), before)
+        assert not np.array_equal(f.to_host(), before)
+
+
+def test_caller_may_reuse_input_buffers():
+    """The documented buffer contract: callers may reuse/mutate their
+    input buffer immediately after add_async returns.  The device chain
+    must therefore take private copies, never zero-copy aliases of the
+    caller's numpy buffer."""
+    series = _series(2048, 6, 33)
+    for residency in (CHAIN_HOST, CHAIN_DEVICE):
+        for overlap in (False, True):
+            comp = TemporalCompressor(PARAMS, overlap=overlap,
+                                      chain=residency)
+            replay = TemporalDecompressor()
+            buf = np.empty_like(series[0])
+            futs = []
+            for arr in series:
+                buf[...] = arr            # staging buffer, reused per step
+                futs.append(comp.add_async(buf))
+            comp.flush()
+            for t, f in enumerate(futs):
+                r = replay.add(f.result())
+                err = mean_error_rate(series[t], r)
+                assert err <= PARAMS.error_bound * 1.01, (
+                    residency, overlap, t, err)
+            np.testing.assert_array_equal(r, comp.reference_state())
+            comp.close()
+
+
+def test_reference_state_is_a_private_copy():
+    """Mutating the array reference_state() returns must not corrupt the
+    chain (the host flavor used to hand out its live state)."""
+    series = _series(1200, 3, 15)
+    for residency in (CHAIN_HOST, CHAIN_DEVICE):
+        comp = TemporalCompressor(PARAMS, chain=residency)
+        replay = TemporalDecompressor()
+        replay.add(comp.add(series[0]))
+        st = comp.reference_state()
+        st *= 1.01                       # caller scribbles on the copy
+        for arr in series[1:]:
+            r = replay.add(comp.add(arr))
+            np.testing.assert_array_equal(r, comp.reference_state(),
+                                          err_msg=residency)
+
+
+def test_checkpoint_device_chain_tolerates_mixed_trees(tmp_path):
+    """chain="device" must degrade to host chains per tensor for dtypes
+    the device cannot hold (int counters etc.), not fail the save."""
+    from repro.checkpoint.manager import CheckpointManager
+    rng = np.random.default_rng(0)
+    tree = {"w": rng.normal(1, 0.1, 8192).astype(np.float32),
+            "opt_count": np.arange(10, dtype=np.int64),
+            "half": rng.normal(0, 1, 4096).astype(np.float16)}
+    mgr = CheckpointManager(str(tmp_path), PARAMS, anchor_every=2,
+                            chain=CHAIN_DEVICE)
+    for s in range(3):
+        tree["w"] = (tree["w"] * (1 + 1e-4 * rng.standard_normal(8192))
+                     ).astype(np.float32)
+        mgr.save(s, tree)
+    assert mgr._recon_state["w"].residency == CHAIN_DEVICE
+    assert mgr._recon_state["opt_count"].residency == CHAIN_HOST
+    step, restored = mgr.restore_latest()
+    assert step == 2
+    np.testing.assert_array_equal(restored["opt_count"],
+                                  tree["opt_count"])
+    assert mean_error_rate(tree["w"], restored["w"]) <= 1e-3 * 1.01
+
+
+def test_patch_exceptions_matches_host_scatter():
+    """Device .at[].set scatter == the host boolean-mask patch."""
+    rng = np.random.default_rng(2)
+    b_bits = 5
+    marker = (1 << b_bits) - 1
+    n = 4096
+    idx = rng.integers(0, marker + 1, n).astype(np.int32)
+    recon = rng.normal(0, 1, n).astype(np.float32)
+    exc = rng.normal(50, 1, int((idx == marker).sum())).astype(np.float32)
+    got = np.asarray(dequant.patch_exceptions(
+        np.asarray(recon), np.asarray(idx), np.asarray(exc),
+        b_bits=b_bits))
+    want = recon.copy()
+    want[idx == marker] = exc
+    np.testing.assert_array_equal(got, want)
+    # no exceptions: identity
+    none = np.asarray(dequant.patch_exceptions(
+        np.asarray(recon), np.zeros(n, np.int32),
+        np.zeros(0, np.float32), b_bits=b_bits))
+    np.testing.assert_array_equal(none, recon)
+
+
+def test_sharded_decompressor_preserves_float64():
+    """Satellite dtype-hazard fix: the sharded decompressor must not
+    truncate float64 reconstructions through the f32 kernel; without x64
+    it falls back to the (bit-identical) host path."""
+    from jax.sharding import Mesh
+    from repro.distributed.pipeline import ShardedDecompressor
+    series = _series(1800, 3, 9, dtype=np.float64)
+    steps = compress_series(series, PARAMS)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sd = ShardedDecompressor(mesh, "data", use_pallas=False)
+    prev = series[0]
+    for stp in steps[1:]:
+        want = decompress_step(stp, prev)
+        got = sd.decompress(stp, prev)
+        assert got.dtype == np.float64
+        np.testing.assert_array_equal(got, want)
+        prev = want
+
+
+def test_dequantize_jnp_bit_identical_to_pallas():
+    rng = np.random.default_rng(4)
+    b_bits = 7
+    marker = (1 << b_bits) - 1
+    k = 100
+    n = 3000
+    idx = rng.integers(0, k, n).astype(np.int32)
+    idx[::37] = marker
+    prev = rng.normal(1.0, 0.3, n).astype(np.float32)
+    centers = (rng.normal(0, 1e-3, k)).astype(np.float32)
+    a = np.asarray(dequant.dequantize(np.asarray(idx), np.asarray(prev),
+                                      np.asarray(centers), b_bits=b_bits,
+                                      interpret=True))
+    b = np.asarray(dequant.dequantize_jnp(np.asarray(idx), np.asarray(prev),
+                                          np.asarray(centers),
+                                          b_bits=b_bits))
+    np.testing.assert_array_equal(a, b)

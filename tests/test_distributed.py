@@ -140,3 +140,96 @@ def test_sharded_overlap_byte_identical():
                          capture_output=True, text=True, timeout=600)
     assert res.returncode == 0, res.stdout + res.stderr
     assert "OK" in res.stdout
+
+
+_CHAIN_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import NumarckParams, compress_series, decompress_step
+    import repro.core.pipeline as pipe
+    from repro.distributed.pipeline import (ShardedCompressor,
+                                            ShardedDecompressor)
+
+    # Spy on the host chain-advance: the device-resident (default) chain
+    # must never call it between steps (ISSUE 4 acceptance).
+    calls = {"n": 0}
+    orig = pipe.reconstruct_from_indices
+    def spy(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+    pipe.reconstruct_from_indices = spy
+
+    rng = np.random.default_rng(17)
+    n = 23_531           # odd: padding + straddling blocks on both shards
+    base = rng.normal(1.0, 0.5, n).astype(np.float32)
+    series = [base]
+    for t in range(5):
+        nxt = (series[-1] * (1 + 0.012 * rng.standard_normal(n))
+               ).astype(np.float32)
+        nxt[t::701] *= 40.0            # exceptions on every step
+        series.append(nxt)
+
+    params = NumarckParams(error_bound=1e-3, block_bytes=2048,
+                           max_bins=4096, b_max=12)
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+
+    for use_pallas in (False, True):
+        calls["n"] = 0
+        blobs = {}
+        for chain in ("device", "host"):
+            for overlap in (False, True):
+                sc = ShardedCompressor(mesh, "data", params,
+                                       use_pallas=use_pallas,
+                                       overlap=overlap, chain=chain)
+                blobs[(chain, overlap)] = sc.compress_series(series)
+                if chain == "device":
+                    assert calls["n"] == 0, (
+                        f"device chain hit host reconstruct_from_indices "
+                        f"{calls['n']}x (use_pallas={use_pallas})")
+                    state = sc.reference_state()
+                sc.close()
+        assert calls["n"] > 0          # host flavor does use it
+
+        ref = blobs[("host", False)]
+        for key, got in blobs.items():
+            for i, (a, b) in enumerate(zip(ref, got)):
+                assert a.index_blocks == b.index_blocks, (key, i)
+                assert np.array_equal(a.centers, b.centers), (key, i)
+                if a.incomp_values is not None:
+                    assert np.array_equal(a.incomp_values,
+                                          b.incomp_values), (key, i)
+
+        # ... and byte-identical to the single-device chain (device too)
+        for chain in ("host", "device"):
+            sd_ref = compress_series(series, params, chain=chain)
+            for i, (a, b) in enumerate(zip(sd_ref, ref)):
+                assert a.index_blocks == b.index_blocks, (chain, i)
+
+        # mesh-resident state == blob replay, bit-exact; the sharded
+        # decompressor (device-side exception patch) matches too
+        prev = series[0]
+        sd = ShardedDecompressor(mesh, "data", use_pallas=use_pallas)
+        for st in ref[1:]:
+            r = decompress_step(st, prev)
+            np.testing.assert_array_equal(sd.decompress(st, prev), r)
+            prev = r
+        np.testing.assert_array_equal(state, prev)
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_device_chain_byte_identical():
+    """The mesh-resident reference chain (default) must emit blobs
+    byte-identical to the host chain in all overlap/lowering modes,
+    without ever calling host reconstruct_from_indices between steps."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, "-c", _CHAIN_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "OK" in res.stdout
