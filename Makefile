@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dist bench-entropy bench-chain bench
+.PHONY: test test-fast test-dist bench-entropy bench-entropy-smoke \
+	bench-chain bench
 
 # Tier-1 verify (full suite).
 test:
@@ -19,9 +20,15 @@ test-dist:
 	$(PY) -m pytest -q tests/test_distributed.py tests/test_checkpoint.py \
 	    tests/test_sharding.py tests/test_elastic.py
 
-# Serial vs. parallel host entropy stage across codecs / block sizes.
+# Entropy stage: serial vs parallel host codecs across block sizes, plus
+# the device rANS codec vs the threaded-zlib finalize at 1/16/64 MB.
+# Also writes the BENCH_entropy.json artifact rows.
 bench-entropy:
-	$(PY) benchmarks/bench_entropy.py
+	$(PY) benchmarks/bench_entropy.py --json BENCH_entropy.json
+
+# Device-codec rows only (the CI artifact): quick smoke at 1/16/64 MB.
+bench-entropy-smoke:
+	$(PY) benchmarks/bench_entropy.py --smoke --json BENCH_entropy.json
 
 # Host-resident vs device-resident reference chain (single + sharded).
 # Also rides along in `make bench` via bench_compression.

@@ -1,15 +1,21 @@
-"""Serial vs. parallel host entropy stage (core.entropy.compress_blocks).
+"""Host + device entropy stage benchmarks.
 
-Measures the finalize-stage speedup from the thread-pool dispatcher across
-block sizes and codecs on a >= 64 MB synthetic index table -- the paper's
-phase-6 ZLIB stage, finally parallel (cf. arXiv:1903.07761's threaded
-entropy back-end).
+Measures (a) the finalize-stage speedup from the thread-pool dispatcher
+across block sizes and codecs on a >= 64 MB synthetic index table -- the
+paper's phase-6 ZLIB stage, finally parallel (cf. arXiv:1903.07761's
+threaded entropy back-end) -- and (b) the device rANS codec
+(kernels.rans) against the threaded-zlib finalize and raw store at
+1/16/64 MB index payloads (`--smoke` runs only these rows; `--json PATH`
+writes them as a BENCH_entropy.json artifact for the CI perf trajectory).
 
 Output (CSV via benchmarks.common.emit):
     entropy/<codec>/blk=<KB>KB/<mode>, us_per_call, MB/s + speedup
+    entropy/device/<MB>MB/<codec>,     us_per_call, MB/s + CR + speedup
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
 
@@ -73,26 +79,94 @@ def bench_auto_codec(rows: list, block: int = 1 << 20,
                      f"CR={total / max(sz_pick, 1):.1f}"))
 
 
+def bench_device_codec(rows: list, sizes_mb=(1, 16, 64)):
+    """Device rANS entropy stage vs the threaded-zlib finalize vs raw
+    store on B=8 index payloads (blocks of 1 MB, the paper default).
+
+    The device path starts from the on-device index table (its bit-pack
+    rides inside the stage); the host codecs get the already-packed
+    bytes, so the comparison is conservative in zlib's favor.
+    """
+    import jax.numpy as jnp
+    from repro.kernels import rans
+
+    b_bits = 8
+    be = 1 << 20                  # 1 MB blocks at B=8
+    pool = entropy._shared_pool()
+    rng = np.random.default_rng(2)
+    for mb in sizes_mb:
+        n = mb << 20
+        idx = (rng.zipf(1.6, n).astype(np.uint64) % 251).astype(np.int32)
+        nblocks = -(-n // be)
+        blk = min(be, n)
+        idx_dev = jnp.asarray(idx)
+        raw = idx.astype(np.uint8).tobytes()     # packed bytes at B=8
+        raws = [raw[s:s + blk] for s in range(0, n, blk)]
+
+        t_dev, blobs = timeit(rans.compress_blocks_device, idx_dev,
+                              b_bits, nblocks, blk, pool=pool, repeat=2)
+        t_zlib, out_z = timeit(entropy.compress_blocks, raws,
+                               codec="zlib", parallel=True, repeat=2)
+        t_raw, _ = timeit(entropy.compress_blocks, raws, codec="raw",
+                          parallel=True, repeat=2)
+        cr_dev = n / max(sum(len(b) for b in blobs), 1)
+        cr_z = n / max(sum(len(b) for b in out_z), 1)
+        tag = f"entropy/device/{mb}MB"
+        rows.append((f"{tag}/rans_device", t_dev * 1e6,
+                     f"{mb / t_dev:.0f}MB/s CR={cr_dev:.2f} "
+                     f"speedup_vs_zlib={t_zlib / max(t_dev, 1e-9):.2f}x"))
+        rows.append((f"{tag}/zlib_threaded", t_zlib * 1e6,
+                     f"{mb / t_zlib:.0f}MB/s CR={cr_z:.2f}"))
+        rows.append((f"{tag}/raw", t_raw * 1e6,
+                     f"{mb / max(t_raw, 1e-9):.0f}MB/s CR=1.00"))
+
+
+def run(smoke: bool = False) -> list:
+    """Benchmark rows (benchmarks/run.py entry point).  ``smoke`` runs
+    only the device-codec comparison (the BENCH_entropy.json artifact)."""
+    rows: list = []
+    if not smoke:
+        for codec in ("zlib", "raw", "bz2", "lzma"):
+            total = CODEC_BYTES[codec]
+            for block in BLOCK_BYTES:
+                raws = synth_blocks(total, block)
+                t_ser, out_s = timeit(entropy.compress_blocks, raws,
+                                      codec=codec, parallel=False,
+                                      repeat=2)
+                t_par, out_p = timeit(entropy.compress_blocks, raws,
+                                      codec=codec, parallel=True, repeat=2)
+                assert out_s == out_p, \
+                    "parallel output must be byte-identical"
+                mb = total / (1 << 20)
+                speedup = t_ser / max(t_par, 1e-9)
+                tag = f"entropy/{codec}/blk={block >> 10}KB"
+                rows.append((f"{tag}/serial", t_ser * 1e6,
+                             f"{mb / t_ser:.0f}MB/s"))
+                rows.append((f"{tag}/parallel", t_par * 1e6,
+                             f"{mb / t_par:.0f}MB/s speedup={speedup:.2f}x"))
+        bench_auto_codec(rows)
+    bench_device_codec(rows)
+    return rows
+
+
+def write_json(rows: list, path: str):
+    payload = [{"name": n, "us_per_call": us, "derived": d}
+               for n, us, d in rows]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
 def main():
-    rows = []
-    for codec in ("zlib", "raw", "bz2", "lzma"):
-        total = CODEC_BYTES[codec]
-        for block in BLOCK_BYTES:
-            raws = synth_blocks(total, block)
-            t_ser, out_s = timeit(entropy.compress_blocks, raws,
-                                  codec=codec, parallel=False, repeat=2)
-            t_par, out_p = timeit(entropy.compress_blocks, raws,
-                                  codec=codec, parallel=True, repeat=2)
-            assert out_s == out_p, "parallel output must be byte-identical"
-            mb = total / (1 << 20)
-            speedup = t_ser / max(t_par, 1e-9)
-            tag = f"entropy/{codec}/blk={block >> 10}KB"
-            rows.append((f"{tag}/serial", t_ser * 1e6,
-                         f"{mb / t_ser:.0f}MB/s"))
-            rows.append((f"{tag}/parallel", t_par * 1e6,
-                         f"{mb / t_par:.0f}MB/s speedup={speedup:.2f}x"))
-    bench_auto_codec(rows)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="device-codec rows only (1/16/64 MB)")
+    ap.add_argument("--json", default=None,
+                    help="also write rows to this path (BENCH_entropy.json)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
     emit(rows)
+    if args.json:
+        write_json(rows, args.json)
 
 
 if __name__ == "__main__":

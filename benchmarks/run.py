@@ -14,19 +14,32 @@ SS Roofline for the 40 (arch x shape) cells is a separate reader
 from __future__ import annotations
 
 import argparse
+import os
 import sys
+
+# Runnable as `python benchmarks/run.py` from the repo root: put the root
+# (for `benchmarks.*`) and src (for `repro.*`) on the path.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: scaling,compression,partial,binning,"
-                         "autob,kernels,chain")
+                         "autob,kernels,chain,entropy")
+    ap.add_argument("--entropy-json", default=None, metavar="PATH",
+                    help="run the entropy smoke bench (device rANS vs "
+                         "threaded zlib vs raw at 1/16/64 MB) and write "
+                         "the rows to PATH (the BENCH_entropy.json CI "
+                         "artifact)")
     args = ap.parse_args()
 
     from benchmarks import (bench_autob, bench_binning, bench_chain,
-                            bench_compression, bench_kernels, bench_partial,
-                            bench_scaling)
+                            bench_compression, bench_entropy,
+                            bench_kernels, bench_partial, bench_scaling)
     benches = {
         "compression": bench_compression.run,
         "scaling": bench_scaling.run,
@@ -35,13 +48,23 @@ def main() -> None:
         "autob": bench_autob.run,
         "kernels": bench_kernels.run,
         "chain": bench_chain.run,
+        "entropy": bench_entropy.run,
     }
-    # "chain" rows already ride along inside bench_compression; keep them
-    # out of the default sweep so `make bench` doesn't run them twice.
+    # "chain" rows already ride along inside bench_compression, and the
+    # full "entropy" sweep has its own make target; keep both out of the
+    # default sweep so `make bench` stays bounded.
     wanted = (args.only.split(",") if args.only
-              else [b for b in benches if b != "chain"])
+              else [b for b in benches if b not in ("chain", "entropy")])
     print("name,us_per_call,derived")
     from benchmarks.common import emit
+    if args.entropy_json:
+        rows = bench_entropy.run(smoke=True)
+        emit(rows)
+        bench_entropy.write_json(rows, args.entropy_json)
+        # The smoke rows just ran; don't re-run entropy via --only, and
+        # skip the default sweep entirely when only the json was asked.
+        wanted = ([w for w in wanted if w != "entropy"] if args.only
+                  else [])
     for name in wanted:
         try:
             emit(benches[name]())

@@ -177,7 +177,10 @@ class CheckpointManager:
                 # params.reference says -- restore only ever replays
                 # reconstructions.
                 prev_chain = self._recon_state[key]
-                dev = encode_device(prev_chain.peek(), arr, self.params)
+                dev = encode_device(
+                    prev_chain.peek(), arr, self.params,
+                    need_host_idx=(prev_chain.residency
+                                   == chainmod.CHAIN_HOST))
                 st = pipe.finalize_step(arr, dev.enc, dev.centers,
                                         dev.domain_lo, dev.width,
                                         self.params, dev.meta)

@@ -35,6 +35,8 @@ from repro.core import chain as chainmod
 from repro.core import pipeline as pipe
 from repro.core.overlap import FinalizeQueue
 from repro.core.pipeline import DeviceEncoded
+from repro.kernels import ops as kops
+from repro.kernels import rans
 from repro.core.types import (CompressedStep, NumarckParams, REF_ORIGINAL,
                               REF_RECONSTRUCTED, STRATEGY_EQUAL,
                               STRATEGY_KMEANS, STRATEGY_LOG, STRATEGY_TOPK,
@@ -89,13 +91,33 @@ def decode_anchor(step: CompressedStep) -> np.ndarray:
     return np.frombuffer(raw, dtype=step.dtype).reshape(step.shape).copy()
 
 
-def encode_device(prev, curr, params: NumarckParams) -> DeviceEncoded:
+def device_entropy_route(params: NumarckParams, n: int, b_bits: int) -> bool:
+    """Route the entropy stage to the codec's device encoder?  Blobs are
+    byte-identical either way; this is purely a wall-clock decision, so
+    small payloads stay on the (cheaper-to-dispatch) host path."""
+    if not params.device_entropy or params.codec == entropy.AUTO_CODEC:
+        return False
+    try:
+        codec = entropy.get_codec(params.codec)
+    except ValueError:
+        return False
+    return codec.device and n * b_bits // 8 >= rans.DEVICE_MIN_BYTES
+
+
+def encode_device(prev, curr, params: NumarckParams,
+                  need_host_idx: bool = True) -> DeviceEncoded:
     """Device stages for one step: analyze + strategy dispatch + indexing.
 
     `prev`/`curr` may be host ndarrays or device jax.Arrays (a
     device-resident ReferenceChain feeds its state straight back in
     without a host copy); the returned ``DeviceEncoded`` carries device
     handles of the index table and `curr` for the chain advance.
+
+    ``need_host_idx=False`` (callers whose reference chain is
+    device-resident) skips the host fetch of the index table when the
+    device entropy stage also ran -- finalize then reads only the
+    pre-compressed blobs and the compacted exceptions, so nothing
+    host-side ever touches the table.
     """
     if not isinstance(prev, jax.Array):
         prev = np.asarray(prev)
@@ -136,8 +158,32 @@ def encode_device(prev, curr, params: NumarckParams) -> DeviceEncoded:
         centers = np.asarray(cs, np.float64)
 
     centers = pipe.round_centers(centers, curr.dtype)
-    enc = pipe.EncodedIndices(idx=np.asarray(idx), b_bits=b_bits,
-                              block_elems=params.block_elems(b_bits))
+    n = int(np.prod(curr.shape))
+    be = params.block_elems(b_bits)
+    marker = (1 << b_bits) - 1
+    # Exception compaction on device: finalize gathers values by position
+    # instead of re-scanning the index table with a host mask.
+    exc_counts = exc_pos = None
+    if n:
+        exc_counts, exc_pos = kops.exception_compact(idx, n, marker, be)
+    # Device entropy stage: pack + rANS-code the blocks on device; the
+    # finalize consumes the finished blobs (byte-identical to the host
+    # codec flavor, so routing never changes the file format).
+    coded = coded_name = None
+    if device_entropy_route(params, n, b_bits):
+        nblocks = -(-n // be)
+        idx_pad = jnp.pad(idx, (0, nblocks * be - n),
+                          constant_values=marker)
+        coded = rans.compress_blocks_device(idx_pad, b_bits, nblocks, be,
+                                            pool=entropy._shared_pool())
+        coded_name = params.codec
+    idx_host = (np.asarray(idx) if need_host_idx or coded is None
+                else None)
+    enc = pipe.EncodedIndices(idx=idx_host, b_bits=b_bits,
+                              block_elems=be, n=n,
+                              entropy_coded=coded, entropy_codec=coded_name,
+                              exc_positions=exc_pos,
+                              exc_block_counts=exc_counts)
     meta = {"b_auto": int(a["b_auto"]),
             "est_sizes": np.asarray(a["est_sizes"]).tolist(),
             "ratio_min": float(a["lo"]), "ratio_max": float(a["hi"])}
@@ -157,7 +203,7 @@ def compress_step(prev: np.ndarray, curr: np.ndarray,
     previously *reconstructed* state in REF_RECONSTRUCTED mode (the
     TemporalCompressor picks the right one).
     """
-    dev = encode_device(prev, curr, params)
+    dev = encode_device(prev, curr, params, need_host_idx=False)
     return pipe.finalize_step(curr, dev.enc, dev.centers, dev.domain_lo,
                               dev.width, params, dev.meta)
 
@@ -185,7 +231,7 @@ def decompress_step(step: CompressedStep,
     for bi, (s, e) in enumerate(blocks.block_slices(step.n,
                                                     step.block_elems)):
         idx = blocks.inflate_block(step.index_blocks[bi], e - s, step.b_bits,
-                                   codec=step.codec)
+                                   codec=step.codec_for_block(bi))
         comp = prev_flat[s:e] * (1 + centers[idx])
         mask = idx == marker
         if mask.any():
@@ -245,7 +291,9 @@ class TemporalCompressor:
         curr_in = (jnp.array(arr)
                    if self._chain.residency == chainmod.CHAIN_DEVICE
                    else arr)
-        dev = encode_device(self._chain.peek(), curr_in, self.params)
+        dev = encode_device(
+            self._chain.peek(), curr_in, self.params,
+            need_host_idx=self._chain.residency == chainmod.CHAIN_HOST)
         if self.params.reference == REF_RECONSTRUCTED:
             self._chain.advance(dev, arr)
         else:
@@ -323,6 +371,6 @@ def decompress_series(steps: List[CompressedStep]) -> List[np.ndarray]:
 
 
 __all__ = ["compress_step", "decompress_step", "make_anchor", "decode_anchor",
-           "encode_device", "DeviceEncoded",
+           "encode_device", "device_entropy_route", "DeviceEncoded",
            "TemporalCompressor", "TemporalDecompressor", "compress_series",
            "decompress_series"]

@@ -21,6 +21,12 @@ Fig. 2:
 Multiple variables per file are supported (paper: "NUMARCK allows multiple
 compressed variables stored in one netCDF file").  Reads are offset-based so
 partial decompression touches only the needed byte ranges.
+
+Format versions: files whose steps all use one codec per step keep the
+original "NCK1" magic (readable by every reader ever shipped); files
+carrying per-*block* codec ids -- a layout older readers cannot decode
+correctly -- are stamped "NCK2", so old readers reject them cleanly at
+open instead of mis-decoding blocks.  This reader accepts both.
 """
 from __future__ import annotations
 
@@ -33,7 +39,10 @@ import numpy as np
 
 from repro.core.types import CompressedStep
 
-_MAGIC = b"NCK1"
+_MAGIC_V1 = b"NCK1"
+_MAGIC_V2 = b"NCK2"
+_MAGICS = {_MAGIC_V1: 1, _MAGIC_V2: 2}
+_MAGIC = _MAGIC_V1              # legacy alias (default / pre-PR files)
 _ALIGN = 64
 
 
@@ -49,6 +58,9 @@ class NCKWriter:
         self._vars: Dict[str, dict] = {}
         self._dims: Dict[str, int] = {}
         self._offset = 0
+        # Bumped to 2 the moment a step with per-block codec ids is added;
+        # NCK1 files must stay readable by pre-per-block readers.
+        self._format_version = 1
 
     def add_array(self, name: str, arr: np.ndarray, attrs: Optional[dict] = None):
         arr = np.ascontiguousarray(arr)
@@ -80,6 +92,9 @@ class NCKWriter:
             n_incompressible=step.n_incompressible,
             codec=step.codec,
         )
+        if step.block_codecs is not None:
+            info["block_codecs"] = [str(c) for c in step.block_codecs]
+            self._format_version = 2
         offs_all = np.concatenate(
             [step.index_table_offsets(),
              [sum(len(b) for b in step.index_blocks)]]).astype(np.int64)
@@ -103,8 +118,9 @@ class NCKWriter:
         header = json.dumps({"dimensions": self._dims,
                              "variables": self._vars}).encode()
         tmp = path + ".tmp"
+        magic = _MAGIC_V2 if self._format_version >= 2 else _MAGIC_V1
         with open(tmp, "wb") as f:
-            f.write(_MAGIC)
+            f.write(magic)
             f.write(struct.pack("<Q", len(header)))
             f.write(header)
             f.write(b"\0" * _pad(len(_MAGIC) + 8 + len(header)))
@@ -123,8 +139,9 @@ class NCKReader:
         self.path = path
         with open(path, "rb") as f:
             magic = f.read(4)
-            if magic != _MAGIC:
+            if magic not in _MAGICS:
                 raise ValueError(f"{path}: not an NCK file")
+            self.format_version = _MAGICS[magic]
             (hlen,) = struct.unpack("<Q", f.read(8))
             header = json.loads(f.read(hlen))
         self.variables = header["variables"]
@@ -175,7 +192,8 @@ class NCKReader:
             bin_width=info["bin_width"],
             centers=self.read_array(f"{name}_bin_centers").astype(np.float64),
             block_elems=info["elements_per_block"],
-            codec=info.get("codec", "zlib"), index_blocks=blks,
+            codec=info.get("codec", "zlib"),
+            block_codecs=info.get("block_codecs"), index_blocks=blks,
             incomp_values=self.read_array(f"{name}_incompressible_table"),
             incomp_block_offsets=self.read_array(
                 f"{name}_incompressible_table_offset"))

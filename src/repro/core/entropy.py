@@ -51,6 +51,10 @@ class Codec:
     # thread pool; mark them and compress_blocks dispatches them over a
     # forked process pool instead.
     holds_gil: bool = False
+    # Codecs with a device-resident encoder: the drivers can entropy-code
+    # index blocks on the accelerator (kernels.rans) and hand finalize
+    # pre-compressed blobs byte-identical to this host flavor.
+    device: bool = False
 
     def compress(self, raw: bytes, level: int) -> bytes:
         raise NotImplementedError
@@ -105,6 +109,37 @@ class Bz2Codec(Codec):
         return bz2.decompress(blob)
 
 
+class RansCodec(Codec):
+    """Block-parallel interleaved rANS (kernels.rans).
+
+    This registry entry is the *host* (NumPy) flavor -- a lane-vectorized
+    python loop, hence ``holds_gil``.  ``device=True`` advertises the
+    accelerator encoder: drivers route index blocks through
+    ``kernels.rans.compress_blocks_device`` (or the sharded shard_map
+    stage) and finalize consumes the pre-compressed blobs; both flavors
+    emit byte-identical self-describing blobs, so files do not record
+    which one produced them.  The kernels module is imported lazily to
+    keep this module import-light (process-pool workers, NumarckParams
+    validation).
+    """
+
+    name = "rans"
+    # Deliberately NOT holds_gil: the process-pool dispatch would fork
+    # while the device entropy stage may be running jax on other threads
+    # (fork-after-jax is the hazard the pool's timeout only mitigates).
+    # The host flavor therefore serializes under the GIL -- it is the
+    # correctness/fallback path; throughput comes from the device stage.
+    device = True
+
+    def compress(self, raw: bytes, level: int) -> bytes:
+        from repro.kernels import rans
+        return rans.compress(raw)
+
+    def decompress(self, blob: bytes) -> bytes:
+        from repro.kernels import rans
+        return rans.decompress(blob)
+
+
 DEFAULT_CODEC = "zlib"
 AUTO_CODEC = "auto"
 _REGISTRY: Dict[str, Codec] = {}
@@ -139,7 +174,7 @@ def validate_codec_id(name: str) -> str:
     return name
 
 
-for _c in (ZlibCodec(), RawCodec(), LzmaCodec(), Bz2Codec()):
+for _c in (ZlibCodec(), RawCodec(), LzmaCodec(), Bz2Codec(), RansCodec()):
     register_codec(_c)
 
 # ------------------------------------------------------ adaptive selection
@@ -157,22 +192,27 @@ _AUTO_LZMA_THRESHOLD = 0.30      # probe ratio below this -> lzma pays off
 _AUTO_LZMA_MAX_BYTES = 256 << 20
 
 
-def choose_codec(raws: Sequence[bytes], level: int = 6) -> str:
-    """Pick a concrete codec from the measured compressibility of a sampled
-    block prefix (LCP-style per-chunk adaptivity, arXiv:2411.00761)."""
-    sample = b""
-    for r in raws:
-        if r:
-            sample = r[:_AUTO_SAMPLE_BYTES]
-            break
-    if not sample:
+def _probe_one(raw: bytes, allow_lzma: bool = True) -> str:
+    """One compressibility probe -> concrete codec (the auto policy)."""
+    if not raw:
         return DEFAULT_CODEC
+    sample = raw[:_AUTO_SAMPLE_BYTES]
     ratio = len(zlib.compress(sample, 1)) / len(sample)
     if ratio >= _AUTO_RAW_THRESHOLD:
         return "raw"
-    total = sum(len(r) for r in raws)
-    if ratio <= _AUTO_LZMA_THRESHOLD and total <= _AUTO_LZMA_MAX_BYTES:
+    if ratio <= _AUTO_LZMA_THRESHOLD and allow_lzma:
         return "lzma"
+    return DEFAULT_CODEC
+
+
+def choose_codec(raws: Sequence[bytes], level: int = 6) -> str:
+    """Pick a concrete codec from the measured compressibility of a sampled
+    block prefix (LCP-style per-chunk adaptivity, arXiv:2411.00761)."""
+    del level
+    total = sum(len(r) for r in raws)
+    for r in raws:
+        if r:
+            return _probe_one(r, allow_lzma=total <= _AUTO_LZMA_MAX_BYTES)
     return DEFAULT_CODEC
 
 
@@ -183,6 +223,27 @@ def resolve_codec(codec: str, raws: Sequence[bytes], level: int = 6) -> str:
         return choose_codec(raws, level)
     get_codec(codec)
     return codec
+
+
+def choose_block_codecs(raws: Sequence[bytes], level: int = 6) -> List[str]:
+    """Per-*block* codec choice: the ``"auto"`` probe applied to every
+    block rather than only the first one, so mixed hot/cold ranges get
+    mixed codecs (near-incompressible blocks go raw, highly redundant
+    blocks go lzma) and the NCK container persists one id per block.
+
+    The lzma latency cap stays a *total*-payload bound, exactly as in
+    :func:`choose_codec` -- a huge step must not go 10-40x slower just
+    because each individual block is small.  Probes are dispatched over
+    the shared thread pool on large payloads (zlib releases the GIL), so
+    the per-block policy adds no serial stall to the finalize path.
+    """
+    del level
+    total = sum(len(r) for r in raws)
+    allow_lzma = total <= _AUTO_LZMA_MAX_BYTES
+    if len(raws) >= 4 and total >= _MIN_PARALLEL_BYTES:
+        return list(_shared_pool().map(
+            lambda r: _probe_one(r, allow_lzma), raws))
+    return [_probe_one(r, allow_lzma) for r in raws]
 
 # ----------------------------------------------------------- parallel stage
 
@@ -322,6 +383,28 @@ def compress_blocks(raws: Sequence[bytes], codec: str = DEFAULT_CODEC,
     return out
 
 
+def compress_blocks_per_codec(raws: Sequence[bytes], codecs: Sequence[str],
+                              level: int = 6,
+                              parallel: bool = True) -> List[bytes]:
+    """Entropy-code every block with its *own* codec id.
+
+    One pool dispatch over all blocks (codecs interleaved, parallel
+    threshold on the *step* total, not per-codec-group totals), so a
+    small lzma group never serializes behind a big zlib group.  Per-block
+    output is byte-identical to compressing every block alone -- block
+    streams are independent whatever the dispatch.  GIL-holding codecs
+    stay correct here but serialize; the mixed-codec path is only used
+    by the ``"auto"`` palette (raw/zlib/lzma), which releases the GIL.
+    """
+    assert len(raws) == len(codecs)
+    pairs = [(r, get_codec(c)) for r, c in zip(raws, codecs)]
+    if (not parallel or len(raws) < 2
+            or sum(len(r) for r in raws) < _MIN_PARALLEL_BYTES):
+        return [c.compress(r, level) for r, c in pairs]
+    ex = _shared_pool()
+    return list(ex.map(lambda rc: rc[1].compress(rc[0], level), pairs))
+
+
 def decompress_block(blob: bytes, codec: str = DEFAULT_CODEC) -> bytes:
     return get_codec(codec).decompress(blob)
 
@@ -338,7 +421,8 @@ def decompress_blocks(blobs: Sequence[bytes], codec: str = DEFAULT_CODEC,
 
 
 __all__ = ["Codec", "ZlibCodec", "RawCodec", "LzmaCodec", "Bz2Codec",
-           "DEFAULT_CODEC", "AUTO_CODEC", "register_codec", "get_codec",
-           "codec_names", "validate_codec_id", "choose_codec",
-           "resolve_codec", "compress_blocks", "decompress_block",
+           "RansCodec", "DEFAULT_CODEC", "AUTO_CODEC", "register_codec",
+           "get_codec", "codec_names", "validate_codec_id", "choose_codec",
+           "choose_block_codecs", "resolve_codec", "compress_blocks",
+           "compress_blocks_per_codec", "decompress_block",
            "decompress_blocks"]

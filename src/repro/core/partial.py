@@ -40,6 +40,8 @@ def read_step_range(reader: NCKReader, name: str, start: int, stop: int,
         raise IndexError(f"range [{start},{stop}) outside [0,{n})")
     be = info["elements_per_block"]
     codec = info.get("codec", "zlib")
+    # Per-block codec ids (NCK2 files); fall back to the step codec.
+    block_codecs = info.get("block_codecs")
     b0, b1 = _range_blocks(start, stop, be)
 
     if is_anchor:
@@ -88,8 +90,9 @@ def read_step_range(reader: NCKReader, name: str, start: int, stop: int,
         pos += int(offs[bi + 1] - offs[bi])
         blk_lo = bi * be
         blk_hi = min(blk_lo + be, n)
-        idx = blocks.inflate_block(blob, blk_hi - blk_lo, b_bits,
-                                   codec=codec)
+        idx = blocks.inflate_block(
+            blob, blk_hi - blk_lo, b_bits,
+            codec=block_codecs[bi] if block_codecs else codec)
         s = max(start, blk_lo)
         e = min(stop, blk_hi)
         sub = idx[s - blk_lo: e - blk_lo]

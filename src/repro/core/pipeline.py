@@ -55,16 +55,38 @@ class EncodedIndices:
     ``packed`` holds the raw (pre-entropy) packed bytes of every index
     block in global order; the final block is marker-padded to the full
     ``block_elems`` so host and device packers emit identical streams.
+
+    ``entropy_coded`` is the already-entropy-coded variant of that
+    contract: drivers with a device entropy stage (kernels.rans) hand
+    finalize the finished per-block blobs (+ the codec that made them)
+    and finalize skips the host entropy stage entirely.
+
+    ``exc_positions``/``exc_block_counts`` carry the device-computed
+    exception compaction (kernels.ops.exception_compact): finalize
+    gathers the incompressible values by position instead of re-scanning
+    the full index table with a host boolean mask.
     """
 
-    idx: np.ndarray            # (n,) int32 bin ranks, marker = 2**B - 1
+    # (n,) int32 bin ranks, marker = 2**B - 1.  May be None when the
+    # driver entropy-coded and exception-compacted on device AND nothing
+    # host-side (host reference chain) will read the table -- set ``n``
+    # then, so finalize never forces a device->host fetch of it.
+    idx: Optional[np.ndarray]
     b_bits: int
     block_elems: int
+    n: Optional[int] = None    # element count; defaults to idx.size
     # Raw packed bytes per block.  Sharded driver fills this from the
     # device bit-pack kernel; None defers packing to the finalize stage
     # (host packer), which lets the overlapped stream keep the device
     # critical path free of host byte work.
     packed: Optional[List[bytes]] = None
+    # Already-entropy-coded blocks (device entropy stage) + their codec.
+    entropy_coded: Optional[List[bytes]] = None
+    entropy_codec: Optional[str] = None
+    # Device-compacted exceptions: ascending marker positions + per-block
+    # marker counts (int64).  None => finalize falls back to the host scan.
+    exc_positions: Optional[np.ndarray] = None
+    exc_block_counts: Optional[np.ndarray] = None
 
     @property
     def marker(self) -> int:
@@ -112,16 +134,25 @@ def pack_blocks_host(idx: np.ndarray, b_bits: int,
     The final partial block is padded with markers so every block packs to
     the same byte length (mirrors the device packer; decompressors only
     read the valid prefix).
+
+    One vectorized ``np.packbits`` over the marker-padded table, sliced at
+    block boundaries: every block spans a whole number of bytes
+    (block_elems is a multiple of 32, so block_elems * B is divisible by
+    8), hence packing the concatenation equals packing each block alone --
+    byte-identical to the per-block loop it replaced (asserted in
+    tests/test_rans.py).
     """
     marker = (1 << b_bits) - 1
-    out: List[bytes] = []
-    for s, e in block_slices(idx.size, block_elems):
-        chunk = idx[s:e]
-        if e - s < block_elems:
-            chunk = np.concatenate(
-                [chunk, np.full(block_elems - (e - s), marker, idx.dtype)])
-        out.append(packing.pack_indices_np(chunk, b_bits).tobytes())
-    return out
+    n = idx.size
+    if n == 0:
+        return []
+    nblocks = -(-n // block_elems)
+    total = nblocks * block_elems
+    padded = idx if total == n else np.concatenate(
+        [idx, np.full(total - n, marker, idx.dtype)])
+    packed = packing.pack_indices_np(padded, b_bits).tobytes()
+    bpb = block_elems * b_bits // 8          # bytes per block (exact)
+    return [packed[s:s + bpb] for s in range(0, nblocks * bpb, bpb)]
 
 
 def exception_offsets(incomp_mask: np.ndarray,
@@ -148,6 +179,15 @@ def entropy_ratio(blobs: List[bytes], raw_sizes: np.ndarray) -> float:
     return float(np.asarray(raw_sizes).sum()) / max(comp, 1)
 
 
+def _primary_codec(block_codecs: List[str]) -> str:
+    """Most common per-block codec (deterministic: ties break by name);
+    recorded as the step-level codec field alongside the per-block ids."""
+    counts: dict = {}
+    for c in block_codecs:
+        counts[c] = counts.get(c, 0) + 1
+    return max(sorted(counts), key=lambda c: counts[c])
+
+
 def finalize_step(curr: np.ndarray, enc: EncodedIndices,
                   centers: np.ndarray, domain_lo: float, width: float,
                   params: NumarckParams,
@@ -156,25 +196,67 @@ def finalize_step(curr: np.ndarray, enc: EncodedIndices,
 
     Single-device and sharded drivers both land here, so their output
     blobs are byte-identical for identical encode results.
+
+    Exceptions: when the encode stage compacted them on device
+    (``enc.exc_positions``), finalize gathers the k values by position --
+    the full index table is never re-scanned here.  Entropy: when the
+    encode stage already entropy-coded the blocks on device
+    (``enc.entropy_coded``), finalize consumes the blobs as-is; otherwise
+    the host codec stage runs, per-block adaptive under ``codec="auto"``
+    (a codec id per block, persisted by the NCK container).
     """
     curr = np.asarray(curr)
-    n = int(enc.idx.size)
-    incomp_values, incomp_off = exception_table(
-        enc.idx, enc.marker, enc.block_elems, curr.reshape(-1))
-    raws = (enc.packed if enc.packed is not None
-            else pack_blocks_host(enc.idx, enc.b_bits, enc.block_elems))
-    # "auto" resolves per step from the measured payload compressibility;
-    # the step (and therefore the NCK container) always records the
-    # concrete codec, so readers never see the pseudo-id.
-    codec = entropy.resolve_codec(params.codec, raws, params.zlib_level)
-    blks = entropy.compress_blocks(raws, codec=codec,
-                                   level=params.zlib_level,
-                                   parallel=params.parallel_entropy)
-    raw_sizes = np.asarray([len(r) for r in raws], np.int64)
+    n = int(enc.n if enc.n is not None else enc.idx.size)
+    if enc.exc_positions is not None:
+        incomp_values = curr.reshape(-1)[enc.exc_positions]
+        incomp_off = np.concatenate(
+            [[0], np.cumsum(enc.exc_block_counts)])[:-1].astype(np.int64)
+    else:
+        incomp_values, incomp_off = exception_table(
+            enc.idx, enc.marker, enc.block_elems, curr.reshape(-1))
+
+    block_codecs: Optional[List[str]] = None
+    if enc.entropy_coded is not None:
+        blks = enc.entropy_coded
+        codec = enc.entropy_codec or entropy.DEFAULT_CODEC
+        bpb = enc.block_elems * enc.b_bits // 8
+        raw_sizes = np.full(len(blks), bpb, np.int64)
+    else:
+        raws = (enc.packed if enc.packed is not None
+                else pack_blocks_host(enc.idx, enc.b_bits,
+                                      enc.block_elems))
+        raw_sizes = np.asarray([len(r) for r in raws], np.int64)
+        if params.codec == entropy.AUTO_CODEC and len(raws) > 1:
+            # Per-block adaptive pick; the step and the container record
+            # concrete ids only (one per block when they differ).
+            per = entropy.choose_block_codecs(raws, params.zlib_level)
+            if len(set(per)) > 1:
+                codec = _primary_codec(per)
+                block_codecs = per
+                blks = entropy.compress_blocks_per_codec(
+                    raws, per, level=params.zlib_level,
+                    parallel=params.parallel_entropy)
+            else:
+                codec = per[0]
+                blks = entropy.compress_blocks(
+                    raws, codec=codec, level=params.zlib_level,
+                    parallel=params.parallel_entropy)
+        else:
+            # "auto" on single-block payloads resolves per step, exactly
+            # as before; concrete ids pass through unchanged.
+            codec = entropy.resolve_codec(params.codec, raws,
+                                          params.zlib_level)
+            blks = entropy.compress_blocks(raws, codec=codec,
+                                           level=params.zlib_level,
+                                           parallel=params.parallel_entropy)
     centers = round_centers(centers, curr.dtype)
     if centers.size > enc.marker:
         centers = centers[:enc.marker]
-    full_meta = {"zlib_ratio": entropy_ratio(blks, raw_sizes)}
+    ratio = entropy_ratio(blks, raw_sizes)
+    # "entropy_ratio" is the stage ratio whatever the codec; "zlib_ratio"
+    # is kept as a legacy alias for existing readers.
+    full_meta = {"entropy_ratio": ratio, "zlib_ratio": ratio,
+                 "entropy_codec": codec}
     full_meta.update(meta or {})
     return CompressedStep(
         n=n, shape=tuple(curr.shape), dtype=str(curr.dtype),
@@ -182,6 +264,7 @@ def finalize_step(curr: np.ndarray, enc: EncodedIndices,
         strategy=params.strategy, reference=params.reference,
         domain_lo=float(domain_lo), bin_width=float(width),
         centers=centers, block_elems=enc.block_elems, codec=codec,
+        block_codecs=block_codecs,
         index_blocks=blks, index_block_nbytes=raw_sizes,
         incomp_values=incomp_values, incomp_block_offsets=incomp_off,
         meta=full_meta)

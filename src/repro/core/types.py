@@ -44,6 +44,11 @@ class NumarckParams:
     codec: str = "zlib"                # entropy codec (registry id or "auto")
     zlib_level: int = 6                # codec level (name kept for compat)
     parallel_entropy: bool = True      # thread-pool host finalize
+    # Route the entropy stage through the codec's device encoder when it
+    # has one (Codec.device, e.g. "rans"): blocks are entropy-coded on
+    # the accelerator and finalize consumes pre-compressed blobs.  Blobs
+    # are byte-identical to the host flavor either way.
+    device_entropy: bool = True
     reference: str = REF_RECONSTRUCTED
     kmeans_iters: int = 20
     kmeans_max_k: int = 4096           # tractability cap for k-means binning
@@ -106,11 +111,18 @@ class CompressedStep:
     centers: np.ndarray                 # float64 (k,) bin centers
     block_elems: int                    # elements_per_block
     codec: str = "zlib"                 # entropy codec id (registry name)
+    # Per-block codec ids (mixed hot/cold ranges); None => every block
+    # uses `codec`.  Persisted by the NCK container (format version 2).
+    block_codecs: Optional[list] = None
     index_blocks: list = field(default_factory=list)   # entropy-coded bytes
     index_block_nbytes: Optional[np.ndarray] = None    # raw (pre-zlib) sizes
     incomp_values: Optional[np.ndarray] = None         # original dtype
     incomp_block_offsets: Optional[np.ndarray] = None  # int64 (nblocks,)
     meta: dict = field(default_factory=dict)
+
+    def codec_for_block(self, bi: int) -> str:
+        """Entropy codec of block `bi` (the per-block id when present)."""
+        return self.block_codecs[bi] if self.block_codecs else self.codec
 
     @property
     def is_anchor(self) -> bool:

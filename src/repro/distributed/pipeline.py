@@ -51,7 +51,7 @@ from jax.experimental.shard_map import shard_map
 from repro.core import binning, ratios, select_b
 from repro.core import chain as chainmod
 from repro.core import pipeline as pipe
-from repro.core.compress import decompress_step
+from repro.core.compress import decompress_step, device_entropy_route
 from repro.core.overlap import FinalizeQueue
 from repro.core.pipeline import DeviceEncoded
 from repro.core.types import (CompressedStep, NumarckParams,
@@ -59,6 +59,7 @@ from repro.core.types import (CompressedStep, NumarckParams,
 from repro.distributed import collectives as coll
 from repro.kernels import dequant
 from repro.kernels import ops as kops
+from repro.kernels import rans
 
 
 def _pad_to(x: np.ndarray, total: int, value) -> np.ndarray:
@@ -183,6 +184,7 @@ class ShardedCompressor:
         self._analyze_fns: Dict[Tuple, object] = {}
         self._encode_fns: Dict[Tuple, object] = {}
         self._advance_fns: Dict[Tuple, object] = {}
+        self._entropy_fns: Dict[Tuple, object] = {}
 
     def _shardings(self):
         return (NamedSharding(self.mesh, P(self.axis)),
@@ -217,6 +219,59 @@ class ShardedCompressor:
                 out_specs=(P(self.axis),) * 3, check_rep=False)
             self._encode_fns[key] = jax.jit(fn)
         return self._encode_fns[key]
+
+    def _entropy_fn(self, nbmax: int, wpb: int, L: int):
+        """Device entropy stage (jit-cached shard_map): every shard rANS-
+        codes its own packed blocks, so index blocks never leave the mesh
+        before they are entropy-coded -- only the dense emission buffers
+        and 4-byte lane states cross to host for blob assembly."""
+        key = (nbmax, wpb, L)
+        if key not in self._entropy_fns:
+            fn = shard_map(
+                partial(_entropy_shard, L=L),
+                mesh=self.mesh,
+                in_specs=(P(self.axis), P(self.axis)),
+                out_specs=(P(self.axis),) * 3, check_rep=False)
+            self._entropy_fns[key] = jax.jit(fn)
+        return self._entropy_fns[key]
+
+    def _entropy_stage(self, packed, valid: np.ndarray, nblocks: int,
+                       nbytes: int) -> List[bytes]:
+        """Run the device entropy stage over the mesh-resident packed
+        blocks and assemble one self-describing blob per (valid) block in
+        global order.  Byte-identical to the single-device device stage
+        and to the host ``rans.compress`` of the same packed bytes."""
+        P_, nbmax, wpb = packed.shape
+        rows_dev = packed.reshape(P_ * nbmax, wpb)
+        stride = rans.sample_stride(nbytes)
+        samples = np.asarray(rans.sample_words(rows_dev, stride))
+        rows_idx = np.flatnonzero(valid)
+        assert rows_idx.size == nblocks, (rows_idx.size, nblocks)
+        freqs, fcs = rans.tables_from_samples(samples[rows_idx])
+        L = rans.lanes_for(nbytes)
+        # Invalid (out-of-range) rows get a placeholder table; their
+        # lanes are encoded and discarded.
+        fc_full = np.tile(rans.pack_fc(
+            rans.freq_from_counts(np.zeros(256, np.uint64))),
+            (P_ * nbmax, 1))
+        fc_full[rows_idx] = fcs
+        sharded, _ = self._shardings()
+        fc_dev = jax.device_put(fc_full.reshape(P_, nbmax, 256), sharded)
+        states, vals, masks = self._entropy_fn(nbmax, wpb, L)(packed,
+                                                              fc_dev)
+        states = np.asarray(states).reshape(P_ * nbmax, L)
+        vals = np.asarray(vals).reshape(P_ * nbmax, -1)
+        masks = np.asarray(masks).reshape(P_ * nbmax, -1)
+        blobs = []
+        for g, r in enumerate(rows_idx):
+            def raw_bytes(r=r):
+                return (np.asarray(rows_dev[r]).astype("<u4")
+                        .tobytes()[:nbytes])
+
+            blobs.append(rans.assemble_blob(nbytes, freqs[g], states[r],
+                                            vals[r][masks[r]],
+                                            raw_bytes=raw_bytes))
+        return blobs
 
     def _advance_fn(self, bb: int):
         """Chain-advance stage: `_decode_shard` dequantize + on-device
@@ -288,22 +343,44 @@ class ShardedCompressor:
         idx_dev, packed, valid = encode(prev_dev, curr_dev,
                                         ids_desc, domain_lo, width)
 
-        # Fetch to host (blocks until the device work of THIS step is done;
-        # the previous step's finalize may still be running behind us).
-        # idx_dev stays on the mesh for the chain-advance stage.
-        idx = np.asarray(idx_dev).reshape(-1)[:n]
-        packed = np.asarray(packed)
-        valid = np.asarray(valid)
-        # Valid blocks in global order (shards own contiguous block ranges).
-        packed = packed.reshape(-1, packed.shape[-1])
-        rows = packed[valid.reshape(-1)]     # (nblocks, words_per_block)
+        marker = (1 << bb) - 1
+        exc_counts, exc_pos = kops.exception_compact(
+            idx_dev.reshape(-1), n, marker, be)
+        valid_np = np.asarray(valid).reshape(-1)
         nblocks = -(-n // be)
-        assert rows.shape[0] == nblocks, (rows.shape, nblocks)
         nbytes_block = be * bb // 8
-        raws = [r.astype("<u4").tobytes()[:nbytes_block] for r in rows]
+        raws = coded = coded_name = None
+        if device_entropy_route(p, n, bb):
+            # Entropy-code on the mesh; only emission buffers cross to
+            # host.  The packed words never leave the devices un-coded.
+            coded = self._entropy_stage(packed, valid_np, nblocks,
+                                        nbytes_block)
+            coded_name = p.codec
+        else:
+            packed_h = np.asarray(packed)
+            # Valid blocks in global order (shards own contiguous ranges).
+            packed_h = packed_h.reshape(-1, packed_h.shape[-1])
+            rows = packed_h[valid_np]        # (nblocks, words_per_block)
+            assert rows.shape[0] == nblocks, (rows.shape, nblocks)
+            raws = [r.astype("<u4").tobytes()[:nbytes_block] for r in rows]
+
+        # Host copy of the index table (blocks until the device work of
+        # THIS step is done; the previous step's finalize may still be
+        # running behind us).  With device entropy + device exceptions the
+        # finalize never reads it, so only a host-resident reference chain
+        # still needs the fetch; idx_dev stays on the mesh for the
+        # chain-advance stage either way.
+        need_host_idx = coded is None or (
+            self._chain is not None
+            and self._chain.residency == chainmod.CHAIN_HOST)
+        idx = (np.asarray(idx_dev).reshape(-1)[:n] if need_host_idx
+               else None)
 
         enc = pipe.EncodedIndices(idx=idx, b_bits=bb, block_elems=be,
-                                  packed=raws)
+                                  n=n, packed=raws, entropy_coded=coded,
+                                  entropy_codec=coded_name,
+                                  exc_positions=exc_pos,
+                                  exc_block_counts=exc_counts)
         domain_lo = float(np.asarray(domain_lo)[0])
         width = float(np.asarray(width)[0])
         centers = pipe.topk_centers(np.asarray(ids_desc)[0], k_eff,
@@ -402,6 +479,16 @@ class ShardedCompressor:
     def reset(self):
         """Drop the temporal chain state (next add() writes an anchor)."""
         self._chain = None
+
+
+def _entropy_shard(words_l, fc_l, *, L):
+    """Per-shard device entropy: rANS-scan the shard's packed blocks
+    (kernels.rans.encode_bytes_body) with their per-block fused tables.
+    Returns (states, per-block emission buffers, masks); the host only
+    compacts each block's contiguous buffer into its blob."""
+    st, vals, masks = rans.encode_bytes_body(
+        rans.words_to_bytes(words_l[0]), fc_l[0], L)
+    return st[None], vals[None], masks[None]
 
 
 def _decode_shard(idx_l, prev_l, centers, *, b_bits, use_pallas):
@@ -504,7 +591,7 @@ class ShardedDecompressor:
         idx = np.concatenate([
             blk.inflate_block(b, min(step.block_elems,
                                      n - i * step.block_elems),
-                              step.b_bits, codec=step.codec)
+                              step.b_bits, codec=step.codec_for_block(i))
             for i, b in enumerate(step.index_blocks)])
         P_ = self.n_shards
         ln = -(-n // P_)

@@ -12,6 +12,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import bitpack, change_ratio, dequant, hist, ref
 
@@ -58,6 +59,32 @@ def patch_exceptions(recon, idx, exc_values, *, b_bits):
     return dequant.patch_exceptions(recon, idx, exc_values, b_bits=b_bits)
 
 
+def exception_compact(idx, n, marker, block_elems):
+    """Device-side incompressible compaction for the encode stage.
+
+    Returns (per-block marker counts (nblocks,) int64, ascending marker
+    positions (k,) int64) computed on device -- the host finalize gathers
+    the k exception values by position instead of re-scanning the full
+    index table with a boolean mask.  The nonzero size is padded to the
+    next power of two so the jit cache stays bounded (<= log2(n) entries)
+    across steps with varying exception counts.
+    """
+    flat = jnp.asarray(idx).reshape(-1)[:n]
+    mask = flat == marker
+    nblocks = -(-n // block_elems)
+    padded = jnp.pad(mask, (0, nblocks * block_elems - n))
+    counts = np.asarray(
+        padded.reshape(nblocks, block_elems).sum(axis=1,
+                                                 dtype=jnp.int32)
+    ).astype(np.int64)
+    k = int(counts.sum())
+    if k == 0:
+        return counts, np.zeros(0, np.int64)
+    size = min(1 << (k - 1).bit_length(), n)
+    (pos,) = jnp.nonzero(mask, size=size, fill_value=n)
+    return counts, np.asarray(pos)[:k].astype(np.int64)
+
+
 def chain_advance_core(idx, prev, curr, centers, *, b_bits,
                        use_pallas: bool = True):
     """Unjitted REF_RECONSTRUCTED chain-advance body:
@@ -86,5 +113,5 @@ def chain_advance(idx, prev, curr, centers, *, b_bits,
 
 
 __all__ = ["change_ratio_bins", "pack_bits", "dequantize",
-           "patch_exceptions", "chain_advance", "chain_advance_core",
-           "histogram"]
+           "patch_exceptions", "exception_compact", "chain_advance",
+           "chain_advance_core", "histogram"]

@@ -1,0 +1,436 @@
+"""Block-parallel interleaved rANS coder (device entropy stage).
+
+The paper's phase-6 entropy stage is host zlib; this module moves it onto
+the accelerator.  Each index-table block is compressed *independently*
+(so partial decompression keeps its block granularity) by an interleaved
+range-asymmetric-numeral-system coder:
+
+  * a block's byte stream is split into ``L`` interleaved lanes (lane l
+    owns bytes l, l+L, l+2L, ...); every lane is an independent rANS
+    state, so one encode step advances all lanes of all blocks with pure
+    vector ALU ops -- the sequential dependency of classic rANS becomes a
+    ``lax.scan`` over ``len/L`` steps with lane-parallel bodies (blocks
+    map to disjoint lane groups, the grid-tile analogue).
+  * 32-bit states with 16-bit renormalization and ``SCALE_BITS``-bit
+    frequencies.  With freq >= 1 the renorm emits **exactly 0 or 1**
+    uint16 per symbol (state < 2^32 implies post-shift state < 2^16 <=
+    freq << (32-SCALE_BITS)), which is what makes the emission schedule
+    decodable without per-lane length tables: the decoder replays the
+    same schedule in reverse.
+  * frequency tables are built from a strided byte sample and normalized
+    with a deterministic largest-quota scheme that gives **every** byte
+    value a nonzero frequency -- sampling can therefore never break
+    correctness, only (marginally) the ratio.
+
+The encode lowering follows the ``core.packing`` pattern: a pure-jnp
+device path (``encode_idx_group`` / ``encode_words_body``, jit- and
+shard_map-safe) with a NumPy oracle (``encode_np``) that emits
+byte-identical streams; the histogram side reuses the same
+sample-normalize code on both paths so host- and device-produced blobs
+are byte-identical by construction.  Decode (``decompress``) is the host
+side used by ``decompress_step`` / ``partial.read_step_range``.
+
+Blob layout (little-endian), self-describing per block:
+
+  v1 (rANS): u32 raw_len | u8 1 | u8 scale_bits | u16 L |
+             256*u16 freq | u32 n_emit | L*u32 states | n_emit*u16 stream
+  v0 (raw):  u32 raw_len | u8 0 | raw bytes          (store fallback when
+             the rANS stream would not beat raw -- near-random blocks)
+"""
+from __future__ import annotations
+
+import functools
+import struct
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SCALE_BITS = 12
+M = 1 << SCALE_BITS                 # total frequency budget per table
+STATE_LO = 1 << 16                  # renormalization lower bound
+_HDR = struct.Struct("<IBBH")       # raw_len, version, scale_bits, lanes
+_RAW_HDR = struct.Struct("<IB")     # raw_len, version=0
+_V_RANS = 1
+_V_RAW = 0
+
+# Below this raw payload (total packed bytes of a step) the drivers keep
+# the host codec path: jit-cache churn and per-call dispatch would eat the
+# win.  Blobs are byte-identical either way, so this is pure routing.
+DEVICE_MIN_BYTES = 256 << 10
+
+
+def lanes_for(n: int) -> int:
+    """Interleave width for an n-byte block (deterministic: part of the
+    format -- encoder and decoder must agree).  More lanes amortize the
+    scan length; each lane costs 4 bytes of final state."""
+    if n >= 512 << 10:
+        return 1024
+    if n >= 64 << 10:
+        return 512
+    if n >= 8 << 10:
+        return 128
+    return 32
+
+
+def sample_stride(n: int) -> int:
+    """Byte-sampling stride for the frequency tables (deterministic, part
+    of the format contract between the host and device encoders)."""
+    return 16 if n >= 256 << 10 else 1
+
+
+# ------------------------------------------------------------- tables
+
+def freq_from_counts(counts: np.ndarray) -> np.ndarray:
+    """(256,) counts -> (256,) uint16 frequencies summing to M, every
+    symbol >= 1 (so unsampled bytes stay encodable).
+
+    Deterministic largest-quota allocation: each symbol gets 1 plus its
+    share of the remaining budget via cumulative integer boundaries --
+    one vector pass, no data-dependent iteration, identical results on
+    every path.
+    """
+    counts = np.asarray(counts, np.uint64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.full(256, M // 256, np.uint16)
+    budget = np.uint64(M - 256)
+    bounds = (np.cumsum(counts) * budget) // np.uint64(total)
+    extra = np.diff(np.concatenate([[np.uint64(0)], bounds]))
+    return (1 + extra).astype(np.uint16)
+
+
+def freq_table(raw: np.ndarray) -> np.ndarray:
+    """Frequency table of a raw byte block (strided sample + normalize)."""
+    raw = np.asarray(raw, np.uint8)
+    if raw.size == 0:
+        return freq_from_counts(np.zeros(256, np.uint64))
+    sample = raw[:: sample_stride(raw.size)]
+    return freq_from_counts(np.bincount(sample, minlength=256))
+
+
+def _cum(freq: np.ndarray) -> np.ndarray:
+    f = np.asarray(freq, np.uint64)
+    return np.concatenate([[np.uint64(0)], np.cumsum(f)[:-1]])
+
+
+def pack_fc(freq: np.ndarray) -> np.ndarray:
+    """Fuse freq+cumfreq into one u32 table (freq in bits 0..12, cum in
+    13..24) so the scan body does a single gather per symbol."""
+    return (np.asarray(freq, np.uint32)
+            | (_cum(freq).astype(np.uint32) << np.uint32(13)))
+
+
+# ------------------------------------------------- NumPy coder (oracle)
+
+def encode_np(raw: np.ndarray, freq: np.ndarray):
+    """Encode one block: (L,) u32 final states + (n_emit,) u16 stream.
+
+    Lanes interleave by stride L; symbols are visited in reverse row
+    order (standard rANS encodes backwards); the emitted stream is laid
+    out in the decoder's read order (row ascending, lane ascending).
+    """
+    raw = np.asarray(raw, np.uint8)
+    n = raw.size
+    L = lanes_for(n)
+    m = -(-n // L) if n else 0
+    sy = np.zeros(m * L, np.uint8)
+    sy[:n] = raw
+    sy = sy.reshape(m, L)
+    f64 = np.asarray(freq, np.uint64)
+    c64 = _cum(freq)
+    f_rows = f64[sy]                    # (m, L) gathered once
+    c_rows = c64[sy]
+    x = np.full(L, STATE_LO, np.uint64)
+    vals = np.zeros((m, L), np.uint16)
+    masks = np.zeros((m, L), bool)
+    for j in range(m - 1, -1, -1):
+        f = f_rows[j]
+        mask = x >= (f << np.uint64(32 - SCALE_BITS))
+        vals[j] = (x & np.uint64(0xFFFF)).astype(np.uint16)
+        masks[j] = mask
+        x = np.where(mask, x >> np.uint64(16), x)
+        q = x // f
+        x = (q << np.uint64(SCALE_BITS)) + (x - q * f) + c_rows[j]
+    return x.astype(np.uint32), vals[masks]
+
+
+def decode_np(states: np.ndarray, stream: np.ndarray, freq: np.ndarray,
+              n: int, L: int) -> np.ndarray:
+    """Inverse of encode_np (lane-vectorized; validates stream integrity)."""
+    m = -(-n // L) if n else 0
+    f64 = np.asarray(freq, np.uint64)
+    c64 = _cum(freq)
+    slot2sym = np.repeat(np.arange(256, dtype=np.uint8),
+                         np.asarray(freq, np.int64))
+    if slot2sym.size != M:
+        raise ValueError("corrupt rANS table: frequencies sum != 2^scale")
+    x = np.asarray(states, np.uint64).copy()
+    if x.size != L:
+        raise ValueError("corrupt rANS blob: state count != lanes")
+    out = np.zeros((m, L), np.uint8)
+    ptr = 0
+    for j in range(m):
+        slot = x & np.uint64(M - 1)
+        s = slot2sym[slot]
+        out[j] = s
+        x = f64[s] * (x >> np.uint64(SCALE_BITS)) + slot - c64[s]
+        need = x < STATE_LO
+        k = int(need.sum())
+        if k:
+            nxt = stream[ptr:ptr + k]
+            if nxt.size != k:
+                raise ValueError("corrupt rANS blob: stream underrun")
+            x[need] = (x[need] << np.uint64(16)) | nxt.astype(np.uint64)
+            ptr += k
+    if ptr != stream.size or (x != STATE_LO).any():
+        raise ValueError("corrupt rANS blob: stream not consumed cleanly")
+    return out.reshape(-1)[:n]
+
+
+# ------------------------------------------------------- blob assembly
+
+def blob_nbytes(n_emit: int, L: int) -> int:
+    return _HDR.size + 512 + 4 + 4 * L + 2 * n_emit
+
+
+def assemble_blob(raw_len: int, freq: np.ndarray, states: np.ndarray,
+                  stream: np.ndarray,
+                  raw_bytes: Optional[Callable[[], bytes]] = None) -> bytes:
+    """Assemble the self-describing block blob; falls back to the v0 raw
+    container when rANS would not beat store (``raw_bytes`` supplies the
+    payload lazily -- only fetched for losing blocks)."""
+    L = int(states.size)
+    if raw_bytes is not None and \
+            blob_nbytes(stream.size, L) >= raw_len + _RAW_HDR.size:
+        return _RAW_HDR.pack(raw_len, _V_RAW) + raw_bytes()
+    return b"".join([
+        _HDR.pack(raw_len, _V_RANS, SCALE_BITS, L),
+        np.ascontiguousarray(freq, np.uint16).tobytes(),
+        struct.pack("<I", int(stream.size)),
+        np.ascontiguousarray(states, np.uint32).tobytes(),
+        np.ascontiguousarray(stream, np.uint16).tobytes(),
+    ])
+
+
+def compress(raw: bytes) -> bytes:
+    """Host (NumPy) flavor: bytes -> self-describing rANS blob."""
+    arr = np.frombuffer(raw, np.uint8)
+    freq = freq_table(arr)
+    states, stream = encode_np(arr, freq)
+    return assemble_blob(arr.size, freq, states, stream,
+                         raw_bytes=lambda: bytes(raw))
+
+
+def decompress(blob: bytes) -> bytes:
+    """Decode a block blob (v0 raw or v1 rANS) back to its raw bytes."""
+    if len(blob) < _RAW_HDR.size:
+        raise ValueError("rANS blob too short")
+    n, version = _RAW_HDR.unpack_from(blob)
+    if version == _V_RAW:
+        out = blob[_RAW_HDR.size:_RAW_HDR.size + n]
+        if len(out) != n:
+            raise ValueError("corrupt raw blob: truncated payload")
+        return out
+    if version != _V_RANS:
+        raise ValueError(f"unknown rANS blob version {version}")
+    n, _, sb, L = _HDR.unpack_from(blob)
+    if sb != SCALE_BITS:
+        raise ValueError(f"unsupported rANS scale_bits {sb}")
+    off = _HDR.size
+    freq = np.frombuffer(blob, np.uint16, 256, off)
+    off += 512
+    (n_emit,) = struct.unpack_from("<I", blob, off)
+    off += 4
+    states = np.frombuffer(blob, np.uint32, L, off)
+    off += 4 * L
+    stream = np.frombuffer(blob, np.uint16, n_emit, off)
+    return decode_np(states, stream, freq, n, L).tobytes()
+
+
+# ------------------------------------------------------ device lowering
+
+def words_to_bytes(words: jax.Array) -> jax.Array:
+    """(..., w) u32 words -> (..., 4w) u8, little-endian (matches the
+    ``astype('<u4').tobytes()`` host fetch byte for byte)."""
+    parts = [((words >> jnp.uint32(8 * k)) & jnp.uint32(0xFF))
+             for k in range(4)]
+    stacked = jnp.stack(parts, axis=-1)
+    return stacked.reshape(*words.shape[:-1], -1).astype(jnp.uint8)
+
+
+def pack_words(idx2d: jax.Array, b_bits: int) -> jax.Array:
+    """(nb, be) int32 indices -> (nb, be*b/32) u32 words of the
+    little-endian bitstream (same math as the Pallas bitpack kernel,
+    vectorized over blocks; be must be a multiple of 32)."""
+    nb, be = idx2d.shape
+    g = idx2d.reshape(nb, be // 32, 32).astype(jnp.uint32)
+    maskv = jnp.uint32((1 << b_bits) - 1)
+    words = [jnp.zeros((nb, be // 32), jnp.uint32) for _ in range(b_bits)]
+    for j in range(32):                       # static unroll
+        v = g[:, :, j] & maskv
+        bit0 = j * b_bits
+        w, s = divmod(bit0, 32)
+        words[w] = words[w] | (v << jnp.uint32(s))
+        if s + b_bits > 32:                   # spills into the next word
+            words[w + 1] = words[w + 1] | (v >> jnp.uint32(32 - s))
+    return jnp.stack(words, axis=-1).reshape(nb, -1)
+
+
+def encode_bytes_body(byts: jax.Array, fc: jax.Array, L: int):
+    """Shared scan body (jit- and shard_map-safe): encode every block of
+    ``byts`` (nb, nbytes) u8 with its fused table row of ``fc`` (nb, 256)
+    u32.  Returns (states (nb, L) u32, vals (nb, m*L) u16, masks
+    (nb, m*L) bool) with each block's emissions laid out contiguously in
+    decoder order (j ascending, lane ascending): the host compacts a
+    block's stream with one contiguous boolean index
+    ``vals[k][masks[k]]``.  (An on-device prefix-sum scatter was
+    benchmarked instead and lost badly -- XLA CPU scatters are
+    scalarized.)"""
+    nb, nbytes = byts.shape
+    m = -(-nbytes // L)
+    pad = m * L - nbytes
+    if pad:
+        byts = jnp.pad(byts, ((0, 0), (0, pad)))
+    sy = byts.reshape(nb, m, L).astype(jnp.int32)
+    sy = jnp.transpose(sy, (1, 0, 2)).reshape(m, nb * L)[::-1]
+    base = jnp.repeat(jnp.arange(nb, dtype=jnp.int32), L) * 256
+    fc_flat = fc.reshape(-1)
+
+    def body(x, s):
+        v = fc_flat[base + s]
+        f = v & jnp.uint32(0x1FFF)
+        c = v >> jnp.uint32(13)
+        mask = (x >> jnp.uint32(32 - SCALE_BITS)) >= f
+        val = (x & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+        x = jnp.where(mask, x >> jnp.uint32(16), x)
+        q = x // f
+        x = (q << jnp.uint32(SCALE_BITS)) + (x - q * f) + c
+        return x, (val, mask)
+
+    x0 = jnp.full((nb * L,), jnp.uint32(STATE_LO))
+    xf, (vals, masks) = jax.lax.scan(body, x0, sy)
+    # decoder order per block: j ascending (undo the scan flip), lanes
+    # ascending, contiguous per block.
+    vals = jnp.transpose(vals[::-1].reshape(m, nb, L),
+                         (1, 0, 2)).reshape(nb, m * L)
+    masks = jnp.transpose(masks[::-1].reshape(m, nb, L),
+                          (1, 0, 2)).reshape(nb, m * L)
+    return xf.reshape(nb, L), vals, masks
+
+
+@functools.partial(jax.jit, static_argnames=("b_bits", "L"))
+def encode_idx_group(idx2d: jax.Array, fc: jax.Array, b_bits: int, L: int):
+    """Device encode of a block group straight from B-bit indices:
+    bit-pack (word math of the bitpack kernel) -> bytes -> rANS scan."""
+    return encode_bytes_body(words_to_bytes(pack_words(idx2d, b_bits)),
+                             fc, L)
+
+
+@functools.partial(jax.jit, static_argnames=("b_bits", "stride"))
+def sampled_idx_bytes(idx2d: jax.Array, b_bits: int,
+                      stride: int) -> jax.Array:
+    """Every ``stride``-th byte of each block's packed stream, computed
+    directly from the indices (no full bit-pack needed): byte k mixes the
+    <= 7//b + 2 indices straddling bits [8k, 8k+8)."""
+    nb, be = idx2d.shape
+    nbytes = be * b_bits // 8
+    p = np.arange(0, nbytes, stride, dtype=np.int64)
+    bit0 = 8 * p
+    i0 = bit0 // b_bits
+    maskv = jnp.uint32((1 << b_bits) - 1)
+    acc = jnp.zeros((nb, p.size), jnp.uint32)
+    for t in range(7 // b_bits + 2):          # static unroll
+        i = i0 + t
+        sh = i * b_bits - bit0                # alignment shift per byte
+        keep = (i < be) & (sh < 8)            # bits >= 8 never reach byte k
+        iv = np.where(i < be, i, 0).astype(np.int32)
+        v = idx2d[:, iv].astype(jnp.uint32) & maskv
+        shp = jnp.asarray(np.clip(sh, 0, 31).astype(np.uint32))[None, :]
+        shn = jnp.asarray(np.clip(-sh, 0, 31).astype(np.uint32))[None, :]
+        contrib = jnp.where(jnp.asarray(sh >= 0)[None, :],
+                            v << shp, v >> shn)
+        acc = acc | jnp.where(jnp.asarray(keep)[None, :], contrib, 0)
+    return (acc & jnp.uint32(0xFF)).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def sample_words(words2d: jax.Array, stride: int) -> jax.Array:
+    """Strided byte sample of per-row packed words (sharded driver path;
+    bit-equal to ``raw[::stride]`` of the row's little-endian bytes)."""
+    if stride == 1:
+        return words_to_bytes(words2d)
+    assert stride % 4 == 0, "stride must be 1 or a multiple of 4"
+    return (words2d[:, ::stride // 4] & jnp.uint32(0xFF)).astype(jnp.uint8)
+
+
+def tables_from_samples(samples: np.ndarray):
+    """Per-block (freq (nb, 256) u16, fused fc (nb, 256) u32) from the
+    sampled bytes of each block."""
+    freqs = np.stack([freq_from_counts(np.bincount(row, minlength=256))
+                      for row in np.asarray(samples, np.uint8)])
+    fcs = np.stack([pack_fc(f) for f in freqs])
+    return freqs, fcs
+
+
+def compress_blocks_device(idx_dev: jax.Array, b_bits: int, nblocks: int,
+                           block_elems: int,
+                           pool=None) -> List[bytes]:
+    """Single-device entropy stage: marker-padded indices (nblocks *
+    block_elems,) on device -> one self-describing rANS blob per block.
+
+    Blocks are split into groups dispatched over ``pool`` threads; each
+    group runs one jitted pack+scan executable (jax releases the GIL
+    during execution, so groups run device-parallel) and compacts its
+    emissions on the worker.  Byte-identical to the host
+    ``rans.compress`` of the same packed bytes by construction.
+    """
+    be = block_elems
+    nbytes = be * b_bits // 8
+    stride = sample_stride(nbytes)
+    L = lanes_for(nbytes)
+    idx2d = idx_dev.reshape(nblocks, be)
+    samples = np.asarray(sampled_idx_bytes(idx2d, b_bits, stride))
+    freqs, fcs = tables_from_samples(samples)
+    fc_dev = jnp.asarray(fcs)
+
+    workers = getattr(pool, "_max_workers", 1) if pool is not None else 1
+    ngroups = max(1, min(nblocks, workers))
+    gsize = -(-nblocks // ngroups)
+    spans = [(s, min(s + gsize, nblocks))
+             for s in range(0, nblocks, gsize)]
+
+    def encode_span(span) -> List[bytes]:
+        g0, g1 = span
+        st, vals, masks = encode_idx_group(idx2d[g0:g1], fc_dev[g0:g1],
+                                           b_bits, L)
+        st = np.asarray(st)
+        vals = np.asarray(vals)
+        masks = np.asarray(masks)
+        blobs = []
+        for k in range(g1 - g0):
+            def raw_bytes(k=k):
+                idx_h = np.asarray(idx2d[g0 + k]).astype(np.int64)
+                from repro.core.packing import pack_indices_np
+                return pack_indices_np(idx_h, b_bits).tobytes()[:nbytes]
+
+            blobs.append(assemble_blob(nbytes, freqs[g0 + k], st[k],
+                                       vals[k][masks[k]],
+                                       raw_bytes=raw_bytes))
+        return blobs
+
+    if pool is not None and len(spans) > 1:
+        parts = list(pool.map(encode_span, spans))
+    else:
+        parts = [encode_span(s) for s in spans]
+    return [b for part in parts for b in part]
+
+
+__all__ = ["SCALE_BITS", "M", "STATE_LO", "DEVICE_MIN_BYTES", "lanes_for",
+           "sample_stride", "freq_from_counts", "freq_table", "pack_fc",
+           "encode_np", "decode_np", "blob_nbytes", "assemble_blob",
+           "compress", "decompress", "words_to_bytes", "pack_words",
+           "encode_bytes_body", "encode_idx_group", "sampled_idx_bytes",
+           "sample_words", "tables_from_samples",
+           "compress_blocks_device"]

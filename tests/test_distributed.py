@@ -142,6 +142,80 @@ def test_sharded_overlap_byte_identical():
     assert "OK" in res.stdout
 
 
+_RANS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import NumarckParams, compress_step, decompress_step
+    from repro.core import compress_series, decompress_series
+    from repro.kernels import rans
+    rans.DEVICE_MIN_BYTES = 0        # force the device stage at test sizes
+    from repro.distributed.pipeline import ShardedCompressor
+
+    rng = np.random.default_rng(41)
+    n = 50_111          # odd: padding + straddling blocks
+    prev = rng.normal(1.0, 0.6, n).astype(np.float32)
+    prev[::101] = 0.0
+    curr = (prev * (1 + 0.015 * rng.standard_normal(n))).astype(np.float32)
+    curr[::503] *= 50.0
+
+    params = NumarckParams(error_bound=1e-3, block_bytes=2048,
+                           max_bins=4096, b_max=12, codec="rans")
+    ref = compress_step(prev, curr, params)
+    assert ref.codec == "rans"
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    for use_pallas in (False, True):
+        sc = ShardedCompressor(mesh, "data", params, use_pallas=use_pallas)
+        got = sc.compress(prev, curr)
+        assert got.index_blocks == ref.index_blocks, use_pallas
+        assert np.array_equal(got.incomp_values, ref.incomp_values)
+        assert np.array_equal(got.incomp_block_offsets,
+                              ref.incomp_block_offsets)
+        rec = decompress_step(got, prev)
+        from repro.core import mean_error_rate
+        assert mean_error_rate(curr, rec) <= params.error_bound * 1.01
+
+    # overlapped sharded series with the device codec == sync == single
+    base = rng.normal(1.0, 0.5, n).astype(np.float32)
+    series = [base]
+    for _ in range(3):
+        series.append((series[-1] * (1 + 0.012 * rng.standard_normal(n)))
+                      .astype(np.float32))
+    sd_ref = compress_series(series, params)
+    for overlap in (False, True):
+        sc = ShardedCompressor(mesh, "data", params, use_pallas=False,
+                               overlap=overlap)
+        blobs = sc.compress_series(series)
+        sc.close()
+        for i, (a, b) in enumerate(zip(sd_ref, blobs)):
+            assert a.index_blocks == b.index_blocks, (overlap, i)
+    # device-codec archive decompresses bit-identically to the zlib chain
+    rec_r = decompress_series(sd_ref)
+    rec_z = decompress_series(compress_series(
+        series, NumarckParams(error_bound=1e-3, block_bytes=2048,
+                              max_bins=4096, b_max=12, codec="zlib")))
+    for a, b in zip(rec_r, rec_z):
+        np.testing.assert_array_equal(a, b)
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_rans_byte_identical():
+    """The device entropy stage (shard_map rANS) must emit blobs
+    byte-identical to the single-device driver and the host codec, in
+    both lowering modes and under overlap."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, "-c", _RANS_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "OK" in res.stdout
+
+
 _CHAIN_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"

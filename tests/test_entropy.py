@@ -12,7 +12,7 @@ from repro.core import entropy
 from repro.core.compress import decode_anchor
 
 RNG = np.random.default_rng(11)
-CODECS = ["zlib", "raw", "lzma", "bz2"]
+CODECS = ["zlib", "raw", "lzma", "bz2", "rans"]
 
 
 def _series(shape=(96, 40), steps=4, vol=0.01, dtype=np.float32):

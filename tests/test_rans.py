@@ -1,0 +1,356 @@
+"""Device entropy stage: block-parallel rANS kernel + per-block codecs.
+
+Covers the PR's byte-exactness contract end to end: the NumPy coder
+round-trips adversarial distributions (property tests), the jnp device
+lowering emits byte-identical blobs to the host codec, both drivers route
+through the same stage, per-block codec ids survive the NCK container and
+partial reads, and the vectorized host packer matches the old loop.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core import (NCKReader, NCKWriter, NumarckParams, compress_series,
+                        compress_step, decompress_series, decompress_step,
+                        mean_error_rate)
+from repro.core import entropy, packing
+from repro.core import pipeline as pipe
+from repro.core.compress import encode_device
+from repro.core.partial import TemporalArchive, read_step_range
+from repro.kernels import ops as kops
+from repro.kernels import rans
+
+RNG = np.random.default_rng(23)
+
+
+def _payload(kind: str, n: int) -> np.ndarray:
+    rng = np.random.default_rng(n + len(kind))
+    if kind == "zipf":
+        return (rng.zipf(1.6, n).astype(np.uint64) % 251).astype(np.uint8)
+    if kind == "uniform":
+        return rng.integers(0, 256, n).astype(np.uint8)
+    if kind == "single":
+        return np.full(n, 7, np.uint8)
+    if kind == "marker":
+        return np.full(n, 0xFF, np.uint8)
+    if kind == "two":
+        return rng.choice(np.array([3, 250], np.uint8), n)
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------ property round-trip
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(["zipf", "uniform", "single", "marker", "two"]),
+       st.integers(min_value=0, max_value=300_000))
+def test_rans_round_trip_property(kind, n):
+    raw = _payload(kind, n).tobytes()
+    blob = rans.compress(raw)
+    assert rans.decompress(blob) == raw
+
+
+def test_rans_boundary_sizes():
+    """Lane/stride rule boundaries and degenerate blocks round-trip."""
+    for n in (0, 1, 2, 31, 32, 33, (8 << 10) - 1, 8 << 10,
+              (64 << 10) - 1, 64 << 10, (256 << 10) - 1, 256 << 10,
+              (512 << 10) + 17):
+        for kind in ("zipf", "single", "uniform"):
+            raw = _payload(kind, n).tobytes()
+            assert rans.decompress(rans.compress(raw)) == raw, (kind, n)
+
+
+def test_rans_raw_fallback_on_incompressible():
+    raw = _payload("uniform", 200_000).tobytes()
+    blob = rans.compress(raw)
+    assert len(blob) == len(raw) + 5          # v0 store container
+    assert rans.decompress(blob) == raw
+
+
+def test_freq_table_invariants():
+    for kind in ("zipf", "single", "marker", "uniform"):
+        f = rans.freq_table(_payload(kind, 100_000))
+        assert int(f.sum()) == rans.M
+        assert (f >= 1).all()                  # sampling can't break encode
+    assert int(rans.freq_table(np.zeros(0, np.uint8)).sum()) == rans.M
+
+
+def test_corrupt_blob_rejected():
+    raw = _payload("zipf", 10_000).tobytes()
+    blob = bytearray(rans.compress(raw))
+    with pytest.raises(ValueError):
+        rans.decompress(bytes(blob[:40]))      # truncated
+    blob[4] = 9                                # unknown version
+    with pytest.raises(ValueError):
+        rans.decompress(bytes(blob))
+
+
+# ------------------------------------------- device lowering byte-identity
+
+def test_device_encode_matches_host_codec():
+    """kernels.rans device pack+scan == host rans.compress, per block."""
+    b_bits, be, nblocks = 9, 4096, 5
+    rng = np.random.default_rng(3)
+    idx = rng.integers(0, (1 << b_bits) - 1, nblocks * be).astype(np.int32)
+    idx[::37] = (1 << b_bits) - 1
+    blobs = rans.compress_blocks_device(jnp.asarray(idx), b_bits, nblocks,
+                                        be)
+    nbytes = be * b_bits // 8
+    for k in range(nblocks):
+        raw = packing.pack_indices_np(
+            idx[k * be:(k + 1) * be].astype(np.int64),
+            b_bits).tobytes()[:nbytes]
+        assert blobs[k] == rans.compress(raw), k
+        assert rans.decompress(blobs[k]) == raw, k
+
+
+@pytest.mark.parametrize("b_bits", [1, 5, 8, 12, 16])
+def test_sampled_idx_bytes_matches_pack(b_bits):
+    """The pre-pack byte sampler must reproduce the real packed stream."""
+    be, nblocks = 1024, 3
+    rng = np.random.default_rng(b_bits)
+    idx = rng.integers(0, 1 << b_bits, nblocks * be).astype(np.int32)
+    nbytes = be * b_bits // 8
+    got = np.asarray(rans.sampled_idx_bytes(
+        jnp.asarray(idx).reshape(nblocks, be), b_bits, 1))
+    for k in range(nblocks):
+        raw = packing.pack_indices_np(
+            idx[k * be:(k + 1) * be].astype(np.int64),
+            b_bits).tobytes()[:nbytes]
+        np.testing.assert_array_equal(got[k], np.frombuffer(raw, np.uint8))
+
+
+def test_sample_words_matches_byte_sample():
+    rng = np.random.default_rng(11)
+    words = rng.integers(0, 1 << 32, (4, 256), dtype=np.uint64
+                         ).astype(np.uint32)
+    raw = np.stack([np.frombuffer(w.astype("<u4").tobytes(), np.uint8)
+                    for w in words])
+    for stride in (1, 16):
+        got = np.asarray(rans.sample_words(jnp.asarray(words), stride))
+        np.testing.assert_array_equal(got, raw[:, ::stride])
+
+
+# ------------------------------------------------ driver / finalize routes
+
+def _series(shape, steps=3, vol=0.01, dtype=np.float32, seed=5):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(1.0, 0.5, shape).astype(dtype)
+    out = [base]
+    for _ in range(steps - 1):
+        out.append((out[-1] * (1 + vol * rng.standard_normal(shape)))
+                   .astype(dtype))
+    return out
+
+
+def test_device_route_equals_host_route(monkeypatch):
+    """Forcing the device entropy stage must not change a byte of any
+    step (device-vs-host codec byte-compat)."""
+    rng = np.random.default_rng(9)
+    prev = rng.normal(1, 0.4, 150_000).astype(np.float32)
+    curr = (prev * (1 + 0.01 * rng.standard_normal(prev.size))
+            ).astype(np.float32)
+    curr[::211] *= 30.0
+    p = NumarckParams(error_bound=1e-3, codec="rans", block_bytes=1 << 16)
+    host = compress_step(prev, curr,
+                         dataclasses.replace(p, device_entropy=False))
+    monkeypatch.setattr(rans, "DEVICE_MIN_BYTES", 0)
+    dev = compress_step(prev, curr, p)
+    assert dev.index_blocks == host.index_blocks
+    np.testing.assert_array_equal(dev.incomp_values, host.incomp_values)
+    np.testing.assert_array_equal(dev.incomp_block_offsets,
+                                  host.incomp_block_offsets)
+    assert dev.codec == host.codec == "rans"
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_rans_series_round_trip_bit_exact(dtype, monkeypatch):
+    """Compressed-with-rans series decompresses bit-identically to the
+    zlib chain (the entropy stage is lossless whatever the codec)."""
+    monkeypatch.setattr(rans, "DEVICE_MIN_BYTES", 0)
+    series = _series((64, 210), steps=4, dtype=dtype)
+    p_r = NumarckParams(error_bound=1e-3, codec="rans", block_bytes=4096)
+    p_z = NumarckParams(error_bound=1e-3, codec="zlib", block_bytes=4096)
+    rec_r = decompress_series(compress_series(series, p_r))
+    rec_z = decompress_series(compress_series(series, p_z))
+    for a, b in zip(rec_r, rec_z):
+        np.testing.assert_array_equal(a, b)
+        assert a.dtype == dtype
+    assert mean_error_rate(series[-1], rec_r[-1]) <= 1e-3 * 1.01
+
+
+def test_rans_through_container_and_partial(monkeypatch, tmp_path):
+    monkeypatch.setattr(rans, "DEVICE_MIN_BYTES", 0)
+    series = _series((40_000,), steps=3)
+    p = NumarckParams(error_bound=1e-3, codec="rans", block_bytes=8192)
+    steps = compress_series(series, p)
+    path = os.path.join(tmp_path, "r.nck")
+    TemporalArchive.write(path, "v", steps)
+    arch = TemporalArchive(path)
+    full = decompress_series(steps)
+    for it in range(len(steps)):
+        sl = arch.read_range("v", it, 1234, 9876)
+        np.testing.assert_array_equal(sl, full[it].reshape(-1)[1234:9876])
+
+
+# ------------------------------------------------------- per-block codecs
+
+def _mixed_step():
+    """A step whose blocks span the compressibility range (auto -> mixed
+    per-block codecs)."""
+    rng = np.random.default_rng(17)
+    n = 1 << 19
+    prev = rng.normal(1, 0.3, n).astype(np.float32)
+    curr = prev.copy()
+    curr[: n // 2] *= np.float32(1 + 1e-5)
+    curr[n // 2:] *= (1 + 0.3 * rng.standard_normal(n // 2)
+                      ).astype(np.float32)
+    p = NumarckParams(error_bound=1e-3, codec="auto", block_bytes=1 << 14)
+    return prev, curr, compress_step(prev, curr, p)
+
+
+def test_auto_picks_per_block_codecs():
+    prev, curr, st = _mixed_step()
+    assert st.block_codecs is not None
+    assert len(st.block_codecs) == st.n_blocks
+    assert len(set(st.block_codecs)) > 1          # genuinely mixed
+    assert st.codec in set(st.block_codecs)        # primary is concrete
+    rec = decompress_step(st, prev)
+    assert mean_error_rate(curr, rec) <= 1e-3 * 1.01
+
+
+def test_per_block_codecs_survive_container_and_partial(tmp_path):
+    prev, curr, st = _mixed_step()
+    path = os.path.join(tmp_path, "m.nck")
+    w = NCKWriter()
+    w.add_step("v", st)
+    w.write(path)
+    with open(path, "rb") as f:
+        assert f.read(4) == b"NCK2"        # per-block files bump version
+    r = NCKReader(path)
+    assert r.format_version == 2
+    st2 = r.read_step("v")
+    assert st2.block_codecs == st.block_codecs
+    full = decompress_step(st2, prev)
+    np.testing.assert_array_equal(full, decompress_step(st, prev))
+    pf = np.asarray(prev).reshape(-1)
+    sl = read_step_range(r, "v", 100_000, 300_000, pf[100_000:300_000])
+    np.testing.assert_array_equal(sl, full.reshape(-1)[100_000:300_000])
+
+
+def test_uniform_codec_files_stay_v1(tmp_path):
+    """No per-block ids -> NCK1 magic: old readers keep loading them."""
+    series = _series((96, 40))
+    steps = compress_series(series, NumarckParams(error_bound=1e-3))
+    path = os.path.join(tmp_path, "u.nck")
+    w = NCKWriter()
+    for i, s in enumerate(steps):
+        w.add_step(f"v_it{i:05d}", s)
+    w.write(path)
+    with open(path, "rb") as f:
+        assert f.read(4) == b"NCK1"
+    assert NCKReader(path).format_version == 1
+
+
+def test_old_reader_rejects_v2_magic(tmp_path):
+    """An NCK1-era reader knows only the NCK1 magic; NCK2 files must fail
+    its magic check (emulated here) instead of being mis-decoded."""
+    prev, curr, st = _mixed_step()
+    path = os.path.join(tmp_path, "m.nck")
+    w = NCKWriter()
+    w.add_step("v", st)
+    w.write(path)
+    with open(path, "rb") as f:
+        magic = f.read(4)
+    assert magic != b"NCK1"                    # the old reader's only check
+    with pytest.raises(ValueError):            # unknown magics still reject
+        path3 = os.path.join(tmp_path, "bad.nck")
+        with open(path3, "wb") as f:
+            f.write(b"NCK3" + b"\0" * 64)
+        NCKReader(path3)
+
+
+# -------------------------------------------------- satellite: exceptions
+
+def test_exception_compact_matches_host_scan():
+    rng = np.random.default_rng(29)
+    for n, be in ((10_000, 512), (4096, 4096), (70_001, 2048)):
+        b_bits = 8
+        marker = (1 << b_bits) - 1
+        idx = rng.integers(0, marker + 1, n).astype(np.int32)
+        counts, pos = kops.exception_compact(jnp.asarray(idx), n, marker,
+                                             be)
+        mask = idx == marker
+        np.testing.assert_array_equal(pos, np.flatnonzero(mask))
+        ref_off = pipe.exception_offsets(mask, be)
+        np.testing.assert_array_equal(
+            np.concatenate([[0], np.cumsum(counts)])[:-1], ref_off)
+    # no exceptions at all
+    counts, pos = kops.exception_compact(jnp.zeros(100, jnp.int32), 100,
+                                         255, 64)
+    assert pos.size == 0 and counts.sum() == 0
+
+
+def test_finalize_exception_fields_equal_host_path():
+    rng = np.random.default_rng(31)
+    prev = rng.normal(1, 0.4, 60_000).astype(np.float32)
+    curr = (prev * (1 + 0.01 * rng.standard_normal(prev.size))
+            ).astype(np.float32)
+    curr[::97] *= 25.0
+    p = NumarckParams(error_bound=1e-3, block_bytes=4096)
+    dev = encode_device(prev, curr, p)
+    assert dev.enc.exc_positions is not None
+    a = pipe.finalize_step(curr, dev.enc, dev.centers, dev.domain_lo,
+                           dev.width, p, dev.meta)
+    stripped = dataclasses.replace(dev.enc, exc_positions=None,
+                                   exc_block_counts=None)
+    b = pipe.finalize_step(curr, stripped, dev.centers, dev.domain_lo,
+                           dev.width, p, dev.meta)
+    assert a.index_blocks == b.index_blocks
+    np.testing.assert_array_equal(a.incomp_values, b.incomp_values)
+    np.testing.assert_array_equal(a.incomp_block_offsets,
+                                  b.incomp_block_offsets)
+
+
+# ------------------------------------------- satellite: vectorized packer
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=20_000),
+       st.sampled_from([1, 4, 8, 9, 12, 16]))
+def test_pack_blocks_host_matches_per_block_loop(n, b_bits):
+    rng = np.random.default_rng(n * 31 + b_bits)
+    idx = rng.integers(0, 1 << b_bits, n).astype(np.int32)
+    be = 32 * max(1, (n // 3) // 32)
+    got = pipe.pack_blocks_host(idx, b_bits, be)
+    # the pre-vectorization reference: marker-pad + pack one block at a time
+    marker = (1 << b_bits) - 1
+    want = []
+    for s in range(0, n, be):
+        chunk = idx[s:s + be]
+        if chunk.size < be:
+            chunk = np.concatenate(
+                [chunk, np.full(be - chunk.size, marker, idx.dtype)])
+        want.append(packing.pack_indices_np(chunk, b_bits).tobytes())
+    assert got == want
+
+
+# --------------------------------------------------- satellite: meta keys
+
+def test_entropy_ratio_meta_key_and_alias():
+    series = _series((96, 40))
+    for codec in ("zlib", "raw", "rans"):
+        st_ = compress_step(series[0], series[1],
+                            NumarckParams(error_bound=1e-3, codec=codec,
+                                          block_bytes=4096))
+        assert st_.meta["entropy_codec"] == codec
+        assert st_.meta["entropy_ratio"] == st_.meta["zlib_ratio"]
+        if codec == "raw":
+            assert abs(st_.meta["entropy_ratio"] - 1.0) < 1e-9
