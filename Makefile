@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-dist bench-entropy bench-entropy-smoke \
-	bench-chain bench
+	bench-chain bench bench-all bench-all-smoke bench-check
 
 # Tier-1 verify (full suite).
 test:
@@ -37,3 +37,30 @@ bench-chain:
 
 bench:
 	$(PY) benchmarks/run.py
+
+# The committed perf trajectory: write BENCH_entropy.json,
+# BENCH_chain.json and BENCH_compression.json into the repo root in the
+# stable diffable schema (machine/config header + named rows).
+bench-all:
+	$(PY) benchmarks/run.py --bench-all --out-dir .
+
+# Reduced in-process variant for CI: rows are a name-identical subset of
+# the full bench-all rows, so bench-check gates them against the
+# committed artifacts.
+OUT ?= .
+bench-all-smoke:
+	mkdir -p $(OUT)
+	$(PY) benchmarks/run.py --bench-all --smoke --out-dir $(OUT)
+
+# Regression gate: compare fresh BENCH JSONs in $(OUT) against the
+# committed ones.  TOL is the allowed fractional timing growth (local
+# same-machine runs keep the 0.5 default; CI passes a generous value
+# because runner hardware differs from the tracked machine).
+TOL ?= 0.5
+RATIO_TOL ?= 0.05
+bench-check:
+	@rc=0; for b in entropy chain compression; do \
+	  $(PY) benchmarks/check_regression.py \
+	    --tracked BENCH_$$b.json --current $(OUT)/BENCH_$$b.json \
+	    --tolerance $(TOL) --ratio-tolerance $(RATIO_TOL) || rc=1; \
+	done; exit $$rc

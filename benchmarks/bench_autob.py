@@ -35,7 +35,7 @@ def run() -> list:
                 best_b, best_cr = b, cr
             rows.append((f"fig16_17_{name}_B{b}", t * 1e6,
                          f"CR={cr:.2f} zlib_ratio="
-                         f"{st.meta['zlib_ratio']:.2f}"
+                         f"{st.meta['entropy_ratio']:.2f}"
                          + (" <-auto" if b == b_auto else "")))
         rows.append((f"fig16_17_{name}_summary", 0.0,
                      f"auto_B={b_auto} optimal_B={best_b} "

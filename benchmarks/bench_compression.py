@@ -25,7 +25,12 @@ E = 1e-3                       # paper: error threshold 0.1%
 SCALE = {"sedov": 1, "stir": 2, "asr": 2, "cmip": 2}
 
 
-def run(datasets=("sedov", "stir", "asr", "cmip")) -> list:
+def run(datasets=("sedov", "stir", "asr", "cmip"),
+        include_sharded: bool = True, include_chain: bool = True) -> list:
+    """``include_sharded``/``include_chain`` gate the subprocess rides
+    (2-device sharded stream, chain residency) so the smoke variant of
+    `make bench-all` stays in-process; smoke rows remain a name-identical
+    subset of the full run's rows."""
     rows: list[Row] = []
     for name in datasets:
         series = list(generate_series(name, n_iterations=3, seed=11,
@@ -76,11 +81,13 @@ def run(datasets=("sedov", "stir", "asr", "cmip")) -> list:
         t_zl, blob_l = timeit(zlib_lossless.compress, curr, repeat=1)
         rows.append((f"fig9_12_cr_zlib_{name}", t_zl * 1e6,
                      f"CR={nbytes/blob_l.nbytes:.2f} ME=0"))
-    rows.extend(run_sharded_overlap())
-    # host-chain vs device-chain residency (single-device and sharded,
-    # overlap on/off) -- the ReferenceChain refactor, measured.
-    from benchmarks import bench_chain
-    rows.extend(bench_chain.run())
+    if include_sharded:
+        rows.extend(run_sharded_overlap())
+    if include_chain:
+        # host-chain vs device-chain residency (single-device and sharded,
+        # overlap on/off) -- the ReferenceChain refactor, measured.
+        from benchmarks import bench_chain
+        rows.extend(bench_chain.run())
     return rows
 
 
@@ -95,8 +102,10 @@ _OVERLAP_BENCH = textwrap.dedent("""
     from repro.distributed.pipeline import ShardedCompressor
 
     rng = np.random.default_rng(5)
-    n = 4_000_000                     # 16 MB/step f32
-    steps = 8
+    # Sized so both modes (each warmed + timed) finish on the small
+    # tracked machine; the row's point is the overlap speedup ratio.
+    n = 500_000                       # 2 MB/step f32
+    steps = 4
     base = rng.normal(1.0, 0.5, n).astype(np.float32)
     series = [base]
     for _ in range(steps - 1):
@@ -104,7 +113,7 @@ _OVERLAP_BENCH = textwrap.dedent("""
                        * (1 + 0.01 * rng.standard_normal(n)))
                       .astype(np.float32))
 
-    params = NumarckParams(error_bound=1e-3, zlib_level=9)
+    params = NumarckParams(error_bound=1e-3)
     mesh = Mesh(np.array(jax.devices()), ("data",))
 
     def run(overlap):

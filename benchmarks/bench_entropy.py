@@ -15,7 +15,6 @@ Output (CSV via benchmarks.common.emit):
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 
@@ -24,8 +23,14 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
 
-from common import timeit, emit  # noqa: E402
+from common import timeit, emit, write_bench_json  # noqa: E402
 from repro.core import entropy   # noqa: E402
+
+# Device-codec payload sizes: the smoke sweep is a name-identical prefix
+# of the full sweep, so check_regression can compare smoke CI rows
+# against committed full-run artifacts by row-name intersection.
+FULL_SIZES_MB = (1, 16, 64)
+SMOKE_SIZES_MB = (1, 16)
 
 TOTAL_BYTES = 64 << 20           # acceptance floor: >= 64 MB
 BLOCK_BYTES = [256 << 10, 1 << 20, 4 << 20]
@@ -121,9 +126,12 @@ def bench_device_codec(rows: list, sizes_mb=(1, 16, 64)):
                      f"{mb / max(t_raw, 1e-9):.0f}MB/s CR=1.00"))
 
 
-def run(smoke: bool = False) -> list:
+def run(smoke: bool = False, sizes_mb=None) -> list:
     """Benchmark rows (benchmarks/run.py entry point).  ``smoke`` runs
-    only the device-codec comparison (the BENCH_entropy.json artifact)."""
+    only the device-codec comparison (the BENCH_entropy.json artifact)
+    at the reduced SMOKE_SIZES_MB payload sweep."""
+    if sizes_mb is None:
+        sizes_mb = SMOKE_SIZES_MB if smoke else FULL_SIZES_MB
     rows: list = []
     if not smoke:
         for codec in ("zlib", "raw", "bz2", "lzma"):
@@ -145,28 +153,32 @@ def run(smoke: bool = False) -> list:
                 rows.append((f"{tag}/parallel", t_par * 1e6,
                              f"{mb / t_par:.0f}MB/s speedup={speedup:.2f}x"))
         bench_auto_codec(rows)
-    bench_device_codec(rows)
+    bench_device_codec(rows, sizes_mb=sizes_mb)
     return rows
 
 
-def write_json(rows: list, path: str):
-    payload = [{"name": n, "us_per_call": us, "derived": d}
-               for n, us, d in rows]
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1)
+def write_json(rows: list, path: str, smoke: bool = False,
+               sizes_mb=None):
+    """BENCH_entropy.json in the shared schema (machine header + rows)."""
+    if sizes_mb is None:
+        sizes_mb = SMOKE_SIZES_MB if smoke else FULL_SIZES_MB
+    write_bench_json(path, "entropy", rows,
+                     config={"smoke": smoke,
+                             "sizes_mb": list(sizes_mb),
+                             "block_bytes": BLOCK_BYTES})
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="device-codec rows only (1/16/64 MB)")
+                    help="device-codec rows only, reduced payload sweep")
     ap.add_argument("--json", default=None,
                     help="also write rows to this path (BENCH_entropy.json)")
     args = ap.parse_args()
     rows = run(smoke=args.smoke)
     emit(rows)
     if args.json:
-        write_json(rows, args.json)
+        write_json(rows, args.json, smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,129 @@
+"""CI perf regression gate over the committed BENCH_*.json artifacts.
+
+Compares a freshly produced BENCH JSON (``--current``) against the
+tracked one in the repo (``--tracked``) by **row-name intersection** --
+the smoke variants of `make bench-all` emit name-identical subsets of
+the full runs, so a CI smoke run gates cleanly against committed full
+artifacts.  Two kinds of checks:
+
+  * timing: each row's ``us_per_call`` may grow by at most
+    ``--tolerance`` (fractional; 0.5 = +50%).  Cross-machine timing is
+    noisy, so CI passes a generous tolerance while local runs on the
+    machine that produced the tracked file can use a tight one.
+  * ratio: ``CR=<x>`` values parsed out of the ``derived`` text are
+    machine-independent; they may drop by at most ``--ratio-tolerance``
+    (fractional; 0.05 = -5%).  A compression-ratio regression fails even
+    when timings are fine.
+
+Rows named ``*_FAILED`` in the current file fail the gate outright;
+rows that exist only in one file are reported but never fail (benches
+grow over time).  Exit 0 = pass, 1 = regression/failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Dict, List, Tuple
+
+_CR_RE = re.compile(r"\bCR=([0-9.]+)")
+
+
+def load_rows(path: str) -> Tuple[Dict[str, dict], dict]:
+    """{row name: row} plus the header (schema/machine/config)."""
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, list):          # pre-schema flat row list
+        rows = data
+        header = {"schema": 1}
+    else:
+        rows = data["rows"]
+        header = {k: data.get(k) for k in ("schema", "bench", "machine",
+                                           "config")}
+    return {r["name"]: r for r in rows}, header
+
+
+def parse_cr(derived: str):
+    m = _CR_RE.search(derived or "")
+    return float(m.group(1)) if m else None
+
+
+def compare(tracked: Dict[str, dict], current: Dict[str, dict],
+            tolerance: float, ratio_tolerance: float,
+            min_us: float) -> List[str]:
+    """Regression messages (empty = pass)."""
+    problems: List[str] = []
+    for name in sorted(current):
+        if name.endswith("_FAILED"):
+            problems.append(f"{name}: bench failed: "
+                            f"{current[name].get('derived', '')}")
+    common = sorted(set(tracked) & set(current))
+    for name in common:
+        t, c = tracked[name], current[name]
+        t_us, c_us = float(t["us_per_call"]), float(c["us_per_call"])
+        # Sub-threshold rows are noise-dominated (and 0.0 marks rows
+        # that only report derived values); skip the timing check.
+        if t_us >= min_us and c_us > t_us * (1.0 + tolerance):
+            problems.append(
+                f"{name}: {c_us:.0f}us vs tracked {t_us:.0f}us "
+                f"(+{(c_us / t_us - 1) * 100:.0f}% > "
+                f"+{tolerance * 100:.0f}% allowed)")
+        t_cr, c_cr = parse_cr(t.get("derived")), parse_cr(c.get("derived"))
+        if t_cr and c_cr and c_cr < t_cr * (1.0 - ratio_tolerance):
+            problems.append(
+                f"{name}: CR={c_cr:.2f} vs tracked CR={t_cr:.2f} "
+                f"(-{(1 - c_cr / t_cr) * 100:.1f}% > "
+                f"-{ratio_tolerance * 100:.0f}% allowed)")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="Gate a BENCH JSON against the tracked artifact")
+    ap.add_argument("--tracked", required=True,
+                    help="committed BENCH_*.json (the baseline)")
+    ap.add_argument("--current", required=True,
+                    help="freshly produced BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed fractional us_per_call growth "
+                         "(0.5 = +50%%; CI uses a larger value because "
+                         "runners differ from the tracked machine)")
+    ap.add_argument("--ratio-tolerance", type=float, default=0.05,
+                    help="allowed fractional CR drop (machine-independent"
+                         ", keep tight)")
+    ap.add_argument("--min-us", type=float, default=100.0,
+                    help="skip the timing check for tracked rows faster "
+                         "than this (noise-dominated)")
+    args = ap.parse_args()
+
+    tracked, t_hdr = load_rows(args.tracked)
+    current, _ = load_rows(args.current)
+    common = set(tracked) & set(current)
+    only_t = sorted(set(tracked) - common)
+    only_c = sorted(set(current) - common)
+    print(f"check_regression: {args.current} vs {args.tracked}: "
+          f"{len(common)} comparable rows "
+          f"(tolerance +{args.tolerance * 100:.0f}% timing, "
+          f"-{args.ratio_tolerance * 100:.0f}% CR)")
+    if t_hdr.get("machine"):
+        m = t_hdr["machine"]
+        print(f"  tracked machine: {m.get('platform')} "
+              f"cpus={m.get('cpu_count')} jax={m.get('jax_version')}")
+    for name in only_t:
+        print(f"  note: only in tracked: {name}")
+    for name in only_c:
+        print(f"  note: only in current: {name}")
+    if not common:
+        print("FAIL: no comparable rows (did the bench fail to run?)")
+        return 1
+    problems = compare(tracked, current, args.tolerance,
+                       args.ratio_tolerance, args.min_us)
+    for p in problems:
+        print(f"REGRESSION {p}")
+    print("FAIL" if problems else "PASS")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

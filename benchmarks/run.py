@@ -25,6 +25,53 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 
+def bench_all(out_dir: str, smoke: bool = False) -> int:
+    """Write the three committed perf-trajectory artifacts --
+    BENCH_entropy.json, BENCH_chain.json, BENCH_compression.json -- into
+    `out_dir` in the stable schema of benchmarks.common.write_bench_json
+    (machine/config header + named rows).
+
+    ``smoke`` runs reduced, in-process variants whose rows are
+    name-identical subsets of the full run's, so
+    benchmarks/check_regression.py can gate a CI smoke run against the
+    committed full artifacts.  Returns the number of failed benches.
+    """
+    from benchmarks import bench_chain, bench_compression, bench_entropy
+    from benchmarks.common import emit, write_bench_json
+
+    failed = 0
+    plan = [
+        ("entropy", "BENCH_entropy.json",
+         lambda: bench_entropy.run(smoke=True,
+                                   sizes_mb=(bench_entropy.SMOKE_SIZES_MB
+                                             if smoke else
+                                             bench_entropy.FULL_SIZES_MB)),
+         {"smoke": smoke}),
+        ("chain", "BENCH_chain.json",
+         lambda: bench_chain.run(smoke=smoke), {"smoke": smoke}),
+        ("compression", "BENCH_compression.json",
+         lambda: bench_compression.run(
+             datasets=("sedov",) if smoke
+             else ("sedov", "stir", "asr", "cmip"),
+             include_sharded=not smoke, include_chain=False),
+         {"smoke": smoke, "note": "chain rows live in BENCH_chain.json"}),
+    ]
+    for bench, fname, fn, config in plan:
+        path = os.path.join(out_dir, fname)
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001 -- report, keep going
+            print(f"{bench}_FAILED,0,{type(e).__name__}:{e}")
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+            failed += 1
+            continue
+        emit(rows)
+        write_bench_json(path, bench, rows, config=config)
+        print(f"# wrote {path} ({len(rows)} rows)")
+    return failed
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -32,10 +79,22 @@ def main() -> None:
                          "autob,kernels,chain,entropy")
     ap.add_argument("--entropy-json", default=None, metavar="PATH",
                     help="run the entropy smoke bench (device rANS vs "
-                         "threaded zlib vs raw at 1/16/64 MB) and write "
-                         "the rows to PATH (the BENCH_entropy.json CI "
-                         "artifact)")
+                         "threaded zlib vs raw) and write the rows to "
+                         "PATH (the BENCH_entropy.json CI artifact)")
+    ap.add_argument("--bench-all", action="store_true",
+                    help="write BENCH_entropy/chain/compression.json into "
+                         "--out-dir (the committed perf trajectory)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --bench-all: reduced in-process variants "
+                         "(rows are a name subset of the full run)")
+    ap.add_argument("--out-dir", default=_ROOT,
+                    help="destination for the BENCH_*.json artifacts "
+                         "(default: repo root)")
     args = ap.parse_args()
+
+    if args.bench_all:
+        print("name,us_per_call,derived")
+        sys.exit(1 if bench_all(args.out_dir, smoke=args.smoke) else 0)
 
     from benchmarks import (bench_autob, bench_binning, bench_chain,
                             bench_compression, bench_entropy,
@@ -60,7 +119,7 @@ def main() -> None:
     if args.entropy_json:
         rows = bench_entropy.run(smoke=True)
         emit(rows)
-        bench_entropy.write_json(rows, args.entropy_json)
+        bench_entropy.write_json(rows, args.entropy_json, smoke=True)
         # The smoke rows just ran; don't re-run entropy via --only, and
         # skip the default sweep entirely when only the json was asked.
         wanted = ([w for w in wanted if w != "entropy"] if args.only

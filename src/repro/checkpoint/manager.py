@@ -38,6 +38,7 @@ from repro.core import pipeline as pipe
 from repro.core.compress import decode_anchor, encode_device
 from repro.core.container import NCKReader, NCKWriter
 from repro.core.overlap import FinalizeQueue
+from repro.obs import telemetry
 
 
 def _flatten(tree, snapshot: bool = False) -> Dict[str, np.ndarray]:
@@ -131,7 +132,8 @@ class CheckpointManager:
         if blocking:
             self.wait()                  # keep manifest commit order
             return self._save_inner(step, flat)
-        return self._q.submit(self._save_inner, step, flat)
+        return self._q.submit(self._save_inner, step, flat,
+                              label=f"save step {step}")
 
     def wait(self):
         """Barrier: block until every in-flight async save is durable;
@@ -150,6 +152,12 @@ class CheckpointManager:
         return c
 
     def _save_inner(self, step: int, flat: Dict[str, np.ndarray]):
+        with telemetry.span("ckpt.save", step=step,
+                            tensors=len(flat)) as sp:
+            stats = self._save_body(step, flat, sp)
+        return stats
+
+    def _save_body(self, step: int, flat: Dict[str, np.ndarray], sp):
         is_anchor = (self._save_count % self.anchor_every == 0
                      or not self._recon_state)
         w = NCKWriter()
@@ -157,42 +165,46 @@ class CheckpointManager:
                  "comp_bytes": 0, "codec": self.params.codec}
         names = {}
         staged: Dict[str, chainmod.ReferenceChain] = {}
-        for i, (key, arr) in enumerate(sorted(flat.items())):
-            var = f"t{i:04d}"
-            names[var] = key
-            stats["orig_bytes"] += arr.nbytes
-            lossless = (not self.compress or is_anchor
-                        or any(s in key for s in self.exempt)
-                        or not np.issubdtype(arr.dtype, np.floating)
-                        or arr.size < 4096
-                        or key not in self._recon_state)
-            if lossless:
-                st = make_anchor(arr, self.params)
-                staged[key] = self._seeded_chain(arr)
-            else:
-                # Encode against the chain state; advance a *fork* from
-                # the pre-entropy result (bit-identical to decompressing
-                # the blob, without inflating it back).  Checkpoints
-                # always chain the reconstruction, whatever
-                # params.reference says -- restore only ever replays
-                # reconstructions.
-                prev_chain = self._recon_state[key]
-                dev = encode_device(
-                    prev_chain.peek(), arr, self.params,
-                    need_host_idx=(prev_chain.residency
-                                   == chainmod.CHAIN_HOST))
-                st = pipe.finalize_step(arr, dev.enc, dev.centers,
-                                        dev.domain_lo, dev.width,
-                                        self.params, dev.meta)
-                c = prev_chain.fork()
-                c.advance(dev, arr)
-                staged[key] = c
-            stats["comp_bytes"] += st.nbytes
-            w.add_step(var, st)
+        with telemetry.span("ckpt.encode", step=step):
+            for i, (key, arr) in enumerate(sorted(flat.items())):
+                var = f"t{i:04d}"
+                names[var] = key
+                stats["orig_bytes"] += arr.nbytes
+                lossless = (not self.compress or is_anchor
+                            or any(s in key for s in self.exempt)
+                            or not np.issubdtype(arr.dtype, np.floating)
+                            or arr.size < 4096
+                            or key not in self._recon_state)
+                if lossless:
+                    st = make_anchor(arr, self.params)
+                    staged[key] = self._seeded_chain(arr)
+                else:
+                    # Encode against the chain state; advance a *fork*
+                    # from the pre-entropy result (bit-identical to
+                    # decompressing the blob, without inflating it back).
+                    # Checkpoints always chain the reconstruction,
+                    # whatever params.reference says -- restore only ever
+                    # replays reconstructions.
+                    prev_chain = self._recon_state[key]
+                    dev = encode_device(
+                        prev_chain.peek(), arr, self.params,
+                        need_host_idx=(prev_chain.residency
+                                       == chainmod.CHAIN_HOST))
+                    st = pipe.finalize_step(arr, dev.enc, dev.centers,
+                                            dev.domain_lo, dev.width,
+                                            self.params, dev.meta)
+                    c = prev_chain.fork()
+                    c.advance(dev, arr)
+                    staged[key] = c
+                stats["comp_bytes"] += st.nbytes
+                w.add_step(var, st)
         w.add_array("__names__",
                     np.frombuffer(json.dumps(names).encode(), np.uint8),
                     attrs={"step": step})
-        w.write(self._step_path(step))
+        # The container's own write span ("nck.write" + fsync/rename
+        # children) nests under this one on the same lane.
+        with telemetry.span("ckpt.write", step=step):
+            w.write(self._step_path(step))
         # Commit the in-memory delta chains only after the step file is
         # durable: a save that dies mid-write must leave the next delta
         # encoding against the last *persisted* state, or every subsequent
@@ -201,13 +213,16 @@ class CheckpointManager:
         self._recon_state.update(staged)
         self._save_count += 1
 
-        m = self._read_manifest()
-        m["steps"] = sorted(set(m["steps"] + [step]))
-        if is_anchor:
-            m["anchors"] = sorted(set(m.get("anchors", []) + [step]))
-        self._write_manifest(m)
-        self._retention(m)
+        with telemetry.span("ckpt.manifest", step=step):
+            m = self._read_manifest()
+            m["steps"] = sorted(set(m["steps"] + [step]))
+            if is_anchor:
+                m["anchors"] = sorted(set(m.get("anchors", []) + [step]))
+            self._write_manifest(m)
+            self._retention(m)
         stats["ratio"] = stats["orig_bytes"] / max(stats["comp_bytes"], 1)
+        sp.set(anchor=is_anchor, orig_bytes=stats["orig_bytes"],
+               comp_bytes=stats["comp_bytes"])
         return stats
 
     def _retention(self, m: Dict):

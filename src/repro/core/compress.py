@@ -37,6 +37,7 @@ from repro.core.overlap import FinalizeQueue
 from repro.core.pipeline import DeviceEncoded
 from repro.kernels import ops as kops
 from repro.kernels import rans
+from repro.obs import telemetry
 from repro.core.types import (CompressedStep, NumarckParams, REF_ORIGINAL,
                               REF_RECONSTRUCTED, STRATEGY_EQUAL,
                               STRATEGY_KMEANS, STRATEGY_LOG, STRATEGY_TOPK,
@@ -126,36 +127,49 @@ def encode_device(prev, curr, params: NumarckParams,
     if prev.shape != curr.shape:
         raise ValueError("temporal steps must share a shape")
     ebytes = dtype_nbytes(curr.dtype)
-    a = _analyze(prev.reshape(-1), curr.reshape(-1),
-                 np.float32(params.error_bound), params.max_bins,
-                 params.b_max, ebytes)
+    # Telemetry-enabled runs block after each device stage so span
+    # durations mean "stage time", not "async dispatch time"; with
+    # telemetry disabled dispatch stays fully asynchronous.
+    tele = telemetry.enabled()
+    with telemetry.span("encode.analyze", annotate=True) as sp_an:
+        a = _analyze(prev.reshape(-1), curr.reshape(-1),
+                     np.float32(params.error_bound), params.max_bins,
+                     params.b_max, ebytes)
+        if tele:
+            jax.block_until_ready(a)
 
-    if params.strategy == STRATEGY_TOPK:
-        b_bits = int(params.b_bits if params.b_bits is not None
-                     else a["b_auto"])
-        k_eff = min((1 << b_bits) - 1, params.max_bins)
-        idx = _encode_topk(a["bin_ids"], a["ids_desc"], b_bits, k_eff,
-                           params.max_bins)
-        centers = pipe.topk_centers(np.asarray(a["ids_desc"]), k_eff,
-                                    float(a["domain_lo"]), float(a["width"]))
-    else:
-        b_bits = int(params.b_bits if params.b_bits is not None else 8)
-        k_eff = (1 << b_bits) - 1
-        if params.strategy == STRATEGY_EQUAL:
-            cs = binning.equal_width_centers(a["lo"], a["hi"], k_eff)
-        elif params.strategy == STRATEGY_LOG:
-            cs = binning.log_scale_centers(a["ratios"], a["valid"], k_eff)
-        elif params.strategy == STRATEGY_KMEANS:
-            k_km = min(k_eff, params.kmeans_max_k)
-            cs = binning.kmeans_centers(a["counts"], a["domain_lo"],
-                                        a["width"], k_km,
-                                        params.kmeans_iters)
-        else:  # pragma: no cover
-            raise ValueError(params.strategy)
-        cs = jnp.sort(cs)
-        idx = _encode_centers(a["ratios"], a["valid"], cs,
-                              np.float32(params.error_bound), b_bits)
-        centers = np.asarray(cs, np.float64)
+    with telemetry.span("encode.index", annotate=True,
+                        strategy=params.strategy) as sp_idx:
+        if params.strategy == STRATEGY_TOPK:
+            b_bits = int(params.b_bits if params.b_bits is not None
+                         else a["b_auto"])
+            k_eff = min((1 << b_bits) - 1, params.max_bins)
+            idx = _encode_topk(a["bin_ids"], a["ids_desc"], b_bits, k_eff,
+                               params.max_bins)
+            centers = pipe.topk_centers(np.asarray(a["ids_desc"]), k_eff,
+                                        float(a["domain_lo"]),
+                                        float(a["width"]))
+        else:
+            b_bits = int(params.b_bits if params.b_bits is not None else 8)
+            k_eff = (1 << b_bits) - 1
+            if params.strategy == STRATEGY_EQUAL:
+                cs = binning.equal_width_centers(a["lo"], a["hi"], k_eff)
+            elif params.strategy == STRATEGY_LOG:
+                cs = binning.log_scale_centers(a["ratios"], a["valid"],
+                                               k_eff)
+            elif params.strategy == STRATEGY_KMEANS:
+                k_km = min(k_eff, params.kmeans_max_k)
+                cs = binning.kmeans_centers(a["counts"], a["domain_lo"],
+                                            a["width"], k_km,
+                                            params.kmeans_iters)
+            else:  # pragma: no cover
+                raise ValueError(params.strategy)
+            cs = jnp.sort(cs)
+            idx = _encode_centers(a["ratios"], a["valid"], cs,
+                                  np.float32(params.error_bound), b_bits)
+            centers = np.asarray(cs, np.float64)
+        if tele:
+            jax.block_until_ready(idx)
 
     centers = pipe.round_centers(centers, curr.dtype)
     n = int(np.prod(curr.shape))
@@ -164,21 +178,24 @@ def encode_device(prev, curr, params: NumarckParams,
     # Exception compaction on device: finalize gathers values by position
     # instead of re-scanning the index table with a host mask.
     exc_counts = exc_pos = None
-    if n:
-        exc_counts, exc_pos = kops.exception_compact(idx, n, marker, be)
+    with telemetry.span("encode.exceptions") as sp_exc:
+        if n:
+            exc_counts, exc_pos = kops.exception_compact(idx, n, marker, be)
     # Device entropy stage: pack + rANS-code the blocks on device; the
     # finalize consumes the finished blobs (byte-identical to the host
     # codec flavor, so routing never changes the file format).
     coded = coded_name = None
-    if device_entropy_route(params, n, b_bits):
-        nblocks = -(-n // be)
-        idx_pad = jnp.pad(idx, (0, nblocks * be - n),
-                          constant_values=marker)
-        coded = rans.compress_blocks_device(idx_pad, b_bits, nblocks, be,
-                                            pool=entropy._shared_pool())
-        coded_name = params.codec
-    idx_host = (np.asarray(idx) if need_host_idx or coded is None
-                else None)
+    with telemetry.span("encode.device_entropy", annotate=True) as sp_de:
+        if device_entropy_route(params, n, b_bits):
+            nblocks = -(-n // be)
+            idx_pad = jnp.pad(idx, (0, nblocks * be - n),
+                              constant_values=marker)
+            coded = rans.compress_blocks_device(
+                idx_pad, b_bits, nblocks, be, pool=entropy._shared_pool())
+            coded_name = params.codec
+    with telemetry.span("encode.idx_fetch") as sp_fetch:
+        idx_host = (np.asarray(idx) if need_host_idx or coded is None
+                    else None)
     enc = pipe.EncodedIndices(idx=idx_host, b_bits=b_bits,
                               block_elems=be, n=n,
                               entropy_coded=coded, entropy_codec=coded_name,
@@ -187,6 +204,16 @@ def encode_device(prev, curr, params: NumarckParams,
     meta = {"b_auto": int(a["b_auto"]),
             "est_sizes": np.asarray(a["est_sizes"]).tolist(),
             "ratio_min": float(a["lo"]), "ratio_max": float(a["hi"])}
+    if tele:
+        # Driver stage timings; finalize_step folds them into the
+        # canonical per-step meta["telemetry"] record and pops this dict,
+        # so the key never reaches the persisted container attrs.
+        meta["telemetry"] = {
+            "analyze_s": sp_an.duration,
+            "encode_s": (sp_idx.duration + sp_exc.duration
+                         + sp_fetch.duration),
+            "device_entropy_s": sp_de.duration,
+        }
     return DeviceEncoded(enc=enc, centers=centers,
                          domain_lo=float(a["domain_lo"]),
                          width=float(a["width"]), meta=meta,
@@ -269,6 +296,7 @@ class TemporalCompressor:
         # so direct add_async callers get the same ~2-step host-memory
         # bound as compress_series / the sharded driver.
         self._q = FinalizeQueue(overlap)
+        self._step = 0
 
     def add_async(self, arr: np.ndarray) -> "Future[CompressedStep]":
         """Device-encode `arr` now; return a future of the finalized step.
@@ -277,12 +305,14 @@ class TemporalCompressor:
         next call may be issued immediately.
         """
         arr = np.asarray(arr)
+        step_i, self._step = self._step, self._step + 1
         if self._chain is None or self._chain.empty:
             self._chain = chainmod.make_reference_chain(self.chain,
                                                         arr.dtype)
             self._chain.seed(arr)
             return self._q.submit(pipe.finalize_anchor, arr.copy(),
-                                  self.params)
+                                  self.params,
+                                  label=f"anchor step {step_i}")
         # One H2D of `curr`, reused by both the encode and the chain
         # advance when the chain lives on device.  jnp.array (a private
         # copy, never a zero-copy alias): the chain advance reads it
@@ -303,7 +333,8 @@ class TemporalCompressor:
         curr = arr.copy() if self.overlap else arr
         return self._q.submit(pipe.finalize_step, curr, dev.enc,
                               dev.centers, dev.domain_lo, dev.width,
-                              self.params, dev.meta)
+                              self.params, dev.meta,
+                              label=f"finalize step {step_i}")
 
     def add(self, arr: np.ndarray) -> CompressedStep:
         return self.add_async(arr).result()
@@ -326,6 +357,7 @@ class TemporalCompressor:
 
     def reset(self):
         self._chain = None
+        self._step = 0
 
 
 class TemporalDecompressor:

@@ -38,6 +38,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.types import CompressedStep
+from repro.obs import telemetry
 
 _MAGIC_V1 = b"NCK1"
 _MAGIC_V2 = b"NCK2"
@@ -119,17 +120,22 @@ class NCKWriter:
                              "variables": self._vars}).encode()
         tmp = path + ".tmp"
         magic = _MAGIC_V2 if self._format_version >= 2 else _MAGIC_V1
-        with open(tmp, "wb") as f:
-            f.write(magic)
-            f.write(struct.pack("<Q", len(header)))
-            f.write(header)
-            f.write(b"\0" * _pad(len(_MAGIC) + 8 + len(header)))
-            for raw in self._sections:
-                f.write(raw)
-                f.write(b"\0" * _pad(len(raw)))
-            f.flush()
-            os.fsync(f.fileno())   # durable BEFORE the rename publishes it
-        os.replace(tmp, path)  # atomic publish (fault tolerance)
+        with telemetry.span("nck.write", path=path,
+                            sections=len(self._sections)):
+            with open(tmp, "wb") as f:
+                f.write(magic)
+                f.write(struct.pack("<Q", len(header)))
+                f.write(header)
+                f.write(b"\0" * _pad(len(_MAGIC) + 8 + len(header)))
+                for raw in self._sections:
+                    f.write(raw)
+                    f.write(b"\0" * _pad(len(raw)))
+                f.flush()
+                # durable BEFORE the rename publishes it
+                with telemetry.span("nck.fsync"):
+                    os.fsync(f.fileno())
+            with telemetry.span("nck.rename"):
+                os.replace(tmp, path)  # atomic publish (fault tolerance)
 
 
 class NCKReader:

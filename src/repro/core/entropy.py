@@ -36,9 +36,12 @@ import lzma
 import multiprocessing
 import os
 import threading
+import time
 import zlib
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.obs import telemetry
 
 # --------------------------------------------------------------------- codecs
 
@@ -241,9 +244,15 @@ def choose_block_codecs(raws: Sequence[bytes], level: int = 6) -> List[str]:
     total = sum(len(r) for r in raws)
     allow_lzma = total <= _AUTO_LZMA_MAX_BYTES
     if len(raws) >= 4 and total >= _MIN_PARALLEL_BYTES:
-        return list(_shared_pool().map(
+        picks = list(_shared_pool().map(
             lambda r: _probe_one(r, allow_lzma), raws))
-    return [_probe_one(r, allow_lzma) for r in raws]
+    else:
+        picks = [_probe_one(r, allow_lzma) for r in raws]
+    if telemetry.enabled():
+        for p in set(picks):
+            telemetry.counter(f"entropy.auto.pick.{p}",
+                              float(picks.count(p)))
+    return picks
 
 # ----------------------------------------------------------- parallel stage
 
@@ -339,6 +348,21 @@ def compress_blocks(raws: Sequence[bytes], codec: str = DEFAULT_CODEC,
     codec = resolve_codec(codec, raws, level)
     c = get_codec(codec)
     sizes = [len(r) for r in raws]
+    with telemetry.span("entropy.compress", codec=codec,
+                        blocks=len(raws)) as sp:
+        out = _dispatch_blocks(c, codec, raws, sizes, level, parallel, pool)
+        if telemetry.enabled():
+            bytes_in, bytes_out = sum(sizes), sum(len(b) for b in out)
+            telemetry.counter(f"entropy.bytes_in.{codec}", float(bytes_in))
+            telemetry.counter(f"entropy.bytes_out.{codec}", float(bytes_out))
+            sp.set(bytes_in=bytes_in, bytes_out=bytes_out)
+    return out
+
+
+def _dispatch_blocks(c: Codec, codec: str, raws: Sequence[bytes],
+                     sizes: List[int], level: int, parallel: bool,
+                     pool: Optional[ThreadPoolExecutor]) -> List[bytes]:
+    """Serial / thread-pool / process-pool dispatch of compress_blocks."""
     if (not parallel or len(raws) < 2
             or sum(sizes) < _MIN_PARALLEL_BYTES):
         return [c.compress(r, level) for r in raws]
@@ -373,9 +397,18 @@ def compress_blocks(raws: Sequence[bytes], codec: str = DEFAULT_CODEC,
 
     ex = pool or _shared_pool()
     workers = getattr(ex, "_max_workers", os.cpu_count() or 1)
+    # Submit->start latency of each pool task: a loaded pool shows up as a
+    # fat entropy.queue_wait_s histogram, not as mystery finalize time.
+    tele = telemetry.enabled()
+    t_submit = time.perf_counter() if tele else 0.0
 
     def run(rng: range) -> List[bytes]:
-        return [c.compress(raws[i], level) for i in rng]
+        if not tele:
+            return [c.compress(raws[i], level) for i in rng]
+        telemetry.histo("entropy.queue_wait_s",
+                        time.perf_counter() - t_submit)
+        with telemetry.span("entropy.batch", codec=codec, blocks=len(rng)):
+            return [c.compress(raws[i], level) for i in rng]
 
     out: List[bytes] = []
     for part in ex.map(run, _task_plan(sizes, workers)):
@@ -398,11 +431,21 @@ def compress_blocks_per_codec(raws: Sequence[bytes], codecs: Sequence[str],
     """
     assert len(raws) == len(codecs)
     pairs = [(r, get_codec(c)) for r, c in zip(raws, codecs)]
-    if (not parallel or len(raws) < 2
-            or sum(len(r) for r in raws) < _MIN_PARALLEL_BYTES):
-        return [c.compress(r, level) for r, c in pairs]
-    ex = _shared_pool()
-    return list(ex.map(lambda rc: rc[1].compress(rc[0], level), pairs))
+    with telemetry.span("entropy.compress_per_codec", blocks=len(raws)):
+        if (not parallel or len(raws) < 2
+                or sum(len(r) for r in raws) < _MIN_PARALLEL_BYTES):
+            out = [c.compress(r, level) for r, c in pairs]
+        else:
+            ex = _shared_pool()
+            out = list(ex.map(lambda rc: rc[1].compress(rc[0], level),
+                              pairs))
+    if telemetry.enabled():
+        for cname in set(codecs):
+            bi = sum(len(r) for r, c in zip(raws, codecs) if c == cname)
+            bo = sum(len(b) for b, c in zip(out, codecs) if c == cname)
+            telemetry.counter(f"entropy.bytes_in.{cname}", float(bi))
+            telemetry.counter(f"entropy.bytes_out.{cname}", float(bo))
+    return out
 
 
 def decompress_block(blob: bytes, codec: str = DEFAULT_CODEC) -> bytes:

@@ -7,12 +7,50 @@ submit blocks past the bound so host memory stays bounded regardless of
 stream length, and completed futures are ``.result()``-ed on the next
 submit/flush so background failures surface instead of vanishing with
 their Future.  This is that pattern, once.
+
+Observability (``repro.obs``): every queue emits, under its own name,
+
+  ``<name>.depth``          gauge   in-flight tasks after each submit
+  ``<name>.queue_wait_s``   hist    submit -> worker-start latency
+  ``<name>.stall_s``        counter time the *caller* blocked because the
+                                    queue was full (the flush-stall the
+                                    overlap is supposed to hide)
+  ``<name>.task``           span    task execution on the worker lane
+                                    (records the failure when it raises)
+
+and worker exceptions carry the stage/step context of the task that died:
+the submit-side ``label`` is appended to the exception message (type and
+traceback preserved), so a failed background finalize names which step
+and stage failed instead of re-raising a bare Future error.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Deque, Optional
+
+from repro.obs import telemetry
+
+
+def _attach_context(e: BaseException, queue: str, label: str):
+    """Append ``[queue worker: label]`` to the exception message so the
+    failing stage/step is visible wherever the Future is re-raised.  The
+    exception type, args structure and traceback are preserved (the
+    original message stays a prefix, so ``pytest.raises(match=...)`` on
+    it keeps working); double-attachment on re-surfaced futures is
+    suppressed."""
+    if getattr(e, "_overlap_context", None) is not None:
+        return
+    ctx = f"[{queue} worker: {label}]"
+    try:
+        e._overlap_context = ctx  # type: ignore[attr-defined]
+        if e.args and isinstance(e.args[0], str):
+            e.args = (f"{e.args[0]} {ctx}",) + e.args[1:]
+        else:
+            e.args = e.args + (ctx,)
+    except Exception:  # exotic exception types: context stays best-effort
+        pass
 
 
 class FinalizeQueue:
@@ -31,32 +69,60 @@ class FinalizeQueue:
         self._ex: Optional[ThreadPoolExecutor] = None
         self._pending: Deque[Future] = deque()
 
-    def submit(self, fn, *args) -> Future:
+    def submit(self, fn, *args, label: Optional[str] = None) -> Future:
+        """Run ``fn(*args)`` (inline or on the worker).  ``label`` names
+        the task for telemetry spans and exception context -- pass the
+        stage/step (e.g. ``"finalize step 12"``) so background failures
+        are attributable."""
+        label = label or getattr(fn, "__name__", "task")
         if not self.overlap:
             f: Future = Future()
             try:
-                f.set_result(fn(*args))
+                with telemetry.span(f"{self._name}.task", label=label):
+                    f.set_result(fn(*args))
             except BaseException as e:  # noqa: BLE001 -- mirror executor
+                _attach_context(e, self._name, label)
                 f.set_exception(e)
             return f
         # .result() on completed futures too: a failed background task must
         # surface on the next submit/flush, not vanish with its Future.
         while self._pending and self._pending[0].done():
             self._pending.popleft().result()
-        while len(self._pending) >= self._max:
-            self._pending.popleft().result()
+        if len(self._pending) >= self._max:
+            # Queue full: the caller stalls here until the oldest task
+            # drains -- the stall the overlap exists to hide, so meter it.
+            t_stall = time.perf_counter()
+            while len(self._pending) >= self._max:
+                self._pending.popleft().result()
+            telemetry.counter(f"{self._name}.stall_s",
+                              time.perf_counter() - t_stall)
         if self._ex is None:
             self._ex = ThreadPoolExecutor(max_workers=1,
                                           thread_name_prefix=self._name)
-        f = self._ex.submit(fn, *args)
+        t_submit = time.perf_counter()
+
+        def run():
+            telemetry.histo(f"{self._name}.queue_wait_s",
+                            time.perf_counter() - t_submit)
+            try:
+                with telemetry.span(f"{self._name}.task", label=label):
+                    return fn(*args)
+            except BaseException as e:  # noqa: BLE001 -- context then re-raise
+                _attach_context(e, self._name, label)
+                raise
+
+        f = self._ex.submit(run)
         self._pending.append(f)
+        telemetry.gauge(f"{self._name}.depth", len(self._pending))
         return f
 
     def flush(self):
         """Barrier: block until every in-flight task has completed
         (re-raises the first background exception, if any)."""
-        while self._pending:
-            self._pending.popleft().result()
+        with telemetry.span(f"{self._name}.flush",
+                            pending=len(self._pending)):
+            while self._pending:
+                self._pending.popleft().result()
 
     def close(self):
         self.flush()

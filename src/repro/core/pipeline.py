@@ -21,6 +21,7 @@ the NCK container.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Any, List, Optional, Tuple
 
@@ -28,6 +29,37 @@ import numpy as np
 
 from repro.core import entropy, packing
 from repro.core.types import CompressedStep, NumarckParams
+from repro.obs import telemetry
+
+
+class StepMeta(dict):
+    """Step metadata dict with the deprecated ``"zlib_ratio"`` alias.
+
+    ``"zlib_ratio"`` predates the pluggable entropy registry; the stage
+    ratio has been codec-agnostic ``"entropy_ratio"`` since the registry
+    landed.  Reading the alias warns once per process and keeps working.
+    """
+
+    _warned = False
+
+    @classmethod
+    def _warn_alias(cls):
+        if not cls._warned:
+            cls._warned = True
+            warnings.warn(
+                "meta['zlib_ratio'] is deprecated: the entropy stage is "
+                "codec-pluggable; read meta['entropy_ratio'] instead",
+                DeprecationWarning, stacklevel=4)
+
+    def __getitem__(self, key):
+        if key == "zlib_ratio":
+            self._warn_alias()
+        return dict.__getitem__(self, key)
+
+    def get(self, key, default=None):
+        if key == "zlib_ratio":
+            self._warn_alias()
+        return dict.get(self, key, default)
 
 
 def reconstruction_dtype(dtype) -> np.dtype:
@@ -207,57 +239,89 @@ def finalize_step(curr: np.ndarray, enc: EncodedIndices,
     """
     curr = np.asarray(curr)
     n = int(enc.n if enc.n is not None else enc.idx.size)
-    if enc.exc_positions is not None:
-        incomp_values = curr.reshape(-1)[enc.exc_positions]
-        incomp_off = np.concatenate(
-            [[0], np.cumsum(enc.exc_block_counts)])[:-1].astype(np.int64)
-    else:
-        incomp_values, incomp_off = exception_table(
-            enc.idx, enc.marker, enc.block_elems, curr.reshape(-1))
-
-    block_codecs: Optional[List[str]] = None
-    if enc.entropy_coded is not None:
-        blks = enc.entropy_coded
-        codec = enc.entropy_codec or entropy.DEFAULT_CODEC
-        bpb = enc.block_elems * enc.b_bits // 8
-        raw_sizes = np.full(len(blks), bpb, np.int64)
-    else:
-        raws = (enc.packed if enc.packed is not None
-                else pack_blocks_host(enc.idx, enc.b_bits,
-                                      enc.block_elems))
-        raw_sizes = np.asarray([len(r) for r in raws], np.int64)
-        if params.codec == entropy.AUTO_CODEC and len(raws) > 1:
-            # Per-block adaptive pick; the step and the container record
-            # concrete ids only (one per block when they differ).
-            per = entropy.choose_block_codecs(raws, params.zlib_level)
-            if len(set(per)) > 1:
-                codec = _primary_codec(per)
-                block_codecs = per
-                blks = entropy.compress_blocks_per_codec(
-                    raws, per, level=params.zlib_level,
-                    parallel=params.parallel_entropy)
+    # Driver-side stage timings (encode_device/_device_encode attach them
+    # when telemetry is enabled); never persisted into blob bytes -- the
+    # NCK container stores `info` attrs, not `meta`.
+    meta = dict(meta or {})
+    drv_tele = meta.pop("telemetry", None) or {}
+    with telemetry.span("finalize", n=n, b_bits=enc.b_bits) as sp_fin:
+        with telemetry.span("finalize.exceptions") as sp_exc:
+            if enc.exc_positions is not None:
+                incomp_values = curr.reshape(-1)[enc.exc_positions]
+                incomp_off = np.concatenate(
+                    [[0],
+                     np.cumsum(enc.exc_block_counts)])[:-1].astype(np.int64)
             else:
-                codec = per[0]
-                blks = entropy.compress_blocks(
-                    raws, codec=codec, level=params.zlib_level,
-                    parallel=params.parallel_entropy)
-        else:
-            # "auto" on single-block payloads resolves per step, exactly
-            # as before; concrete ids pass through unchanged.
-            codec = entropy.resolve_codec(params.codec, raws,
-                                          params.zlib_level)
-            blks = entropy.compress_blocks(raws, codec=codec,
-                                           level=params.zlib_level,
-                                           parallel=params.parallel_entropy)
-    centers = round_centers(centers, curr.dtype)
-    if centers.size > enc.marker:
-        centers = centers[:enc.marker]
-    ratio = entropy_ratio(blks, raw_sizes)
+                incomp_values, incomp_off = exception_table(
+                    enc.idx, enc.marker, enc.block_elems, curr.reshape(-1))
+
+        block_codecs: Optional[List[str]] = None
+        with telemetry.span("finalize.entropy") as sp_ent:
+            if enc.entropy_coded is not None:
+                blks = enc.entropy_coded
+                codec = enc.entropy_codec or entropy.DEFAULT_CODEC
+                bpb = enc.block_elems * enc.b_bits // 8
+                raw_sizes = np.full(len(blks), bpb, np.int64)
+            else:
+                raws = (enc.packed if enc.packed is not None
+                        else pack_blocks_host(enc.idx, enc.b_bits,
+                                              enc.block_elems))
+                raw_sizes = np.asarray([len(r) for r in raws], np.int64)
+                if params.codec == entropy.AUTO_CODEC and len(raws) > 1:
+                    # Per-block adaptive pick; the step and the container
+                    # record concrete ids only (one per block when they
+                    # differ).
+                    per = entropy.choose_block_codecs(raws,
+                                                      params.zlib_level)
+                    if len(set(per)) > 1:
+                        codec = _primary_codec(per)
+                        block_codecs = per
+                        blks = entropy.compress_blocks_per_codec(
+                            raws, per, level=params.zlib_level,
+                            parallel=params.parallel_entropy)
+                    else:
+                        codec = per[0]
+                        blks = entropy.compress_blocks(
+                            raws, codec=codec, level=params.zlib_level,
+                            parallel=params.parallel_entropy)
+                else:
+                    # "auto" on single-block payloads resolves per step,
+                    # exactly as before; concrete ids pass through
+                    # unchanged.
+                    codec = entropy.resolve_codec(params.codec, raws,
+                                                  params.zlib_level)
+                    blks = entropy.compress_blocks(
+                        raws, codec=codec, level=params.zlib_level,
+                        parallel=params.parallel_entropy)
+            sp_ent.set(codec=codec, blocks=len(blks))
+        centers = round_centers(centers, curr.dtype)
+        if centers.size > enc.marker:
+            centers = centers[:enc.marker]
+        ratio = entropy_ratio(blks, raw_sizes)
+        bytes_in = int(np.asarray(raw_sizes).sum())
+        bytes_out = sum(len(b) for b in blks)
+        sp_fin.set(codec=codec, bytes_in=bytes_in, bytes_out=bytes_out)
     # "entropy_ratio" is the stage ratio whatever the codec; "zlib_ratio"
-    # is kept as a legacy alias for existing readers.
-    full_meta = {"entropy_ratio": ratio, "zlib_ratio": ratio,
-                 "entropy_codec": codec}
-    full_meta.update(meta or {})
+    # is kept as a deprecated alias (StepMeta warns once on read).
+    full_meta = StepMeta({"entropy_ratio": ratio, "zlib_ratio": ratio,
+                          "entropy_codec": codec})
+    full_meta.update(meta)
+    if telemetry.enabled():
+        # Canonical per-step rollup: one fixed key set whatever the driver
+        # (single-device vs sharded) or overlap mode, so series rollups
+        # diff structurally (obs.report.STEP_TELEMETRY_KEYS).
+        device_entropy = enc.entropy_coded is not None
+        full_meta["telemetry"] = {
+            "analyze_s": float(drv_tele.get("analyze_s", 0.0)),
+            "encode_s": float(drv_tele.get("encode_s", 0.0)),
+            "exceptions_s": sp_exc.duration,
+            "entropy_s": (float(drv_tele.get("device_entropy_s", 0.0))
+                          if device_entropy else sp_ent.duration),
+            "finalize_s": sp_fin.duration,
+            "bytes_in": bytes_in, "bytes_out": bytes_out,
+            "entropy_ratio": ratio, "codec": codec,
+            "device_entropy": device_entropy,
+        }
     return CompressedStep(
         n=n, shape=tuple(curr.shape), dtype=str(curr.dtype),
         b_bits=enc.b_bits, error_bound=params.error_bound,
@@ -275,18 +339,31 @@ def finalize_anchor(arr: np.ndarray, params: NumarckParams) -> CompressedStep:
     arr = np.asarray(arr)
     flat = arr.reshape(-1)
     block_elems = max(1, params.block_bytes // flat.dtype.itemsize)
-    raws = [flat[s:e].tobytes() for s, e in block_slices(flat.size,
-                                                         block_elems)]
-    codec = entropy.resolve_codec(params.codec, raws, params.zlib_level)
-    blks = entropy.compress_blocks(raws, codec=codec,
-                                   level=params.zlib_level,
-                                   parallel=params.parallel_entropy)
+    with telemetry.span("finalize.anchor", n=arr.size) as sp:
+        raws = [flat[s:e].tobytes() for s, e in block_slices(flat.size,
+                                                             block_elems)]
+        codec = entropy.resolve_codec(params.codec, raws, params.zlib_level)
+        blks = entropy.compress_blocks(raws, codec=codec,
+                                       level=params.zlib_level,
+                                       parallel=params.parallel_entropy)
+        sp.set(codec=codec)
+    meta: dict = {"kind": "anchor"}
+    if telemetry.enabled():
+        bytes_in = arr.size * flat.dtype.itemsize
+        bytes_out = sum(len(b) for b in blks)
+        meta["telemetry"] = {
+            "analyze_s": 0.0, "encode_s": 0.0, "exceptions_s": 0.0,
+            "entropy_s": sp.duration, "finalize_s": sp.duration,
+            "bytes_in": bytes_in, "bytes_out": bytes_out,
+            "entropy_ratio": bytes_in / max(bytes_out, 1), "codec": codec,
+            "device_entropy": False,
+        }
     return CompressedStep(
         n=arr.size, shape=tuple(arr.shape), dtype=str(arr.dtype),
         b_bits=0, error_bound=params.error_bound, strategy=params.strategy,
         reference=params.reference, domain_lo=0.0, bin_width=0.0,
         centers=np.zeros(0), block_elems=block_elems, codec=codec,
-        index_blocks=blks, meta={"kind": "anchor"})
+        index_blocks=blks, meta=meta)
 
 
 def reconstruct_from_indices(prev: np.ndarray, enc: EncodedIndices,
@@ -320,7 +397,8 @@ def reconstruct_from_indices(prev: np.ndarray, enc: EncodedIndices,
     return out.astype(dtype).reshape(prev.shape)
 
 
-__all__ = ["EncodedIndices", "DeviceEncoded", "block_slices", "topk_centers",
+__all__ = ["StepMeta", "EncodedIndices", "DeviceEncoded", "block_slices",
+           "topk_centers",
            "round_centers", "pack_blocks_host", "exception_offsets",
            "exception_table", "entropy_ratio", "finalize_step",
            "finalize_anchor", "reconstruct_from_indices",

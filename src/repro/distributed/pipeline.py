@@ -60,6 +60,7 @@ from repro.distributed import collectives as coll
 from repro.kernels import dequant
 from repro.kernels import ops as kops
 from repro.kernels import rans
+from repro.obs import telemetry
 
 
 def _pad_to(x: np.ndarray, total: int, value) -> np.ndarray:
@@ -178,6 +179,7 @@ class ShardedCompressor:
         self.n_shards = mesh.shape[axis]
         self._q = FinalizeQueue(overlap, name="shard-finalize")
         self._chain: Optional[chainmod.ReferenceChain] = None
+        self._step = 0
         # jit caches: a temporal series traces each stage once per
         # (shape, B) signature instead of once per step -- without this the
         # per-step shard_map retrace dominates the sharded hot path.
@@ -323,11 +325,16 @@ class ShardedCompressor:
         ebytes = np.dtype(np.asarray(curr).dtype).itemsize
 
         analyze = self._analyze_fn(ebytes, n)
-        (b_auto, ids_desc, counts_desc, domain_lo, width,
-         est_sizes) = analyze(prev_dev, curr_dev,
-                              jnp.float32(p.error_bound))
-        # Out specs are sharded over P copies of identical values; take row 0.
-        b_auto = int(np.asarray(b_auto)[0])
+        # The b_auto fetch is a device sync point: the analyze span covers
+        # dispatch + the wait, so it reads as real stage time.
+        with telemetry.span("encode.analyze", annotate=True,
+                            n=n) as sp_an:
+            (b_auto, ids_desc, counts_desc, domain_lo, width,
+             est_sizes) = analyze(prev_dev, curr_dev,
+                                  jnp.float32(p.error_bound))
+            # Out specs are sharded over P copies of identical values;
+            # take row 0.
+            b_auto = int(np.asarray(b_auto)[0])
         bb = int(b_bits if b_bits is not None
                  else (p.b_bits if p.b_bits is not None else b_auto))
         k_eff = min((1 << bb) - 1, p.max_bins)
@@ -340,29 +347,40 @@ class ShardedCompressor:
                     f"use fewer shards or larger inputs")
 
         encode = self._encode_fn(bb, k_eff, be, ln, n)
-        idx_dev, packed, valid = encode(prev_dev, curr_dev,
-                                        ids_desc, domain_lo, width)
+        with telemetry.span("encode.index", annotate=True,
+                            b_bits=bb) as sp_idx:
+            idx_dev, packed, valid = encode(prev_dev, curr_dev,
+                                            ids_desc, domain_lo, width)
+            if telemetry.enabled():
+                jax.block_until_ready((idx_dev, packed, valid))
 
         marker = (1 << bb) - 1
-        exc_counts, exc_pos = kops.exception_compact(
-            idx_dev.reshape(-1), n, marker, be)
-        valid_np = np.asarray(valid).reshape(-1)
+        with telemetry.span("encode.exceptions") as sp_exc:
+            exc_counts, exc_pos = kops.exception_compact(
+                idx_dev.reshape(-1), n, marker, be)
+            valid_np = np.asarray(valid).reshape(-1)
         nblocks = -(-n // be)
         nbytes_block = be * bb // 8
         raws = coded = coded_name = None
-        if device_entropy_route(p, n, bb):
-            # Entropy-code on the mesh; only emission buffers cross to
-            # host.  The packed words never leave the devices un-coded.
-            coded = self._entropy_stage(packed, valid_np, nblocks,
-                                        nbytes_block)
-            coded_name = p.codec
-        else:
-            packed_h = np.asarray(packed)
-            # Valid blocks in global order (shards own contiguous ranges).
-            packed_h = packed_h.reshape(-1, packed_h.shape[-1])
-            rows = packed_h[valid_np]        # (nblocks, words_per_block)
-            assert rows.shape[0] == nblocks, (rows.shape, nblocks)
-            raws = [r.astype("<u4").tobytes()[:nbytes_block] for r in rows]
+        sp_pack_s = 0.0
+        with telemetry.span("encode.device_entropy", annotate=True) as sp_de:
+            if device_entropy_route(p, n, bb):
+                # Entropy-code on the mesh; only emission buffers cross to
+                # host.  The packed words never leave the devices un-coded.
+                coded = self._entropy_stage(packed, valid_np, nblocks,
+                                            nbytes_block)
+                coded_name = p.codec
+        if coded is None:
+            with telemetry.span("encode.pack_fetch") as sp_pack:
+                packed_h = np.asarray(packed)
+                # Valid blocks in global order (shards own contiguous
+                # ranges).
+                packed_h = packed_h.reshape(-1, packed_h.shape[-1])
+                rows = packed_h[valid_np]    # (nblocks, words_per_block)
+                assert rows.shape[0] == nblocks, (rows.shape, nblocks)
+                raws = [r.astype("<u4").tobytes()[:nbytes_block]
+                        for r in rows]
+            sp_pack_s = sp_pack.duration
 
         # Host copy of the index table (blocks until the device work of
         # THIS step is done; the previous step's finalize may still be
@@ -373,8 +391,9 @@ class ShardedCompressor:
         need_host_idx = coded is None or (
             self._chain is not None
             and self._chain.residency == chainmod.CHAIN_HOST)
-        idx = (np.asarray(idx_dev).reshape(-1)[:n] if need_host_idx
-               else None)
+        with telemetry.span("encode.idx_fetch") as sp_fetch:
+            idx = (np.asarray(idx_dev).reshape(-1)[:n] if need_host_idx
+                   else None)
 
         enc = pipe.EncodedIndices(idx=idx, b_bits=bb, block_elems=be,
                                   n=n, packed=raws, entropy_coded=coded,
@@ -389,6 +408,15 @@ class ShardedCompressor:
         meta = {"b_auto": b_auto,
                 "est_sizes": np.asarray(est_sizes)[0].tolist(),
                 "n_shards": self.n_shards, "pipeline": "sharded"}
+        if telemetry.enabled():
+            # Same driver-timing keys as the single-device encode_device;
+            # finalize_step folds them into the canonical per-step record.
+            meta["telemetry"] = {
+                "analyze_s": sp_an.duration,
+                "encode_s": (sp_idx.duration + sp_exc.duration + sp_pack_s
+                             + sp_fetch.duration),
+                "device_entropy_s": sp_de.duration,
+            }
         return DeviceEncoded(enc=enc, centers=centers, domain_lo=domain_lo,
                              width=width, meta=meta,
                              idx_dev=idx_dev, curr_dev=curr_dev)
@@ -405,11 +433,13 @@ class ShardedCompressor:
         (exception values), so callers may reuse their buffers.
         """
         dev = self._device_encode(prev, curr, b_bits)
+        step_i, self._step = self._step, self._step + 1
         curr_s = (np.array(curr, copy=True) if self.overlap
                   else np.asarray(curr))
         return self._q.submit(pipe.finalize_step, curr_s, dev.enc,
                               dev.centers, dev.domain_lo, dev.width,
-                              self.params, dev.meta)
+                              self.params, dev.meta,
+                              label=f"finalize step {step_i}")
 
     def compress(self, prev: np.ndarray, curr: np.ndarray,
                  b_bits: Optional[int] = None) -> CompressedStep:
@@ -430,11 +460,13 @@ class ShardedCompressor:
         default device-resident chain the state also never leaves the
         mesh."""
         arr = np.asarray(arr)
+        step_i, self._step = self._step, self._step + 1
         if self._chain is None or self._chain.empty:
             self._chain = self._make_chain(arr.dtype)
             self._chain.seed(arr)
             return self._q.submit(pipe.finalize_anchor, arr.copy(),
-                                  self.params)
+                                  self.params,
+                                  label=f"anchor step {step_i}")
         dev = self._device_encode(self._chain.peek(), arr)
         if self.params.reference == REF_RECONSTRUCTED:
             self._chain.advance(dev, arr)
@@ -443,7 +475,8 @@ class ShardedCompressor:
         curr_s = np.array(arr, copy=True) if self.overlap else arr
         return self._q.submit(pipe.finalize_step, curr_s, dev.enc,
                               dev.centers, dev.domain_lo, dev.width,
-                              self.params, dev.meta)
+                              self.params, dev.meta,
+                              label=f"finalize step {step_i}")
 
     def add(self, arr: np.ndarray) -> CompressedStep:
         return self.add_async(arr).result()
@@ -479,6 +512,7 @@ class ShardedCompressor:
     def reset(self):
         """Drop the temporal chain state (next add() writes an anchor)."""
         self._chain = None
+        self._step = 0
 
 
 def _entropy_shard(words_l, fc_l, *, L):

@@ -32,6 +32,7 @@ from repro.core.chain import SessionChain
 from repro.core.compress import decode_anchor
 from repro.core.container import NCKReader, NCKWriter
 from repro.models.model import Model
+from repro.obs import telemetry
 
 
 def _path_part(k) -> str:
@@ -165,7 +166,9 @@ class Engine:
             raise RuntimeError(
                 "no session cache retained: construct the Engine with "
                 "keep_session=True and call generate() first")
-        return snapshot_cache(self._session.to_host(), path, codec=codec)
+        with telemetry.span("serve.save_session", path=path, codec=codec):
+            return snapshot_cache(self._session.to_host(), path,
+                                  codec=codec)
 
     def load_session(self, path: str):
         """Reload a snapshotted decode state and place it on device.
@@ -190,9 +193,10 @@ class Engine:
             raise RuntimeError(
                 "load_session needs the session template: call generate() "
                 "once on this engine first (any keep_session setting)")
-        sess = jax.device_put(load_cache(path,
-                                         template=self._sess_template))
-        self._session = SessionChain(sess)
+        with telemetry.span("serve.load_session", path=path):
+            sess = jax.device_put(load_cache(path,
+                                             template=self._sess_template))
+            self._session = SessionChain(sess)
         return self.last_cache
 
     def _decode_loop(self, cache, tok, pos, max_new: int, greedy: bool,
@@ -200,17 +204,20 @@ class Engine:
         """Shared streaming loop of generate/resume (same jitted callable)."""
         out = []
         t0 = time.perf_counter()
-        for i in range(max_new):
-            out.append(np.asarray(tok)[:, 0])
-            logits, cache = self._decode(self.params, cache, tok, pos)
-            if greedy or key is None:
-                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-            else:
-                key, sub = jax.random.split(key)
-                tok = jax.random.categorical(sub, logits[:, -1])[:, None]
-            tok = tok.astype(jnp.int32)
-            pos = pos + 1
-        jax.block_until_ready(tok)
+        with telemetry.span("serve.decode_loop", annotate=True,
+                            max_new=max_new, batch=self.B):
+            for i in range(max_new):
+                out.append(np.asarray(tok)[:, 0])
+                logits, cache = self._decode(self.params, cache, tok, pos)
+                if greedy or key is None:
+                    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+                else:
+                    key, sub = jax.random.split(key)
+                    tok = jax.random.categorical(sub,
+                                                 logits[:, -1])[:, None]
+                tok = tok.astype(jnp.int32)
+                pos = pos + 1
+            jax.block_until_ready(tok)
         self.stats.decode_s += time.perf_counter() - t0
         self.stats.tokens_out += max_new * self.B
         if self._sess_template is None:
@@ -227,9 +234,11 @@ class Engine:
         """prompts (B, S0) int32 -> (B, max_new) int32 generated tokens."""
         assert prompts.shape[0] == self.B
         t0 = time.perf_counter()
-        logits, cache, pos = self._prefill(self.params,
-                                           {"tokens": jnp.asarray(prompts)})
-        jax.block_until_ready(logits)
+        with telemetry.span("serve.prefill", annotate=True,
+                            batch=self.B, s0=int(prompts.shape[1])):
+            logits, cache, pos = self._prefill(
+                self.params, {"tokens": jnp.asarray(prompts)})
+            jax.block_until_ready(logits)
         self.stats.prefill_s += time.perf_counter() - t0
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         return self._decode_loop(cache, tok, pos, max_new, greedy, key,
