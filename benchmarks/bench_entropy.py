@@ -3,14 +3,17 @@
 Measures (a) the finalize-stage speedup from the thread-pool dispatcher
 across block sizes and codecs on a >= 64 MB synthetic index table -- the
 paper's phase-6 ZLIB stage, finally parallel (cf. arXiv:1903.07761's
-threaded entropy back-end) -- and (b) the device rANS codec
-(kernels.rans) against the threaded-zlib finalize and raw store at
-1/16/64 MB index payloads (`--smoke` runs only these rows; `--json PATH`
-writes them as a BENCH_entropy.json artifact for the CI perf trajectory).
+threaded entropy back-end) -- (b) the device rANS codec (kernels.rans)
+against the threaded-zlib finalize and raw store at 1/16/64 MB index
+payloads, and (c) the decode mirror: the on-device rANS decoder vs the
+host lane decoder vs zlib inflate on the same payloads (`--smoke` runs
+only the device rows; `--json PATH` writes them as a BENCH_entropy.json
+artifact for the CI perf trajectory).
 
 Output (CSV via benchmarks.common.emit):
-    entropy/<codec>/blk=<KB>KB/<mode>, us_per_call, MB/s + speedup
-    entropy/device/<MB>MB/<codec>,     us_per_call, MB/s + CR + speedup
+    entropy/<codec>/blk=<KB>KB/<mode>,   us_per_call, MB/s + speedup
+    entropy/device/<MB>MB/<codec>,       us_per_call, MB/s + CR + speedup
+    entropy/device_decode/<MB>MB/<mode>, us_per_call, MB/s + speedup
 """
 from __future__ import annotations
 
@@ -126,6 +129,60 @@ def bench_device_codec(rows: list, sizes_mb=(1, 16, 64)):
                      f"{mb / max(t_raw, 1e-9):.0f}MB/s CR=1.00"))
 
 
+def bench_device_decode(rows: list, sizes_mb=(1, 16, 64)):
+    """Decode mirror of bench_device_codec: the on-device rANS decoder
+    (kernels.rans.decode_blocks_device, forward scan + unpack, one fetch)
+    vs the host lane decoder (rans.decompress over the shared pool) vs
+    threaded zlib inflate, on the same B=8 zipf index payloads.  The
+    device row must hold within ~2x of the encode rows above -- decode is
+    one table gather cheaper per symbol than encode, so a bigger gap
+    means the lowering regressed.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import rans
+
+    b_bits = 8
+    be = 1 << 20
+    pool = entropy._shared_pool()
+    rng = np.random.default_rng(2)
+    for mb in sizes_mb:
+        n = mb << 20
+        idx = (rng.zipf(1.6, n).astype(np.uint64) % 251).astype(np.int32)
+        nblocks = -(-n // be)
+        blk = min(be, n)
+        blobs = rans.compress_blocks_device(jnp.asarray(idx), b_bits,
+                                            nblocks, blk, pool=pool)
+        raw = idx.astype(np.uint8).tobytes()
+        raws = [raw[s:s + blk] for s in range(0, n, blk)]
+        zblobs = entropy.compress_blocks(raws, codec="zlib", parallel=True)
+
+        def dev_decode():
+            out = rans.decode_blocks_device(blobs, b_bits, blk, pool=pool)
+            jax.block_until_ready(out)
+            return out
+
+        def host_decode():
+            return list(pool.map(rans.decompress, blobs))
+
+        t_dev, out_d = timeit(dev_decode, repeat=2)
+        t_host, out_h = timeit(host_decode, repeat=2)
+        t_z, _ = timeit(entropy.decompress_blocks, zblobs, codec="zlib",
+                        parallel=True, repeat=2)
+        got = np.asarray(out_d).reshape(-1)[:n]
+        assert np.array_equal(got.astype(np.uint8),
+                              idx.astype(np.uint8)), "device decode wrong"
+        assert b"".join(out_h) == raw, "host decode wrong"
+        tag = f"entropy/device_decode/{mb}MB"
+        rows.append((f"{tag}/rans_device", t_dev * 1e6,
+                     f"{mb / t_dev:.0f}MB/s "
+                     f"speedup_vs_host={t_host / max(t_dev, 1e-9):.2f}x"))
+        rows.append((f"{tag}/rans_host", t_host * 1e6,
+                     f"{mb / t_host:.0f}MB/s"))
+        rows.append((f"{tag}/zlib_inflate", t_z * 1e6,
+                     f"{mb / max(t_z, 1e-9):.0f}MB/s"))
+
+
 def run(smoke: bool = False, sizes_mb=None) -> list:
     """Benchmark rows (benchmarks/run.py entry point).  ``smoke`` runs
     only the device-codec comparison (the BENCH_entropy.json artifact)
@@ -154,6 +211,7 @@ def run(smoke: bool = False, sizes_mb=None) -> list:
                              f"{mb / t_par:.0f}MB/s speedup={speedup:.2f}x"))
         bench_auto_codec(rows)
     bench_device_codec(rows, sizes_mb=sizes_mb)
+    bench_device_decode(rows, sizes_mb=sizes_mb)
     return rows
 
 

@@ -88,8 +88,84 @@ def make_anchor(arr: np.ndarray, params: NumarckParams) -> CompressedStep:
 
 
 def decode_anchor(step: CompressedStep) -> np.ndarray:
-    raw = b"".join(entropy.decompress_blocks(step.index_blocks, step.codec))
-    return np.frombuffer(raw, dtype=step.dtype).reshape(step.shape).copy()
+    """Host reconstruction of a losslessly stored anchor step.  When the
+    step qualifies for the device decode route the entropy stage runs as
+    one block-group-parallel device scan (``decode_bytes_blocks_device``)
+    and only the finished bytes cross back; otherwise the host codec
+    registry inflates the blocks (pool-parallel)."""
+    tele = telemetry.enabled()
+    with telemetry.span("decode.entropy", annotate=True) as sp_e:
+        if device_decode_route(step):
+            flat = rans.decode_bytes_blocks_device(
+                step.index_blocks, pool=entropy._shared_pool())
+            raw = np.asarray(flat).tobytes()
+        else:
+            raw = b"".join(entropy.decompress_blocks(step.index_blocks,
+                                                     step.codec))
+    out = np.frombuffer(raw, dtype=step.dtype).reshape(step.shape).copy()
+    if tele:
+        _record_read(step, entropy_s=sp_e.duration,
+                     device=device_decode_route(step))
+    return out
+
+
+def decode_anchor_device(step: CompressedStep) -> jax.Array:
+    """Anchor decode that leaves the reconstruction on device (serve-tier
+    session restore).  The entropy stage decodes on device and the bytes
+    bitcast in place to ``step.dtype`` when the device can hold it
+    bit-exactly; otherwise this falls back to the host decode plus one
+    upload -- the result is identical either way."""
+    dt = np.dtype(step.dtype)
+    device_ok = (dt in (np.dtype(np.float32), np.dtype(np.int32),
+                        np.dtype(np.uint32))
+                 or (dt.itemsize == 8 and jax.config.jax_enable_x64))
+    if not (device_ok and device_decode_route(step)):
+        return jnp.asarray(decode_anchor(step))
+    tele = telemetry.enabled()
+    with telemetry.span("decode.entropy", annotate=True) as sp_e:
+        flat = rans.decode_bytes_blocks_device(
+            step.index_blocks, pool=entropy._shared_pool())
+        out = jax.lax.bitcast_convert_type(
+            flat.reshape(-1, dt.itemsize), dt).reshape(step.shape)
+        if tele:
+            jax.block_until_ready(out)
+    if tele:
+        _record_read(step, entropy_s=sp_e.duration, device=True)
+    return out
+
+
+def device_decode_route(step: CompressedStep) -> bool:
+    """Route a read through the device decode pipeline?  The
+    reconstruction is bit-identical either way (same IEEE ops, same
+    blobs), so -- like ``device_entropy_route`` -- this is purely a
+    wall-clock decision: homogeneous device-codec blocks and a payload
+    big enough to amortize dispatch."""
+    if step.block_codecs is not None:
+        return False
+    try:
+        codec = entropy.get_codec(step.codec)
+    except ValueError:
+        return False
+    if not codec.device:
+        return False
+    if step.is_anchor:
+        nbytes = step.n * np.dtype(step.dtype).itemsize
+    else:
+        cdt = pipe.reconstruction_dtype(step.dtype)
+        if cdt == np.float64 and not jax.config.jax_enable_x64:
+            return False
+        nbytes = step.n * step.b_bits // 8
+    return nbytes >= rans.DEVICE_MIN_BYTES
+
+
+def symbol_entropy_route(params: NumarckParams, b_bits: int,
+                         k_eff: int) -> bool:
+    """Use the symbol-level (v2/NCK3) coder for this step's blocks?
+    Top-k only: the analyze stage's ``counts_desc`` is the exact global
+    rank histogram there, and the dense {rank, marker} alphabet must fit
+    the frequency budget (k_eff + 1 <= 2^SCALE_BITS)."""
+    return (params.symbol_rans and params.strategy == STRATEGY_TOPK
+            and k_eff + 1 <= rans.M)
 
 
 def device_entropy_route(params: NumarckParams, n: int, b_bits: int) -> bool:
@@ -190,8 +266,15 @@ def encode_device(prev, curr, params: NumarckParams,
             nblocks = -(-n // be)
             idx_pad = jnp.pad(idx, (0, nblocks * be - n),
                               constant_values=marker)
-            coded = rans.compress_blocks_device(
-                idx_pad, b_bits, nblocks, be, pool=entropy._shared_pool())
+            if symbol_entropy_route(params, b_bits, k_eff):
+                counts_ranks = np.asarray(a["counts_desc"])[:k_eff]
+                coded = rans.compress_blocks_device_symbols(
+                    idx_pad, b_bits, k_eff, nblocks, be, counts_ranks,
+                    pool=entropy._shared_pool())
+            else:
+                coded = rans.compress_blocks_device(
+                    idx_pad, b_bits, nblocks, be,
+                    pool=entropy._shared_pool())
             coded_name = params.codec
     with telemetry.span("encode.idx_fetch") as sp_fetch:
         idx_host = (np.asarray(idx) if need_host_idx or coded is None
@@ -235,6 +318,91 @@ def compress_step(prev: np.ndarray, curr: np.ndarray,
                               dev.width, params, dev.meta)
 
 
+def _record_read(step: CompressedStep, entropy_s: float = 0.0,
+                 dequant_s: float = 0.0, patch_s: float = 0.0,
+                 fetch_s: float = 0.0, device: bool = False) -> None:
+    """Fold the decode-side span durations into the canonical per-read
+    telemetry record (``obs.report.READ_TELEMETRY_KEYS``), identical
+    across the single-device, sharded, and anchor read paths."""
+    from repro.obs import report
+    rec = {"entropy_s": entropy_s, "dequant_s": dequant_s,
+           "patch_s": patch_s, "fetch_s": fetch_s,
+           "bytes_in": int(sum(len(b) for b in step.index_blocks)),
+           "bytes_out": int(step.n) * np.dtype(step.dtype).itemsize,
+           "codec": step.codec, "device_decode": bool(device)}
+    assert tuple(rec) == report.READ_TELEMETRY_KEYS
+    step.meta["telemetry_read"] = rec
+
+
+def _decode_index_host(step: CompressedStep) -> np.ndarray:
+    """Inflate every index block of a step into one preallocated (n,)
+    int32 buffer, block-parallel over the shared entropy pool for
+    payloads worth the dispatch."""
+    idx = np.empty(step.n, np.int32)
+    slices = list(blocks.block_slices(step.n, step.block_elems))
+
+    def inflate(bi: int) -> None:
+        s, e = slices[bi]
+        idx[s:e] = blocks.inflate_block(step.index_blocks[bi], e - s,
+                                        step.b_bits,
+                                        codec=step.codec_for_block(bi))
+
+    payload = sum(len(b) for b in step.index_blocks)
+    if len(slices) > 1 and payload >= entropy._MIN_PARALLEL_BYTES:
+        list(entropy._shared_pool().map(inflate, range(len(slices))))
+    else:
+        for bi in range(len(slices)):
+            inflate(bi)
+    return idx
+
+
+def _centers_lut(step: CompressedStep, cdt) -> np.ndarray:
+    marker = (1 << step.b_bits) - 1
+    return np.concatenate([step.centers,
+                           np.zeros(marker + 1 - step.centers.size)
+                           ]).astype(cdt)
+
+
+def decompress_step_device(step: CompressedStep, prev) -> jax.Array:
+    """Device-resident reconstruction of one delta step: blob -> device
+    rANS decode -> fused dequantize -> exception patch, zero host round
+    trips.  ``prev`` may be a host ndarray or a device array (the
+    device-resident decompressor chain feeds its state straight back).
+    Returns the reconstruction as a (step.shape) device array of the
+    source dtype; bit-identical to the host ``decompress_step`` by the
+    same argument as the encode side (same IEEE ops on the same data).
+    """
+    assert prev is not None, "non-anchor steps need the previous state"
+    tele = telemetry.enabled()
+    cdt = pipe.reconstruction_dtype(step.dtype)
+    with telemetry.span("decode.entropy", annotate=True) as sp_e:
+        idx2d = rans.decode_blocks_device(step.index_blocks, step.b_bits,
+                                          step.block_elems,
+                                          pool=entropy._shared_pool())
+        idx = idx2d.reshape(-1)[:step.n]
+        if tele:
+            jax.block_until_ready(idx)
+    with telemetry.span("decode.dequant", annotate=True) as sp_d:
+        prev_dev = jnp.asarray(prev).reshape(-1).astype(cdt)
+        centers = jnp.asarray(_centers_lut(step, cdt))
+        recon = kops.dequantize(idx, prev_dev, centers, b_bits=step.b_bits,
+                                use_pallas=not kops._interpret())
+        if tele:
+            jax.block_until_ready(recon)
+    with telemetry.span("decode.patch", annotate=True) as sp_p:
+        if step.n_incompressible:
+            recon = kops.patch_exceptions(recon, idx,
+                                          jnp.asarray(step.incomp_values),
+                                          b_bits=step.b_bits)
+        out = recon.astype(step.dtype).reshape(step.shape)
+        if tele:
+            jax.block_until_ready(out)
+    if tele:
+        _record_read(step, entropy_s=sp_e.duration, dequant_s=sp_d.duration,
+                     patch_s=sp_p.duration, device=True)
+    return out
+
+
 def decompress_step(step: CompressedStep,
                     prev: Optional[np.ndarray]) -> np.ndarray:
     """Reconstruct R_i = R_{i-1} * (1 + center)  (corrected Eq. 4).
@@ -242,30 +410,40 @@ def decompress_step(step: CompressedStep,
     Arithmetic runs in the step's source precision
     (``pipeline.reconstruction_dtype``) so the replayed chain is
     bit-identical to the compressor's reference chain, host- or
-    device-resident, for float32 and float64 data alike.
+    device-resident, for float32 and float64 data alike.  Steps that
+    qualify for the device decode route (``device_decode_route``) run
+    blob -> device rANS decode -> fused dequantize -> exception patch
+    with one final fetch; everything else takes the pool-parallel host
+    path.  Results are bit-identical across routes.
     """
     if step.is_anchor:
         return decode_anchor(step)
+    if device_decode_route(step):
+        dev = decompress_step_device(step, prev)
+        with telemetry.span("decode.fetch", annotate=True) as sp_f:
+            out = np.asarray(dev)
+        if telemetry.enabled() and "telemetry_read" in step.meta:
+            step.meta["telemetry_read"]["fetch_s"] = sp_f.duration
+        return out
     assert prev is not None, "non-anchor steps need the previous state"
+    tele = telemetry.enabled()
     cdt = pipe.reconstruction_dtype(step.dtype)
-    prev_flat = np.asarray(prev).reshape(-1).astype(cdt, copy=False)
-    out = np.empty(step.n, dtype=cdt)
     marker = (1 << step.b_bits) - 1
-    centers = np.concatenate([step.centers,
-                              np.zeros(marker + 1 - step.centers.size)
-                              ]).astype(cdt)
-    ptr_base = step.incomp_block_offsets
-    for bi, (s, e) in enumerate(blocks.block_slices(step.n,
-                                                    step.block_elems)):
-        idx = blocks.inflate_block(step.index_blocks[bi], e - s, step.b_bits,
-                                   codec=step.codec_for_block(bi))
-        comp = prev_flat[s:e] * (1 + centers[idx])
-        mask = idx == marker
-        if mask.any():
-            start = int(ptr_base[bi])
-            stop = start + int(mask.sum())
-            comp[mask] = step.incomp_values[start:stop].astype(cdt)
-        out[s:e] = comp
+    with telemetry.span("decode.entropy", annotate=True) as sp_e:
+        idx = _decode_index_host(step)
+    with telemetry.span("decode.dequant", annotate=True) as sp_d:
+        prev_flat = np.asarray(prev).reshape(-1).astype(cdt, copy=False)
+        centers = _centers_lut(step, cdt)
+        out = prev_flat * (1 + centers[idx])
+    with telemetry.span("decode.patch", annotate=True) as sp_p:
+        if step.n_incompressible:
+            # Exception values are compacted in stream order == block
+            # order, so one global boolean scatter equals the per-block
+            # patch loop.
+            out[idx == marker] = step.incomp_values.astype(cdt)
+    if tele:
+        _record_read(step, entropy_s=sp_e.duration, dequant_s=sp_d.duration,
+                     patch_s=sp_p.duration, device=False)
     return out.astype(step.dtype).reshape(step.shape)
 
 
@@ -361,13 +539,31 @@ class TemporalCompressor:
 
 
 class TemporalDecompressor:
-    """Streaming decompressor; mirrors TemporalCompressor state chaining."""
+    """Streaming decompressor; mirrors TemporalCompressor state chaining.
+
+    When consecutive steps qualify for the device decode route the chain
+    state stays device-resident between steps (the next step's dequantize
+    reads it without an upload); ``add`` still returns a host ndarray.
+    Mixed routes are fine -- the state crosses the boundary at most once
+    per route switch, and reconstructions are bit-identical throughout
+    (the state round-trips through the source dtype each step on both
+    routes).
+    """
 
     def __init__(self):
-        self._state: Optional[np.ndarray] = None
+        self._state = None          # np.ndarray or device jax.Array
 
     def add(self, step: CompressedStep) -> np.ndarray:
-        self._state = decompress_step(step, self._state)
+        if not step.is_anchor and device_decode_route(step):
+            self._state = decompress_step_device(step, self._state)
+            with telemetry.span("decode.fetch", annotate=True) as sp_f:
+                out = np.asarray(self._state)
+            if telemetry.enabled() and "telemetry_read" in step.meta:
+                step.meta["telemetry_read"]["fetch_s"] = sp_f.duration
+            return out
+        prev = (np.asarray(self._state)
+                if isinstance(self._state, jax.Array) else self._state)
+        self._state = decompress_step(step, prev)
         return self._state
 
     def reset(self):
@@ -402,7 +598,9 @@ def decompress_series(steps: List[CompressedStep]) -> List[np.ndarray]:
     return [d.add(s) for s in steps]
 
 
-__all__ = ["compress_step", "decompress_step", "make_anchor", "decode_anchor",
-           "encode_device", "device_entropy_route", "DeviceEncoded",
+__all__ = ["compress_step", "decompress_step", "decompress_step_device",
+           "make_anchor", "decode_anchor", "decode_anchor_device",
+           "encode_device", "device_entropy_route", "device_decode_route",
+           "symbol_entropy_route", "DeviceEncoded",
            "TemporalCompressor", "TemporalDecompressor", "compress_series",
            "decompress_series"]

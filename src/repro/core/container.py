@@ -26,7 +26,11 @@ Format versions: files whose steps all use one codec per step keep the
 original "NCK1" magic (readable by every reader ever shipped); files
 carrying per-*block* codec ids -- a layout older readers cannot decode
 correctly -- are stamped "NCK2", so old readers reject them cleanly at
-open instead of mis-decoding blocks.  This reader accepts both.
+open instead of mis-decoding blocks.  Files carrying symbol-level rANS
+blocks (kernels.rans v2 blobs, coding pre-pack B-bit indices -- bytes
+older rANS decoders cannot parse) are stamped "NCK3" by the same
+mechanism: the writer peeks each rans block's self-describing version
+byte when the step is added.  This reader accepts all three.
 """
 from __future__ import annotations
 
@@ -42,9 +46,23 @@ from repro.obs import telemetry
 
 _MAGIC_V1 = b"NCK1"
 _MAGIC_V2 = b"NCK2"
-_MAGICS = {_MAGIC_V1: 1, _MAGIC_V2: 2}
+_MAGIC_V3 = b"NCK3"
+_MAGICS = {_MAGIC_V1: 1, _MAGIC_V2: 2, _MAGIC_V3: 3}
 _MAGIC = _MAGIC_V1              # legacy alias (default / pre-PR files)
 _ALIGN = 64
+
+
+def _has_symbol_blobs(step: CompressedStep) -> bool:
+    """Does any rans block of this step carry the symbol-level (v2) blob
+    format?  Old readers' rANS decoders cannot parse those bytes, so the
+    file must not present itself as NCK1/NCK2."""
+    from repro.kernels import rans
+    for bi, blob in enumerate(step.index_blocks):
+        if step.codec_for_block(bi) != "rans" or len(blob) < 5:
+            continue
+        if rans.blob_version(blob) == 2:
+            return True
+    return False
 
 
 def _pad(n: int) -> int:
@@ -95,7 +113,9 @@ class NCKWriter:
         )
         if step.block_codecs is not None:
             info["block_codecs"] = [str(c) for c in step.block_codecs]
-            self._format_version = 2
+            self._format_version = max(self._format_version, 2)
+        if _has_symbol_blobs(step):
+            self._format_version = 3
         offs_all = np.concatenate(
             [step.index_table_offsets(),
              [sum(len(b) for b in step.index_blocks)]]).astype(np.int64)
@@ -119,7 +139,8 @@ class NCKWriter:
         header = json.dumps({"dimensions": self._dims,
                              "variables": self._vars}).encode()
         tmp = path + ".tmp"
-        magic = _MAGIC_V2 if self._format_version >= 2 else _MAGIC_V1
+        magic = {1: _MAGIC_V1, 2: _MAGIC_V2,
+                 3: _MAGIC_V3}[self._format_version]
         with telemetry.span("nck.write", path=path,
                             sections=len(self._sections)):
             with open(tmp, "wb") as f:

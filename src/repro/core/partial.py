@@ -47,14 +47,30 @@ def read_step_range(reader: NCKReader, name: str, start: int, stop: int,
     if is_anchor:
         offs = reader.read_array(f"{name}_anchor_offset")
         raw = reader.read(f"{name}_anchor", int(offs[b0]), int(offs[b1 + 1]))
-        out = []
-        pos = 0
-        sizes = np.diff(offs[b0:b1 + 2])
-        for sz in sizes:
-            out.append(entropy.decompress_block(raw[pos:pos + int(sz)],
-                                                codec))
-            pos += int(sz)
-        arr = np.frombuffer(b"".join(out), dtype=info["dtype"])
+        starts = np.concatenate(
+            [[0], np.cumsum(np.diff(offs[b0:b1 + 2]))]).astype(np.int64)
+        esize = np.dtype(info["dtype"]).itemsize
+        # Exact decompressed byte span of each block (the last block of a
+        # step is shorter): assemble straight into one preallocated
+        # buffer, block-parallel over the shared entropy pool.
+        blk_bytes = np.array(
+            [(min((bi + 1) * be, n) - bi * be) * esize
+             for bi in range(b0, b1 + 1)], np.int64)
+        outs = np.concatenate([[0], np.cumsum(blk_bytes)])
+        buf = np.empty(int(outs[-1]), np.uint8)
+
+        def inflate(k: int) -> None:
+            data = entropy.decompress_block(
+                raw[int(starts[k]):int(starts[k + 1])], codec)
+            buf[int(outs[k]):int(outs[k + 1])] = np.frombuffer(data,
+                                                               np.uint8)
+
+        if b1 > b0 and len(raw) >= entropy._MIN_PARALLEL_BYTES:
+            list(entropy._shared_pool().map(inflate, range(b1 - b0 + 1)))
+        else:
+            for k in range(b1 - b0 + 1):
+                inflate(k)
+        arr = np.frombuffer(buf.data, dtype=info["dtype"])
         lo = b0 * be
         return arr[start - lo: stop - lo].copy()
 
@@ -84,15 +100,32 @@ def read_step_range(reader: NCKReader, name: str, start: int, stop: int,
     prev_slice = np.asarray(prev_slice).reshape(-1).astype(cdt, copy=False)
     assert prev_slice.size == stop - start
     out = np.empty(stop - start, cdt)
-    pos = 0
+
+    # Inflate the overlapped blocks block-parallel over the shared
+    # entropy pool (same fix as the anchor path); the reconstruction
+    # loop below then only does vector arithmetic.
+    starts = np.concatenate(
+        [[0], np.cumsum(np.diff(offs[b0:b1 + 2]))]).astype(np.int64)
+    idx_parts: list = [None] * (b1 - b0 + 1)
+
+    def inflate(k: int) -> None:
+        bi = b0 + k
+        blk_lo = bi * be
+        idx_parts[k] = blocks.inflate_block(
+            raw[int(starts[k]):int(starts[k + 1])],
+            min(blk_lo + be, n) - blk_lo, b_bits,
+            codec=block_codecs[bi] if block_codecs else codec)
+
+    if b1 > b0 and len(raw) >= entropy._MIN_PARALLEL_BYTES:
+        list(entropy._shared_pool().map(inflate, range(b1 - b0 + 1)))
+    else:
+        for k in range(b1 - b0 + 1):
+            inflate(k)
+
     for bi in range(b0, b1 + 1):
-        blob = raw[pos:pos + int(offs[bi + 1] - offs[bi])]
-        pos += int(offs[bi + 1] - offs[bi])
         blk_lo = bi * be
         blk_hi = min(blk_lo + be, n)
-        idx = blocks.inflate_block(
-            blob, blk_hi - blk_lo, b_bits,
-            codec=block_codecs[bi] if block_codecs else codec)
+        idx = idx_parts[bi - b0]
         s = max(start, blk_lo)
         e = min(stop, blk_hi)
         sub = idx[s - blk_lo: e - blk_lo]

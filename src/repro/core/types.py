@@ -49,6 +49,13 @@ class NumarckParams:
     # the accelerator and finalize consumes pre-compressed blobs.  Blobs
     # are byte-identical to the host flavor either way.
     device_entropy: bool = True
+    # Symbol-level rANS (top-k only): entropy-code the pre-pack B-bit
+    # indices over the dense {rank, marker} alphabet using the analyze
+    # stage's exact global histogram -- no strided sample pass, no
+    # bit-pack/unpack stage on either side.  Steps carrying such blocks
+    # are stamped NCK3 by the container (old readers reject them
+    # cleanly; NCK1/NCK2 files still load either way).
+    symbol_rans: bool = False
     reference: str = REF_RECONSTRUCTED
     kmeans_iters: int = 20
     kmeans_max_k: int = 4096           # tractability cap for k-means binning

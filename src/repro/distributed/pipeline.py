@@ -532,6 +532,45 @@ def _decode_shard(idx_l, prev_l, centers, *, b_bits, use_pallas):
     return out[None]
 
 
+def _rans_decode_shard_packed(dec_l, states_l, stream_l, *, m, L, b_bits,
+                              be):
+    """Per-shard device entropy decode of v1 (byte-rANS) blocks: the
+    forward L-lane scan (kernels.rans.decode_scan_body) fused with the
+    word unpack, symmetric to `_entropy_shard`.  Dummy (padding) rows
+    decode to garbage that the caller drops; stream-integrity validation
+    happens on host over the real rows only."""
+    syms, xf, ptrf = rans.decode_scan_body(dec_l[0], None, states_l[0],
+                                           stream_l[0], m, L)
+    nbytes = be * b_bits // 8
+    idx = rans.unpack_words(rans.bytes_to_words(syms[:, :nbytes]),
+                            b_bits, be)
+    return idx[None], xf[None], ptrf[None]
+
+
+def _rans_decode_shard_syms(dec_l, states_l, stream_l, *, m, L, n_sym,
+                            b_bits, be):
+    """Per-shard device entropy decode of v2 (symbol-rANS) blocks with a
+    dense alphabet <= 256 (symbol fused into the decode table)."""
+    syms, xf, ptrf = rans.decode_scan_body(dec_l[0], None, states_l[0],
+                                           stream_l[0], m, L)
+    syms = syms[:, :be].astype(jnp.int32)
+    marker = jnp.int32((1 << b_bits) - 1)
+    idx = jnp.where(syms >= jnp.int32(n_sym - 1), marker, syms)
+    return idx[None], xf[None], ptrf[None]
+
+
+def _rans_decode_shard_syms_wide(dec_l, sym_l, states_l, stream_l, *, m, L,
+                                 n_sym, b_bits, be):
+    """Wide-alphabet (> 256 symbols) flavor of `_rans_decode_shard_syms`:
+    symbols come from a second slot->symbol table gather."""
+    syms, xf, ptrf = rans.decode_scan_body(dec_l[0], sym_l[0], states_l[0],
+                                           stream_l[0], m, L)
+    syms = syms[:, :be].astype(jnp.int32)
+    marker = jnp.int32((1 << b_bits) - 1)
+    idx = jnp.where(syms >= jnp.int32(n_sym - 1), marker, syms)
+    return idx[None], xf[None], ptrf[None]
+
+
 def _advance_shard(idx_l, prev_l, curr_l, centers, *, b_bits, use_pallas):
     """Temporal chain advance on the mesh: the same dequantize kernel as
     `_decode_shard` composed with the on-device exception patch from the
@@ -594,11 +633,17 @@ class _ShardedDeviceChain(chainmod.ReferenceChain):
 
 
 class ShardedDecompressor:
-    """Distributed reconstruction: hosts inflate+unpack blocks (entropy
-    stage stays on CPU, like the paper), devices run the fused dequantize
-    kernel **and** the exception patch (`kernels.dequant.patch_exceptions`
-    scatters the exception table on device), so reconstruction leaves the
-    accelerator exactly once -- at the final host fetch.
+    """Distributed reconstruction, mirror image of the sharded encode.
+
+    Steps that qualify for the device decode route
+    (``core.compress.device_decode_route`` with uniform-format rans
+    blocks) entropy-decode **on the mesh**: a jit-cached shard_map stage
+    symmetric to `_entropy_shard` runs the forward rANS scan over each
+    shard's blocks, feeding the (also jit-cached) fused dequantize stage
+    and the on-device exception patch -- blob to reconstruction with one
+    final host fetch.  Everything else inflates on host (block-parallel
+    over the shared entropy pool) and uploads; both routes and the
+    single-device driver are bit-identical.
 
     Reconstruction preserves the source dtype: float32 runs the f32
     kernel, float64 runs the dtype-preserving gather path under
@@ -612,46 +657,197 @@ class ShardedDecompressor:
         self.axis = axis
         self.use_pallas = use_pallas
         self.n_shards = mesh.shape[axis]
+        # jit caches (same discipline as ShardedCompressor): one traced
+        # executable per static signature across a temporal series.
+        self._dequant_fns: Dict[Tuple, object] = {}
+        self._rans_fns: Dict[Tuple, object] = {}
+
+    def _shardings(self):
+        return (NamedSharding(self.mesh, P(self.axis)),
+                NamedSharding(self.mesh, P()))
+
+    def _dequant_fn(self, bb: int):
+        key = (bb,)
+        if key not in self._dequant_fns:
+            fn = shard_map(
+                partial(_decode_shard, b_bits=bb,
+                        use_pallas=self.use_pallas),
+                mesh=self.mesh,
+                in_specs=(P(self.axis), P(self.axis), P()),
+                out_specs=P(self.axis), check_rep=False)
+            self._dequant_fns[key] = jax.jit(fn)
+        return self._dequant_fns[key]
+
+    def _rans_fn(self, kind: str, **static):
+        key = (kind, tuple(sorted(static.items())))
+        if key not in self._rans_fns:
+            body = {"v1": _rans_decode_shard_packed,
+                    "v2": _rans_decode_shard_syms,
+                    "v2w": _rans_decode_shard_syms_wide}[kind]
+            n_in = 4 if kind == "v2w" else 3
+            fn = shard_map(partial(body, **static), mesh=self.mesh,
+                           in_specs=(P(self.axis),) * n_in,
+                           out_specs=(P(self.axis),) * 3, check_rep=False)
+            self._rans_fns[key] = jax.jit(fn)
+        return self._rans_fns[key]
+
+    def _parse_uniform(self, step: CompressedStep):
+        """Parse a device-codec step's rans blobs for the mesh decode
+        stage.  Returns (signature, records) when every block shares one
+        blob version / lane count / alphabet (uniform rows are what the
+        shard_map stage needs); None sends the step down the
+        single-device device route instead (still bit-identical)."""
+        sig = None
+        recs = []
+        nbytes = step.block_elems * step.b_bits // 8
+        for blob in step.index_blocks:
+            v = rans.blob_version(blob)
+            if v == 1:
+                nb_, L, freq, states, stream = rans._parse_v1(blob)
+                if nb_ != nbytes:
+                    return None
+                k = (1, L, 256)
+            elif v == 2:
+                ne, bb, L, freq, states, stream = rans._parse_v2(blob)
+                if bb != step.b_bits or ne != step.block_elems:
+                    return None
+                k = (2, L, freq.size)
+            else:
+                return None
+            if sig is None:
+                sig = k
+            elif k != sig:
+                return None
+            recs.append({"freq": freq, "states": states, "stream": stream})
+        return sig, recs
+
+    def _rans_decode_stage(self, step: CompressedStep, parsed):
+        """Mesh-resident entropy decode: blobs -> sharded (P, nbmax, be)
+        int32 indices.  Blocks pad to P * nbmax rows with dummy rows
+        (reused tables, lane states at STATE_LO, empty streams) whose
+        output is garbage past position n and is never read; validation
+        covers the real rows, matching ``decode_np`` semantics."""
+        (version, L, n_sym), recs = parsed
+        P_ = self.n_shards
+        be = step.block_elems
+        nblocks = len(recs)
+        nbmax = -(-nblocks // P_)
+        rows = P_ * nbmax
+        m = -(-(be * step.b_bits // 8 if version == 1 else be) // L)
+        smax = max(1, max(r["stream"].size for r in recs))
+        states = np.full((rows, L), rans.STATE_LO, np.uint32)
+        stream = np.zeros((rows, smax), np.uint16)
+        dec = np.empty((rows, rans.M), np.uint32)
+        sym = None
+        cache: Dict[bytes, tuple] = {}
+        for i, r in enumerate(recs):
+            key = r["freq"].tobytes()
+            if key not in cache:
+                cache[key] = rans._decode_tables(r["freq"])
+            d, s2 = cache[key]
+            dec[i] = d
+            states[i] = r["states"]
+            stream[i, :r["stream"].size] = r["stream"]
+            if s2 is not None:
+                if sym is None:
+                    sym = np.empty((rows, rans.M), np.int32)
+                sym[i] = s2
+        if rows > nblocks:                    # dummy rows: any valid table
+            dec[nblocks:] = dec[0]
+            if sym is not None:
+                sym[nblocks:] = sym[0]
+        sharded, _ = self._shardings()
+        dec_dev = jax.device_put(dec.reshape(P_, nbmax, rans.M), sharded)
+        st_dev = jax.device_put(states.reshape(P_, nbmax, L), sharded)
+        sm_dev = jax.device_put(stream.reshape(P_, nbmax, smax), sharded)
+        if version == 1:
+            fn = self._rans_fn("v1", m=m, L=L, b_bits=step.b_bits, be=be)
+            idx, xf, ptrf = fn(dec_dev, st_dev, sm_dev)
+        elif sym is None:
+            fn = self._rans_fn("v2", m=m, L=L, n_sym=n_sym,
+                               b_bits=step.b_bits, be=be)
+            idx, xf, ptrf = fn(dec_dev, st_dev, sm_dev)
+        else:
+            sym_dev = jax.device_put(sym.reshape(P_, nbmax, rans.M),
+                                     sharded)
+            fn = self._rans_fn("v2w", m=m, L=L, n_sym=n_sym,
+                               b_bits=step.b_bits, be=be)
+            idx, xf, ptrf = fn(dec_dev, sym_dev, st_dev, sm_dev)
+        n_emit = np.array([r["stream"].size for r in recs], np.int64)
+        rans._check_decoded(np.asarray(xf).reshape(rows, L)[:nblocks],
+                            np.asarray(ptrf).reshape(rows)[:nblocks],
+                            n_emit)
+        return idx
 
     def decompress(self, step: CompressedStep,
                    prev: np.ndarray) -> np.ndarray:
-        from repro.core import blocks as blk
+        from repro.core import compress as comp
         cdt = pipe.reconstruction_dtype(step.dtype)
         if cdt == np.float64 and not jax.config.jax_enable_x64:
             return decompress_step(step, prev)
+        tele = telemetry.enabled()
         n = step.n
         marker = (1 << step.b_bits) - 1
-        # host: inflate + unpack (per-block; each block independently)
-        idx = np.concatenate([
-            blk.inflate_block(b, min(step.block_elems,
-                                     n - i * step.block_elems),
-                              step.b_bits, codec=step.codec_for_block(i))
-            for i, b in enumerate(step.index_blocks)])
         P_ = self.n_shards
-        ln = -(-n // P_)
-        idx_p = _pad_to(idx.astype(np.int32), P_ * ln, marker)
-        prev_p = _pad_to(np.asarray(prev, cdt).reshape(-1), P_ * ln, 0.0)
-        centers = step.centers.astype(cdt)[None]
-
-        sharded = NamedSharding(self.mesh, P(self.axis))
-        rep = NamedSharding(self.mesh, P())
-        fn = shard_map(
-            partial(_decode_shard, b_bits=step.b_bits,
-                    use_pallas=self.use_pallas),
-            mesh=self.mesh,
-            in_specs=(P(self.axis), P(self.axis), P()),
-            out_specs=P(self.axis), check_rep=False)
-        idx_dev = jax.device_put(idx_p, sharded)
-        out = jax.jit(fn)(idx_dev, jax.device_put(prev_p, sharded),
-                          jax.device_put(centers, rep)).reshape(-1)
-        # device: scatter the exception table over the marker lanes (the
-        # padded tail is also marker, but real markers all precede it in
-        # stream order, so the table lands exactly on the first n lanes).
-        if step.n_incompressible:
-            out = dequant.patch_exceptions(
-                out, idx_dev, jnp.asarray(step.incomp_values.astype(cdt)),
-                b_bits=step.b_bits)
-        return np.asarray(out)[:n].astype(step.dtype).reshape(step.shape)
+        parsed = None
+        if comp.device_decode_route(step):
+            parsed = self._parse_uniform(step)
+            if parsed is None:
+                # Mixed blob formats (e.g. a marker-heavy ragged tail
+                # that stored raw): the single-device device route
+                # handles heterogeneous groups -- still device-resident
+                # and bit-identical, just not mesh-sharded.
+                return decompress_step(step, prev)
+        with telemetry.span("decode.entropy", annotate=True) as sp_e:
+            if parsed is not None:
+                # Mesh-resident entropy decode: blocks distribute
+                # contiguously over shards, so the flattened output IS
+                # the global element order (dummy-row garbage past n).
+                idx_dev = self._rans_decode_stage(step, parsed)
+                ln = idx_dev.shape[1] * step.block_elems
+                idx_dev = idx_dev.reshape(-1)
+            else:
+                # host: inflate + unpack (block-parallel over the shared
+                # entropy pool), one upload.
+                idx = comp._decode_index_host(step)
+                ln = -(-n // P_)
+                sharded, _ = self._shardings()
+                idx_dev = jax.device_put(
+                    _pad_to(idx.astype(np.int32), P_ * ln, marker),
+                    sharded)
+            if tele:
+                jax.block_until_ready(idx_dev)
+        with telemetry.span("decode.dequant", annotate=True) as sp_d:
+            sharded, rep = self._shardings()
+            prev_p = _pad_to(np.asarray(prev, cdt).reshape(-1), P_ * ln,
+                             0.0)
+            centers = step.centers.astype(cdt)[None]
+            out = self._dequant_fn(step.b_bits)(
+                idx_dev, jax.device_put(prev_p, sharded),
+                jax.device_put(centers, rep)).reshape(-1)
+            if tele:
+                jax.block_until_ready(out)
+        with telemetry.span("decode.patch", annotate=True) as sp_p:
+            # device: scatter the exception table over the marker lanes
+            # (the padded tail may also read as marker, but real markers
+            # all precede it in stream order, so the table lands exactly
+            # on the first n lanes).
+            if step.n_incompressible:
+                out = dequant.patch_exceptions(
+                    out, idx_dev,
+                    jnp.asarray(step.incomp_values.astype(cdt)),
+                    b_bits=step.b_bits)
+            if tele:
+                jax.block_until_ready(out)
+        with telemetry.span("decode.fetch", annotate=True) as sp_f:
+            res = np.asarray(out)[:n].astype(step.dtype
+                                             ).reshape(step.shape)
+        if tele:
+            comp._record_read(step, entropy_s=sp_e.duration,
+                              dequant_s=sp_d.duration,
+                              patch_s=sp_p.duration, fetch_s=sp_f.duration,
+                              device=parsed is not None)
+        return res
 
 
 __all__ = ["ShardedCompressor", "ShardedDecompressor"]

@@ -30,12 +30,35 @@ sample-normalize code on both paths so host- and device-produced blobs
 are byte-identical by construction.  Decode (``decompress``) is the host
 side used by ``decompress_step`` / ``partial.read_step_range``.
 
+The *decoder* mirrors the encoder on both sides: ``decode_np`` is the
+lane-vectorized NumPy oracle and ``decode_blocks_device`` /
+``decode_bytes_blocks_device`` are the jnp/``lax.scan`` lowering --
+the same L-lane state advance run forward, ingesting the 0-or-1 u16
+renorm schedule the encoder emitted, with per-block stream pointers
+advanced by an in-block prefix sum.  Slot lookups go through a fused
+per-slot u32 table (freq | offset<<12 | symbol<<24) so the hot scan body
+is one gather + one take_along_axis per step; alphabets wider than 256
+symbols use a second symbol-table gather.  Byte-identity with
+``decode_np`` holds by construction (same integer ops per lane), and the
+blob validation semantics match: corrupt tables, stream underrun/overrun
+and bad final states raise ``ValueError``.
+
 Blob layout (little-endian), self-describing per block:
 
   v1 (rANS): u32 raw_len | u8 1 | u8 scale_bits | u16 L |
              256*u16 freq | u32 n_emit | L*u32 states | n_emit*u16 stream
   v0 (raw):  u32 raw_len | u8 0 | raw bytes          (store fallback when
              the rANS stream would not beat raw -- near-random blocks)
+  v2 (symbol rANS): u32 n_elems | u8 2 | u8 scale_bits | u8 b_bits |
+             u16 L | u16 n_sym | n_sym*u16 freq | u32 n_emit |
+             L*u32 states | n_emit*u16 stream
+
+v2 codes the *pre-pack* B-bit indices as rANS symbols over the dense
+alphabet {rank 0..k-1, marker} (symbol id k == the B-bit marker), so the
+pack/unpack stages and the strided byte-sample pass disappear entirely --
+the analyze stage's exact global histogram (``counts_desc``) IS the
+symbol histogram.  Files carrying v2 blobs are stamped NCK3 by the
+container so old readers reject them cleanly.
 """
 from __future__ import annotations
 
@@ -52,8 +75,11 @@ M = 1 << SCALE_BITS                 # total frequency budget per table
 STATE_LO = 1 << 16                  # renormalization lower bound
 _HDR = struct.Struct("<IBBH")       # raw_len, version, scale_bits, lanes
 _RAW_HDR = struct.Struct("<IB")     # raw_len, version=0
+# v2 symbol-level header: n_elems, version, scale_bits, b_bits, lanes, n_sym
+_HDR2 = struct.Struct("<IBBBHH")
 _V_RANS = 1
 _V_RAW = 0
+_V_SYM = 2
 
 # Below this raw payload (total packed bytes of a step) the drivers keep
 # the host codec path: jit-cache churn and per-call dispatch would eat the
@@ -83,19 +109,25 @@ def sample_stride(n: int) -> int:
 # ------------------------------------------------------------- tables
 
 def freq_from_counts(counts: np.ndarray) -> np.ndarray:
-    """(256,) counts -> (256,) uint16 frequencies summing to M, every
-    symbol >= 1 (so unsampled bytes stay encodable).
+    """(A,) counts -> (A,) uint16 frequencies summing to M, every symbol
+    >= 1 (so unsampled symbols stay encodable).  A <= M required.
 
     Deterministic largest-quota allocation: each symbol gets 1 plus its
     share of the remaining budget via cumulative integer boundaries --
     one vector pass, no data-dependent iteration, identical results on
-    every path.
+    every path.  The byte coders use A=256; the symbol-level v2 coder
+    passes the dense rank alphabet (A = k_eff + 1).
     """
     counts = np.asarray(counts, np.uint64)
+    A = counts.size
+    if A > M:
+        raise ValueError(f"alphabet {A} exceeds frequency budget {M}")
     total = int(counts.sum())
     if total == 0:
-        return np.full(256, M // 256, np.uint16)
-    budget = np.uint64(M - 256)
+        base = np.full(A, M // A, np.uint64)
+        base[: M - int(base.sum())] += 1      # exact sum for A not | M
+        return base.astype(np.uint16)
+    budget = np.uint64(M - A)
     bounds = (np.cumsum(counts) * budget) // np.uint64(total)
     extra = np.diff(np.concatenate([[np.uint64(0)], bounds]))
     return (1 + extra).astype(np.uint16)
@@ -127,15 +159,19 @@ def pack_fc(freq: np.ndarray) -> np.ndarray:
 def encode_np(raw: np.ndarray, freq: np.ndarray):
     """Encode one block: (L,) u32 final states + (n_emit,) u16 stream.
 
-    Lanes interleave by stride L; symbols are visited in reverse row
-    order (standard rANS encodes backwards); the emitted stream is laid
-    out in the decoder's read order (row ascending, lane ascending).
+    ``raw`` is a symbol array (uint8 bytes, or any int array of ids <
+    ``freq.size`` for the symbol-level coder).  Lanes interleave by
+    stride L; symbols are visited in reverse row order (standard rANS
+    encodes backwards); the emitted stream is laid out in the decoder's
+    read order (row ascending, lane ascending).
     """
-    raw = np.asarray(raw, np.uint8)
+    raw = np.asarray(raw)
+    if raw.dtype != np.uint8:
+        raw = raw.astype(np.int64)
     n = raw.size
     L = lanes_for(n)
     m = -(-n // L) if n else 0
-    sy = np.zeros(m * L, np.uint8)
+    sy = np.zeros(m * L, raw.dtype)
     sy[:n] = raw
     sy = sy.reshape(m, L)
     f64 = np.asarray(freq, np.uint64)
@@ -158,18 +194,24 @@ def encode_np(raw: np.ndarray, freq: np.ndarray):
 
 def decode_np(states: np.ndarray, stream: np.ndarray, freq: np.ndarray,
               n: int, L: int) -> np.ndarray:
-    """Inverse of encode_np (lane-vectorized; validates stream integrity)."""
+    """Inverse of encode_np (lane-vectorized; validates stream integrity).
+
+    Returns uint8 symbols for byte alphabets (freq.size <= 256), int32
+    symbol ids for wider (symbol-level) alphabets.
+    """
     m = -(-n // L) if n else 0
+    A = np.asarray(freq).size
     f64 = np.asarray(freq, np.uint64)
     c64 = _cum(freq)
-    slot2sym = np.repeat(np.arange(256, dtype=np.uint8),
+    sdt = np.uint8 if A <= 256 else np.int32
+    slot2sym = np.repeat(np.arange(A, dtype=sdt),
                          np.asarray(freq, np.int64))
     if slot2sym.size != M:
         raise ValueError("corrupt rANS table: frequencies sum != 2^scale")
     x = np.asarray(states, np.uint64).copy()
     if x.size != L:
         raise ValueError("corrupt rANS blob: state count != lanes")
-    out = np.zeros((m, L), np.uint8)
+    out = np.zeros((m, L), sdt)
     ptr = 0
     for j in range(m):
         slot = x & np.uint64(M - 1)
@@ -214,6 +256,64 @@ def assemble_blob(raw_len: int, freq: np.ndarray, states: np.ndarray,
     ])
 
 
+def blob_nbytes_sym(n_emit: int, L: int, n_sym: int) -> int:
+    return _HDR2.size + 2 * n_sym + 4 + 4 * L + 2 * n_emit
+
+
+def assemble_symbol_blob(n_elems: int, b_bits: int, freq: np.ndarray,
+                         states: np.ndarray, stream: np.ndarray,
+                         raw_bytes: Optional[Callable[[], bytes]] = None
+                         ) -> bytes:
+    """Assemble a v2 symbol-level blob; ``raw_bytes`` supplies the packed
+    byte payload lazily for the v0 store fallback (compared against the
+    packed size, exactly like the byte coder)."""
+    L = int(states.size)
+    n_sym = int(np.asarray(freq).size)
+    packed_len = n_elems * b_bits // 8
+    if raw_bytes is not None and \
+            blob_nbytes_sym(stream.size, L, n_sym) >= \
+            packed_len + _RAW_HDR.size:
+        return _RAW_HDR.pack(packed_len, _V_RAW) + raw_bytes()
+    return b"".join([
+        _HDR2.pack(n_elems, _V_SYM, SCALE_BITS, b_bits, L, n_sym),
+        np.ascontiguousarray(freq, np.uint16).tobytes(),
+        struct.pack("<I", int(stream.size)),
+        np.ascontiguousarray(states, np.uint32).tobytes(),
+        np.ascontiguousarray(stream, np.uint16).tobytes(),
+    ])
+
+
+def symbol_freq(counts_ranks: np.ndarray, k_eff: int,
+                total_elems: int) -> np.ndarray:
+    """v2 frequency table from the analyze stage's exact global histogram:
+    symbol r < k_eff counts ``counts_ranks[r]`` occurrences; the marker
+    symbol (id k_eff) absorbs the rest, including block padding."""
+    counts = np.zeros(k_eff + 1, np.uint64)
+    counts[:k_eff] = np.asarray(counts_ranks[:k_eff], np.uint64)
+    used = int(counts[:k_eff].sum())
+    counts[k_eff] = max(total_elems - used, 0)
+    return freq_from_counts(counts)
+
+
+def compress_symbols(idx: np.ndarray, b_bits: int,
+                     freq: np.ndarray) -> bytes:
+    """Host (NumPy) flavor of the symbol-level coder: one block of B-bit
+    index values -> self-describing v2 blob (the oracle the device group
+    encoder is byte-identical to)."""
+    idx = np.asarray(idx, np.int64)
+    k_eff = int(np.asarray(freq).size) - 1
+    syms = np.minimum(idx, k_eff)
+    states, stream = encode_np(syms, freq)
+
+    def raw_bytes() -> bytes:
+        from repro.core.packing import pack_indices_np
+        nbytes = idx.size * b_bits // 8
+        return pack_indices_np(idx, b_bits).tobytes()[:nbytes]
+
+    return assemble_symbol_blob(idx.size, b_bits, freq, states, stream,
+                                raw_bytes=raw_bytes)
+
+
 def compress(raw: bytes) -> bytes:
     """Host (NumPy) flavor: bytes -> self-describing rANS blob."""
     arr = np.frombuffer(raw, np.uint8)
@@ -223,18 +323,15 @@ def compress(raw: bytes) -> bytes:
                          raw_bytes=lambda: bytes(raw))
 
 
-def decompress(blob: bytes) -> bytes:
-    """Decode a block blob (v0 raw or v1 rANS) back to its raw bytes."""
+def blob_version(blob: bytes) -> int:
+    """Self-described version byte of a block blob (v0/v1/v2)."""
     if len(blob) < _RAW_HDR.size:
         raise ValueError("rANS blob too short")
-    n, version = _RAW_HDR.unpack_from(blob)
-    if version == _V_RAW:
-        out = blob[_RAW_HDR.size:_RAW_HDR.size + n]
-        if len(out) != n:
-            raise ValueError("corrupt raw blob: truncated payload")
-        return out
-    if version != _V_RANS:
-        raise ValueError(f"unknown rANS blob version {version}")
+    return blob[4]
+
+
+def _parse_v1(blob: bytes):
+    """v1 blob -> (n_bytes, L, freq (256,) u16, states, stream)."""
     n, _, sb, L = _HDR.unpack_from(blob)
     if sb != SCALE_BITS:
         raise ValueError(f"unsupported rANS scale_bits {sb}")
@@ -246,7 +343,53 @@ def decompress(blob: bytes) -> bytes:
     states = np.frombuffer(blob, np.uint32, L, off)
     off += 4 * L
     stream = np.frombuffer(blob, np.uint16, n_emit, off)
-    return decode_np(states, stream, freq, n, L).tobytes()
+    return n, L, freq, states, stream
+
+
+def _parse_v2(blob: bytes):
+    """v2 blob -> (n_elems, b_bits, L, freq (n_sym,) u16, states, stream)."""
+    n, _, sb, b_bits, L, n_sym = _HDR2.unpack_from(blob)
+    if sb != SCALE_BITS:
+        raise ValueError(f"unsupported rANS scale_bits {sb}")
+    off = _HDR2.size
+    freq = np.frombuffer(blob, np.uint16, n_sym, off)
+    off += 2 * n_sym
+    (n_emit,) = struct.unpack_from("<I", blob, off)
+    off += 4
+    states = np.frombuffer(blob, np.uint32, L, off)
+    off += 4 * L
+    stream = np.frombuffer(blob, np.uint16, n_emit, off)
+    return n, b_bits, L, freq, states, stream
+
+
+def decompress(blob: bytes) -> bytes:
+    """Decode a block blob back to its raw *packed* bytes.
+
+    v0 returns the stored payload, v1 decodes the byte stream, v2 decodes
+    the symbol stream and re-packs the B-bit values -- so every consumer
+    of packed bytes (``blocks.inflate_block``, partial reads, the host
+    decompressors) works unchanged whatever the blob flavor.
+    """
+    version = blob_version(blob)
+    if version == _V_RAW:
+        (n, _) = _RAW_HDR.unpack_from(blob)
+        out = blob[_RAW_HDR.size:_RAW_HDR.size + n]
+        if len(out) != n:
+            raise ValueError("corrupt raw blob: truncated payload")
+        return out
+    if version == _V_RANS:
+        n, L, freq, states, stream = _parse_v1(blob)
+        return decode_np(states, stream, freq, n, L).tobytes()
+    if version == _V_SYM:
+        n, b_bits, L, freq, states, stream = _parse_v2(blob)
+        syms = decode_np(states, stream, freq, n, L).astype(np.int64)
+        marker = (1 << b_bits) - 1
+        k_eff = freq.size - 1
+        vals = np.where(syms >= k_eff, marker, syms)
+        from repro.core.packing import pack_indices_np
+        nbytes = n * b_bits // 8
+        return pack_indices_np(vals, b_bits).tobytes()[:nbytes]
+    raise ValueError(f"unknown rANS blob version {version}")
 
 
 # ------------------------------------------------------ device lowering
@@ -278,9 +421,11 @@ def pack_words(idx2d: jax.Array, b_bits: int) -> jax.Array:
     return jnp.stack(words, axis=-1).reshape(nb, -1)
 
 
-def encode_bytes_body(byts: jax.Array, fc: jax.Array, L: int):
+def encode_bytes_body(byts: jax.Array, fc: jax.Array, L: int,
+                      alphabet: int = 256):
     """Shared scan body (jit- and shard_map-safe): encode every block of
-    ``byts`` (nb, nbytes) u8 with its fused table row of ``fc`` (nb, 256)
+    ``byts`` (nb, n) symbols (u8 bytes, or i32 ids < ``alphabet`` for the
+    symbol-level coder) with its fused table row of ``fc`` (nb, alphabet)
     u32.  Returns (states (nb, L) u32, vals (nb, m*L) u16, masks
     (nb, m*L) bool) with each block's emissions laid out contiguously in
     decoder order (j ascending, lane ascending): the host compacts a
@@ -295,7 +440,7 @@ def encode_bytes_body(byts: jax.Array, fc: jax.Array, L: int):
         byts = jnp.pad(byts, ((0, 0), (0, pad)))
     sy = byts.reshape(nb, m, L).astype(jnp.int32)
     sy = jnp.transpose(sy, (1, 0, 2)).reshape(m, nb * L)[::-1]
-    base = jnp.repeat(jnp.arange(nb, dtype=jnp.int32), L) * 256
+    base = jnp.repeat(jnp.arange(nb, dtype=jnp.int32), L) * alphabet
     fc_flat = fc.reshape(-1)
 
     def body(x, s):
@@ -326,6 +471,17 @@ def encode_idx_group(idx2d: jax.Array, fc: jax.Array, b_bits: int, L: int):
     bit-pack (word math of the bitpack kernel) -> bytes -> rANS scan."""
     return encode_bytes_body(words_to_bytes(pack_words(idx2d, b_bits)),
                              fc, L)
+
+
+@functools.partial(jax.jit, static_argnames=("k_eff", "L"))
+def encode_sym_group(idx2d: jax.Array, fc: jax.Array, k_eff: int, L: int):
+    """Device symbol-level encode of a block group: map B-bit index
+    values onto the dense rank alphabet (marker -> id ``k_eff``) and rANS
+    the symbols directly -- no bit-pack, no byte sampling."""
+    syms = jnp.minimum(idx2d.astype(jnp.int32), jnp.int32(k_eff))
+    g = idx2d.shape[0]
+    fc2d = jnp.broadcast_to(fc, (g, k_eff + 1))
+    return encode_bytes_body(syms, fc2d, L, alphabet=k_eff + 1)
 
 
 @functools.partial(jax.jit, static_argnames=("b_bits", "stride"))
@@ -374,6 +530,14 @@ def tables_from_samples(samples: np.ndarray):
     return freqs, fcs
 
 
+def _group_spans(nblocks: int, pool) -> List[tuple]:
+    """Split ``nblocks`` into contiguous spans, one per pool worker."""
+    workers = getattr(pool, "_max_workers", 1) if pool is not None else 1
+    ngroups = max(1, min(nblocks, workers))
+    gsize = -(-nblocks // ngroups)
+    return [(s, min(s + gsize, nblocks)) for s in range(0, nblocks, gsize)]
+
+
 def compress_blocks_device(idx_dev: jax.Array, b_bits: int, nblocks: int,
                            block_elems: int,
                            pool=None) -> List[bytes]:
@@ -395,11 +559,7 @@ def compress_blocks_device(idx_dev: jax.Array, b_bits: int, nblocks: int,
     freqs, fcs = tables_from_samples(samples)
     fc_dev = jnp.asarray(fcs)
 
-    workers = getattr(pool, "_max_workers", 1) if pool is not None else 1
-    ngroups = max(1, min(nblocks, workers))
-    gsize = -(-nblocks // ngroups)
-    spans = [(s, min(s + gsize, nblocks))
-             for s in range(0, nblocks, gsize)]
+    spans = _group_spans(nblocks, pool)
 
     def encode_span(span) -> List[bytes]:
         g0, g1 = span
@@ -427,10 +587,364 @@ def compress_blocks_device(idx_dev: jax.Array, b_bits: int, nblocks: int,
     return [b for part in parts for b in part]
 
 
+def compress_blocks_device_symbols(idx_dev: jax.Array, b_bits: int,
+                                   k_eff: int, nblocks: int,
+                                   block_elems: int,
+                                   counts_ranks: np.ndarray,
+                                   pool=None) -> List[bytes]:
+    """Symbol-level device entropy stage (v2 blobs): code the pre-pack
+    B-bit indices directly over the dense {rank, marker} alphabet.  The
+    analyze stage's exact global histogram ``counts_ranks`` supplies one
+    shared frequency table for every block -- no strided sample pass, no
+    bit-pack.  Byte-identical to the host ``compress_symbols`` oracle by
+    construction."""
+    be = block_elems
+    nbytes = be * b_bits // 8
+    freq = symbol_freq(np.asarray(counts_ranks), k_eff, nblocks * be)
+    fc_dev = jnp.asarray(pack_fc(freq))
+    L = lanes_for(be)
+    idx2d = idx_dev.reshape(nblocks, be)
+    spans = _group_spans(nblocks, pool)
+
+    def encode_span(span) -> List[bytes]:
+        g0, g1 = span
+        st, vals, masks = encode_sym_group(idx2d[g0:g1], fc_dev, k_eff, L)
+        st = np.asarray(st)
+        vals = np.asarray(vals)
+        masks = np.asarray(masks)
+        blobs = []
+        for k in range(g1 - g0):
+            def raw_bytes(k=k):
+                idx_h = np.asarray(idx2d[g0 + k]).astype(np.int64)
+                from repro.core.packing import pack_indices_np
+                return pack_indices_np(idx_h, b_bits).tobytes()[:nbytes]
+
+            blobs.append(assemble_symbol_blob(be, b_bits, freq, st[k],
+                                              vals[k][masks[k]],
+                                              raw_bytes=raw_bytes))
+        return blobs
+
+    if pool is not None and len(spans) > 1:
+        parts = list(pool.map(encode_span, spans))
+    else:
+        parts = [encode_span(s) for s in spans]
+    return [b for part in parts for b in part]
+
+
+# ------------------------------------------------- device decode lowering
+
+def bytes_to_words(byts: jax.Array) -> jax.Array:
+    """(..., 4w) u8 -> (..., w) u32 little-endian words (inverse of
+    ``words_to_bytes``)."""
+    b4 = byts.reshape(*byts.shape[:-1], -1, 4).astype(jnp.uint32)
+    return (b4[..., 0] | (b4[..., 1] << jnp.uint32(8))
+            | (b4[..., 2] << jnp.uint32(16))
+            | (b4[..., 3] << jnp.uint32(24)))
+
+
+def unpack_words(words2d: jax.Array, b_bits: int, be: int) -> jax.Array:
+    """(nb, be*b/32) u32 packed words -> (nb, be) int32 indices (inverse
+    of ``pack_words``; same static 32-symbol unroll run backwards)."""
+    nb = words2d.shape[0]
+    g = words2d.reshape(nb, -1, b_bits)       # word groups of 32 symbols
+    maskv = jnp.uint32((1 << b_bits) - 1)
+    cols = []
+    for j in range(32):                       # static unroll
+        bit0 = j * b_bits
+        w, s = divmod(bit0, 32)
+        v = g[:, :, w] >> jnp.uint32(s)
+        if s + b_bits > 32:                   # spilled into the next word
+            v = v | (g[:, :, w + 1] << jnp.uint32(32 - s))
+        cols.append(v & maskv)
+    idx = jnp.stack(cols, axis=-1).reshape(nb, -1)
+    return idx[:, :be].astype(jnp.int32)
+
+
+def _decode_tables(freq: np.ndarray):
+    """Per-slot decode tables for one frequency table: a fused u32
+    ``freq | offset<<12 | symbol<<24`` (alphabets <= 256) or the fused
+    freq/offset word plus a separate int32 slot->symbol table (wider
+    symbol-level alphabets).  Raises ValueError on corrupt tables, like
+    ``decode_np``."""
+    f64 = np.asarray(freq, np.int64)
+    A = f64.size
+    slot2sym = np.repeat(np.arange(A, dtype=np.int64), f64)
+    if A < 2 or slot2sym.size != M:
+        raise ValueError("corrupt rANS table: frequencies sum != 2^scale")
+    f_slot = f64[slot2sym].astype(np.uint32)
+    cum = np.concatenate([[0], np.cumsum(f64)[:-1]])
+    off = (np.arange(M, dtype=np.int64) - cum[slot2sym]).astype(np.uint32)
+    fused = f_slot | (off << np.uint32(12))
+    if A <= 256:
+        return fused | (slot2sym.astype(np.uint32) << np.uint32(24)), None
+    return fused, slot2sym.astype(np.int32)
+
+
+def decode_scan_body(dec: jax.Array, sym_tab, states: jax.Array,
+                     stream: jax.Array, m: int, L: int):
+    """Forward L-lane rANS decode of a block group (jit- and
+    shard_map-safe).  ``dec`` is (nb, M) fused decode tables, ``states``
+    (nb, L) u32, ``stream`` (nb, S) u16 zero-padded to the group max.
+    Each step advances every lane of every block and ingests the 0-or-1
+    u16 renorm emissions in lane order via an in-block inclusive prefix
+    sum over the per-block stream pointer -- the exact replay of
+    ``encode_bytes_body``'s emission schedule, so the integer trajectory
+    matches ``decode_np`` lane for lane.  Returns (syms (nb, m*L),
+    final states (nb, L) u32, final pointers (nb,) i32)."""
+    nb = dec.shape[0]
+    S = stream.shape[1]
+    base = jnp.repeat(jnp.arange(nb, dtype=jnp.int32), L) * M
+    dec_flat = dec.reshape(-1)
+    sym_flat = None if sym_tab is None else sym_tab.reshape(-1)
+
+    def body(carry, _):
+        x, ptr = carry
+        slot = (x & jnp.uint32(M - 1)).astype(jnp.int32)
+        t = dec_flat[base + slot]
+        f = t & jnp.uint32(0xFFF)
+        off = (t >> jnp.uint32(12)) & jnp.uint32(0xFFF)
+        if sym_flat is None:
+            sym = (t >> jnp.uint32(24)).astype(jnp.uint8)
+        else:
+            sym = sym_flat[base + slot]
+        x = f * (x >> jnp.uint32(SCALE_BITS)) + off
+        need = (x < jnp.uint32(STATE_LO)).reshape(nb, L)
+        inc = jnp.cumsum(need.astype(jnp.int32), axis=1)
+        pos = jnp.clip(ptr[:, None] + inc - 1, 0, S - 1)
+        nxt = jnp.take_along_axis(stream, pos, axis=1).astype(jnp.uint32)
+        x = jnp.where(need.reshape(-1),
+                      (x << jnp.uint32(16)) | nxt.reshape(-1), x)
+        ptr = ptr + inc[:, -1]
+        return (x, ptr), sym
+
+    x0 = states.reshape(-1)
+    ptr0 = jnp.zeros((nb,), jnp.int32)
+    (xf, ptrf), syms = jax.lax.scan(body, (x0, ptr0), None, length=m)
+    syms = jnp.transpose(syms.reshape(m, nb, L),
+                         (1, 0, 2)).reshape(nb, m * L)
+    return syms, xf.reshape(nb, L), ptrf
+
+
+@functools.partial(jax.jit, static_argnames=("m", "L", "b_bits", "be"))
+def decode_idx_group_packed(dec: jax.Array, states: jax.Array,
+                            stream: jax.Array, m: int, L: int,
+                            b_bits: int, be: int):
+    """v1 group decode fused with unpack: rANS bytes -> packed words ->
+    (g, be) int32 indices, all on device."""
+    syms, xf, ptrf = decode_scan_body(dec, None, states, stream, m, L)
+    nbytes = be * b_bits // 8
+    idx = unpack_words(bytes_to_words(syms[:, :nbytes]), b_bits, be)
+    return idx, xf, ptrf
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "L", "n_sym", "b_bits", "be"))
+def decode_idx_group_syms(dec: jax.Array, sym_tab, states: jax.Array,
+                          stream: jax.Array, m: int, L: int, n_sym: int,
+                          b_bits: int, be: int):
+    """v2 group decode: rANS symbol ids -> B-bit index values (marker id
+    ``n_sym - 1`` maps back to the B-bit marker); no unpack stage."""
+    syms, xf, ptrf = decode_scan_body(dec, sym_tab, states, stream, m, L)
+    syms = syms[:, :be].astype(jnp.int32)
+    marker = jnp.int32((1 << b_bits) - 1)
+    idx = jnp.where(syms >= jnp.int32(n_sym - 1), marker, syms)
+    return idx, xf, ptrf
+
+
+@functools.partial(jax.jit, static_argnames=("m", "L", "nbytes"))
+def decode_bytes_group(dec: jax.Array, states: jax.Array,
+                       stream: jax.Array, m: int, L: int, nbytes: int):
+    """v1 group decode to raw bytes (anchor payloads)."""
+    syms, xf, ptrf = decode_scan_body(dec, None, states, stream, m, L)
+    return syms[:, :nbytes], xf, ptrf
+
+
+@functools.partial(jax.jit, static_argnames=("b_bits", "be"))
+def unpack_group(byts: jax.Array, b_bits: int, be: int) -> jax.Array:
+    """(g, nbytes) u8 packed payloads -> (g, be) int32 indices."""
+    return unpack_words(bytes_to_words(byts), b_bits, be)
+
+
+def _check_decoded(xf: np.ndarray, ptrf: np.ndarray,
+                   n_emit: np.ndarray) -> None:
+    """Host-side stream-integrity check of a decoded group (forces the
+    device computation; mirrors ``decode_np`` validation)."""
+    if (np.asarray(ptrf, np.int64) != np.asarray(n_emit, np.int64)).any() \
+            or (np.asarray(xf) != np.uint32(STATE_LO)).any():
+        raise ValueError("corrupt rANS blob: stream not consumed cleanly")
+
+
+def _batch_group(parsed: List[dict]):
+    """Stack a homogeneous parsed-blob group for one jitted decode call:
+    fused decode tables (cached per distinct frequency table), states,
+    zero-padded stream matrix and per-block emission counts."""
+    g = len(parsed)
+    smax = max(1, max(p["stream"].size for p in parsed))
+    states = np.stack([p["states"] for p in parsed]).astype(np.uint32)
+    stream = np.zeros((g, smax), np.uint16)
+    dec = np.empty((g, M), np.uint32)
+    sym = None
+    cache: dict = {}
+    for i, p in enumerate(parsed):
+        stream[i, :p["stream"].size] = p["stream"]
+        key = p["freq"].tobytes()
+        if key not in cache:
+            cache[key] = _decode_tables(p["freq"])
+        d, s = cache[key]
+        dec[i] = d
+        if s is not None:
+            if sym is None:
+                sym = np.empty((g, M), np.int32)
+            sym[i] = s
+    n_emit = np.array([p["stream"].size for p in parsed], np.int64)
+    return dec, sym, states, stream, n_emit
+
+
+def decode_blocks_device(blobs: Sequence[bytes], b_bits: int,
+                         block_elems: int, pool=None) -> jax.Array:
+    """Device entropy decode of a step's index blocks: self-describing
+    blobs (v0/v1/v2, freely mixed) -> (nblocks, block_elems) int32 index
+    values on device.  Blobs are parsed and grouped by shape on host,
+    each group decodes through one jitted scan executable, and groups are
+    span-split over ``pool`` threads exactly like
+    ``compress_blocks_device``.  Raises ValueError on corrupt blobs,
+    matching the host ``decompress`` semantics."""
+    be = block_elems
+    nblocks = len(blobs)
+    nbytes = be * b_bits // 8
+    groups: dict = {}
+    for i, blob in enumerate(blobs):
+        v = blob_version(blob)
+        if v == _V_RAW:
+            n, _ = _RAW_HDR.unpack_from(blob)
+            payload = blob[_RAW_HDR.size:_RAW_HDR.size + n]
+            if n != nbytes or len(payload) != n:
+                raise ValueError("corrupt raw blob: payload size mismatch")
+            key, rec = ("raw",), {"payload": payload}
+        elif v == _V_RANS:
+            n, L, freq, states, stream = _parse_v1(blob)
+            if n != nbytes:
+                raise ValueError("rANS blob does not match block shape")
+            key = ("v1", L)
+            rec = {"freq": freq, "states": states, "stream": stream}
+        elif v == _V_SYM:
+            n, bb, L, freq, states, stream = _parse_v2(blob)
+            if n != be or bb != b_bits:
+                raise ValueError("rANS blob does not match block shape")
+            key = ("v2", L, freq.size)
+            rec = {"freq": freq, "states": states, "stream": stream}
+        else:
+            raise ValueError(f"unknown rANS blob version {v}")
+        groups.setdefault(key, ([], []))
+        groups[key][0].append(i)
+        groups[key][1].append(rec)
+
+    tasks = []
+    for key, (idxs, parsed) in groups.items():
+        for g0, g1 in _group_spans(len(idxs), pool):
+            tasks.append((key, idxs[g0:g1], parsed[g0:g1]))
+
+    def run(task):
+        key, idxs, parsed = task
+        if key[0] == "raw":
+            byts = np.stack([np.frombuffer(p["payload"], np.uint8)
+                             for p in parsed])
+            return idxs, unpack_group(jnp.asarray(byts), b_bits, be)
+        dec, sym, states, stream, n_emit = _batch_group(parsed)
+        if key[0] == "v1":
+            L = key[1]
+            m = -(-nbytes // L)
+            idx, xf, ptrf = decode_idx_group_packed(
+                jnp.asarray(dec), jnp.asarray(states),
+                jnp.asarray(stream), m, L, b_bits, be)
+        else:
+            _, L, n_sym = key
+            m = -(-be // L)
+            sym_dev = None if sym is None else jnp.asarray(sym)
+            idx, xf, ptrf = decode_idx_group_syms(
+                jnp.asarray(dec), sym_dev, jnp.asarray(states),
+                jnp.asarray(stream), m, L, n_sym, b_bits, be)
+        _check_decoded(xf, ptrf, n_emit)
+        return idxs, idx
+
+    if pool is not None and len(tasks) > 1:
+        pieces = list(pool.map(run, tasks))
+    else:
+        pieces = [run(t) for t in tasks]
+
+    order = np.concatenate([np.asarray(ix, np.int64) for ix, _ in pieces])
+    arrs = [a for _, a in pieces]
+    cat = jnp.concatenate(arrs, axis=0) if len(arrs) > 1 else arrs[0]
+    perm = np.argsort(order, kind="stable")
+    if not np.array_equal(perm, np.arange(nblocks)):
+        cat = jnp.take(cat, jnp.asarray(perm), axis=0)
+    return cat
+
+
+def decode_bytes_blocks_device(blobs: Sequence[bytes],
+                               pool=None) -> jax.Array:
+    """Device entropy decode of anchor byte blocks (possibly ragged
+    lengths) -> one flat (total_bytes,) uint8 device array in block
+    order.  v0 payloads upload directly; v1 groups (keyed by exact byte
+    length and lane count) decode on device."""
+    pieces: List = [None] * len(blobs)
+    groups: dict = {}
+    for i, blob in enumerate(blobs):
+        v = blob_version(blob)
+        if v == _V_RAW:
+            n, _ = _RAW_HDR.unpack_from(blob)
+            payload = blob[_RAW_HDR.size:_RAW_HDR.size + n]
+            if len(payload) != n:
+                raise ValueError("corrupt raw blob: payload size mismatch")
+            pieces[i] = np.frombuffer(payload, np.uint8)
+        elif v == _V_RANS:
+            n, L, freq, states, stream = _parse_v1(blob)
+            groups.setdefault((n, L), ([], []))
+            groups[(n, L)][0].append(i)
+            groups[(n, L)][1].append(
+                {"freq": freq, "states": states, "stream": stream})
+        else:
+            raise ValueError(f"unknown rANS blob version {v}")
+
+    tasks = []
+    for (n, L), (idxs, parsed) in groups.items():
+        for g0, g1 in _group_spans(len(idxs), pool):
+            tasks.append((n, L, idxs[g0:g1], parsed[g0:g1]))
+
+    def run(task):
+        n, L, idxs, parsed = task
+        dec, _, states, stream, n_emit = _batch_group(parsed)
+        m = -(-n // L)
+        byts, xf, ptrf = decode_bytes_group(
+            jnp.asarray(dec), jnp.asarray(states), jnp.asarray(stream),
+            m, L, n)
+        _check_decoded(xf, ptrf, n_emit)
+        return idxs, byts
+
+    if pool is not None and len(tasks) > 1:
+        results = list(pool.map(run, tasks))
+    else:
+        results = [run(t) for t in tasks]
+    for idxs, byts in results:
+        for k, i in enumerate(idxs):
+            pieces[i] = byts[k]
+    if not pieces:
+        return jnp.zeros((0,), jnp.uint8)
+    if len(pieces) == 1:
+        return jnp.asarray(pieces[0])
+    return jnp.concatenate([jnp.asarray(p) for p in pieces])
+
+
 __all__ = ["SCALE_BITS", "M", "STATE_LO", "DEVICE_MIN_BYTES", "lanes_for",
            "sample_stride", "freq_from_counts", "freq_table", "pack_fc",
            "encode_np", "decode_np", "blob_nbytes", "assemble_blob",
-           "compress", "decompress", "words_to_bytes", "pack_words",
-           "encode_bytes_body", "encode_idx_group", "sampled_idx_bytes",
-           "sample_words", "tables_from_samples",
-           "compress_blocks_device"]
+           "blob_nbytes_sym", "assemble_symbol_blob", "symbol_freq",
+           "compress_symbols", "blob_version", "compress", "decompress",
+           "words_to_bytes", "bytes_to_words", "pack_words",
+           "unpack_words", "encode_bytes_body", "encode_idx_group",
+           "encode_sym_group", "sampled_idx_bytes", "sample_words",
+           "tables_from_samples", "compress_blocks_device",
+           "compress_blocks_device_symbols", "decode_scan_body",
+           "decode_idx_group_packed", "decode_idx_group_syms",
+           "decode_bytes_group", "unpack_group", "decode_blocks_device",
+           "decode_bytes_blocks_device"]

@@ -521,10 +521,21 @@ def moe_apply(p, x, *, cfg: ModelConfig):
               + jnp.arange(s, dtype=top_e.dtype)).reshape(B, T, ks_)
     slot_p = jnp.repeat(top_p, s, axis=-1)               # weight per slot
 
-    # position of each (token, choice) inside its slot's capacity buffer
+    # position of each (token, choice) inside its slot's capacity buffer.
+    # Capacity is granted in router-weight priority order (stable sort,
+    # ties broken by sequence position), not raw sequence order: under
+    # overflow the *lowest-weight* choices drop, and a token's fate no
+    # longer depends on how many earlier-positioned tokens happened to
+    # pick the same expert.  Drop-free batches are unaffected (every pos
+    # is < cap either way, and pos only selects within a slot's buffer).
     onehot = jax.nn.one_hot(slot_e, ES, dtype=jnp.int32)  # (B, T, ks, ES)
     flat = onehot.reshape(B, T * ks_, ES)
-    pos_in_e = jnp.cumsum(flat, axis=1) - 1
+    prio = jnp.argsort(-slot_p.astype(jnp.float32).reshape(B, T * ks_),
+                       axis=1, stable=True)              # (B, T*ks)
+    ranked = jnp.take_along_axis(flat, prio[..., None], axis=1)
+    pos_ranked = jnp.cumsum(ranked, axis=1) - 1
+    inv = jnp.argsort(prio, axis=1, stable=True)
+    pos_in_e = jnp.take_along_axis(pos_ranked, inv[..., None], axis=1)
     pos = jnp.take_along_axis(
         pos_in_e.reshape(B, T, ks_, ES),
         slot_e[..., None], axis=-1)[..., 0]              # (B, T, ks)

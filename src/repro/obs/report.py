@@ -19,7 +19,8 @@ from typing import Any, Dict, Iterable, List, Optional
 
 from repro.obs import telemetry
 
-__all__ = ["rollup", "series_rollup", "STEP_TELEMETRY_KEYS"]
+__all__ = ["rollup", "series_rollup", "STEP_TELEMETRY_KEYS",
+           "READ_TELEMETRY_KEYS"]
 
 # Canonical per-step telemetry keys (core.pipeline.finalize_step).  The
 # set is identical across drivers (single-device vs sharded) and overlap
@@ -27,6 +28,13 @@ __all__ = ["rollup", "series_rollup", "STEP_TELEMETRY_KEYS"]
 STEP_TELEMETRY_KEYS = ("analyze_s", "encode_s", "exceptions_s", "entropy_s",
                        "finalize_s", "bytes_in", "bytes_out",
                        "entropy_ratio", "codec", "device_entropy")
+
+# Canonical per-read telemetry keys (``meta["telemetry_read"]``, written
+# by ``core.compress._record_read``).  Mirrors the encode taxonomy on the
+# decode side and -- like STEP_TELEMETRY_KEYS -- is identical across the
+# single-device, sharded, and anchor read paths.
+READ_TELEMETRY_KEYS = ("entropy_s", "dequant_s", "patch_s", "fetch_s",
+                       "bytes_in", "bytes_out", "codec", "device_decode")
 
 
 def rollup(reg: Optional[telemetry.Registry] = None) -> Dict[str, Any]:

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core import NumarckParams, make_anchor
 from repro.core.chain import SessionChain
-from repro.core.compress import decode_anchor
+from repro.core.compress import decode_anchor, decode_anchor_device
 from repro.core.container import NCKReader, NCKWriter
 from repro.models.model import Model
 from repro.obs import telemetry
@@ -77,14 +77,21 @@ def snapshot_cache(cache: Any, path: str, codec: str = "zlib",
     return {"orig_bytes": orig, "comp_bytes": comp}
 
 
-def load_cache(path: str, template: Any = None) -> Any:
+def load_cache(path: str, template: Any = None,
+               device: bool = False) -> Any:
     """Inverse of snapshot_cache; with `template`, leaves are reshaped and
     cast onto the template pytree (e.g. restoring device placement via a
-    jitted identity afterwards)."""
+    jitted identity afterwards).
+
+    ``device=True`` decodes each anchor through the device route
+    (`core.compress.decode_anchor_device`): blob bytes entropy-decode on
+    the accelerator and the leaf materialises there directly -- no host
+    reconstruction + re-upload round trip.  Bit-identical to the host
+    path; leaves come back as jax Arrays instead of numpy."""
     r = NCKReader(path)
     names = json.loads(bytes(r.read_array("__names__")).decode())
-    flat = {key: decode_anchor(r.read_step(var))
-            for var, key in names.items()}
+    dec = decode_anchor_device if device else decode_anchor
+    flat = {key: dec(r.read_step(var)) for var, key in names.items()}
     if template is None:
         root: Dict = {}
         for key, arr in flat.items():
@@ -173,13 +180,15 @@ class Engine:
     def load_session(self, path: str):
         """Reload a snapshotted decode state and place it on device.
 
-        Leaves come back from the NCK container as host numpy; re-casting
-        through the recorded session template and `jax.device_put`
-        reproduces the exact avals the jitted decode executable was traced
-        with, so `resume()` streams through the cached executable without
-        a retrace (and without a per-step host->device transfer).
-        Requires one prior `generate()` on this engine (any keep_session
-        setting) to have recorded the template.
+        Leaves decode straight onto the device (`load_cache(...,
+        device=True)`: blob bytes entropy-decode on the accelerator, no
+        host reconstruction + re-upload round trip); re-casting through
+        the recorded session template and `jax.device_put` reproduces the
+        exact avals the jitted decode executable was traced with, so
+        `resume()` streams through the cached executable without a
+        retrace (and without a per-step host->device transfer).  Requires
+        one prior `generate()` on this engine (any keep_session setting)
+        to have recorded the template.
         """
         names = json.loads(bytes(
             NCKReader(path).read_array("__names__")).decode())
@@ -195,7 +204,8 @@ class Engine:
                 "once on this engine first (any keep_session setting)")
         with telemetry.span("serve.load_session", path=path):
             sess = jax.device_put(load_cache(path,
-                                             template=self._sess_template))
+                                             template=self._sess_template,
+                                             device=True))
             self._session = SessionChain(sess)
         return self.last_cache
 

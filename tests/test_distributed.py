@@ -295,6 +295,80 @@ _CHAIN_SCRIPT = textwrap.dedent("""
 """)
 
 
+_DECODE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import NumarckParams, compress_series
+    from repro.core import compress as comp
+    from repro.kernels import rans
+    from repro.distributed.pipeline import ShardedDecompressor
+
+    rans.DEVICE_MIN_BYTES = 1       # force the device decode route
+
+    # Spy: the mesh decode route must never touch the host lane decoder.
+    orig_np = rans.decode_np
+    calls = {"n": 0}
+    def spy(*a, **k):
+        calls["n"] += 1
+        return orig_np(*a, **k)
+    rans.decode_np = spy
+
+    rng = np.random.default_rng(5)
+    n = 8 * 65536                  # divisible blocks: uniform blob rows
+    base = rng.normal(1.0, 0.1, n).astype(np.float32)
+    series = [base]
+    for t in range(3):
+        nxt = (series[-1] * (1 + 5e-4 * rng.standard_normal(n))
+               ).astype(np.float32)
+        nxt[t::701] *= 40.0        # exceptions on every step
+        series.append(nxt)
+
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    for symbol in (False, True):
+        params = NumarckParams(error_bound=1e-3, codec="rans",
+                               device_entropy=True, symbol_rans=symbol,
+                               block_bytes=1 << 14)
+        steps = compress_series(series, params)
+        prev_h = prev_s = None
+        dec = ShardedDecompressor(mesh)
+        calls["n"] = 0
+        mesh_steps = 0
+        for st in steps:
+            if st.is_anchor:
+                prev_h = prev_s = comp.decode_anchor(st).reshape(st.shape)
+                continue
+            prev_h = comp.decompress_step(st, prev_h)
+            prev_s = dec.decompress(st, np.asarray(prev_s))
+            assert np.array_equal(np.asarray(prev_h).view(np.uint8),
+                                  np.asarray(prev_s).view(np.uint8))
+            rec = st.meta.get("telemetry_read")
+        if all(rans.blob_version(b) in (1, 2)
+               for st in steps[1:] for b in st.index_blocks):
+            assert len(dec._rans_fns) > 0, "mesh decode stage never ran"
+        assert calls["n"] == 0, (
+            f"device decode route hit host decode_np {calls['n']}x "
+            f"(symbol={symbol})")
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_decode_byte_identical():
+    """Mesh rANS entropy decode (v1 and v2 blob rows) must reconstruct
+    byte-identically to the single-device driver without ever calling the
+    host lane decoder."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, "-c", _DECODE_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "OK" in res.stdout
+
+
 @pytest.mark.slow
 def test_sharded_device_chain_byte_identical():
     """The mesh-resident reference chain (default) must emit blobs

@@ -274,8 +274,215 @@ def test_old_reader_rejects_v2_magic(tmp_path):
     with pytest.raises(ValueError):            # unknown magics still reject
         path3 = os.path.join(tmp_path, "bad.nck")
         with open(path3, "wb") as f:
-            f.write(b"NCK3" + b"\0" * 64)
+            f.write(b"NCK9" + b"\0" * 64)
         NCKReader(path3)
+
+
+# ------------------------------------------- device decoder byte-identity
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from(["zipf", "uniform", "single", "marker", "two"]),
+       st.integers(min_value=1, max_value=6),
+       st.sampled_from([4, 8, 12]))
+def test_device_decode_matches_host_property(kind, nblocks, b_bits):
+    """decode_blocks_device == the host decoder on adversarial payloads
+    (mixed v0/v1 groups ride the same call)."""
+    be = 4096
+    rng = np.random.default_rng(nblocks * 31 + b_bits)
+    if kind == "zipf":
+        idx = (rng.zipf(1.6, nblocks * be).astype(np.uint64)
+               % (1 << b_bits)).astype(np.int32)
+    elif kind == "uniform":
+        idx = rng.integers(0, 1 << b_bits, nblocks * be).astype(np.int32)
+    elif kind == "single":
+        idx = np.full(nblocks * be, min(3, (1 << b_bits) - 1), np.int32)
+    elif kind == "marker":
+        idx = np.full(nblocks * be, (1 << b_bits) - 1, np.int32)
+    else:
+        idx = rng.choice(np.array([0, (1 << b_bits) - 1], np.int32),
+                         nblocks * be)
+    blobs = rans.compress_blocks_device(jnp.asarray(idx), b_bits, nblocks,
+                                        be)
+    got = np.asarray(rans.decode_blocks_device(blobs, b_bits, be)
+                     ).reshape(-1)
+    nbytes = be * b_bits // 8
+    for k, blob in enumerate(blobs):
+        raw = rans.decompress(blob)
+        want = packing.unpack_indices_np(np.frombuffer(raw, np.uint8),
+                                         be, b_bits)
+        np.testing.assert_array_equal(got[k * be:(k + 1) * be], want, k)
+    np.testing.assert_array_equal(got, idx)
+
+
+def test_device_decode_lane_boundaries():
+    """Block sizes straddling every lanes_for threshold round-trip
+    through the device decoder."""
+    b_bits = 8
+    rng = np.random.default_rng(41)
+    for be in (32, 4096, 8 << 10, 64 << 10, 512 << 10):
+        idx = (rng.zipf(1.6, 2 * be).astype(np.uint64) % 251
+               ).astype(np.int32)
+        blobs = rans.compress_blocks_device(jnp.asarray(idx), b_bits, 2,
+                                            be)
+        got = np.asarray(rans.decode_blocks_device(blobs, b_bits, be)
+                         ).reshape(-1)
+        np.testing.assert_array_equal(got, idx, be)
+
+
+def test_device_decode_rejects_corrupt_blob():
+    b_bits, be = 8, 8192
+    rng = np.random.default_rng(43)
+    idx = (rng.zipf(1.6, be).astype(np.uint64) % 251).astype(np.int32)
+    blobs = rans.compress_blocks_device(jnp.asarray(idx), b_bits, 1, be)
+    assert rans.blob_version(blobs[0]) == 1      # a real coded blob
+    bad = bytearray(blobs[0])
+    bad[-1] ^= 0xFF
+    with pytest.raises(ValueError):
+        rans.decode_blocks_device([bytes(bad)], b_bits, be)
+
+
+def test_device_anchor_decode_matches_join():
+    """decode_bytes_blocks_device: ragged anchor blobs -> one flat byte
+    stream identical to joining the host-decoded pieces."""
+    rng = np.random.default_rng(47)
+    raws = [(rng.zipf(1.6, n).astype(np.uint64) % 251).astype(np.uint8)
+            .tobytes() for n in (100_000, 70_001, 256)]
+    raws.append(rng.integers(0, 256, 50_000).astype(np.uint8).tobytes())
+    blobs = [rans.compress(r) for r in raws]
+    flat = np.asarray(rans.decode_bytes_blocks_device(blobs))
+    assert flat.tobytes() == b"".join(raws)
+
+
+# ----------------------------------------------- symbol-level rANS (NCK3)
+
+def test_symbol_blobs_match_host_oracle():
+    """compress_blocks_device_symbols == host compress_symbols per block,
+    and both decode back exactly (device and host decoders)."""
+    b_bits, be, nblocks, k_eff = 9, 4096, 4, 300
+    marker = (1 << b_bits) - 1
+    rng = np.random.default_rng(53)
+    idx = (rng.zipf(1.3, nblocks * be).astype(np.uint64) % k_eff
+           ).astype(np.int32)
+    idx[::41] = marker
+    counts = np.bincount(np.minimum(idx, k_eff), minlength=k_eff + 1)
+    blobs = rans.compress_blocks_device_symbols(
+        jnp.asarray(idx), b_bits, k_eff, nblocks, be,
+        counts[:k_eff].astype(np.int64))
+    freq = rans.symbol_freq(counts[:k_eff].astype(np.int64), k_eff,
+                            nblocks * be)
+    for k in range(nblocks):
+        want = rans.compress_symbols(idx[k * be:(k + 1) * be], b_bits,
+                                     freq)
+        assert blobs[k] == want, k
+        # host decode returns packed bytes -> unpack must equal input
+        raw = rans.decompress(blobs[k])
+        np.testing.assert_array_equal(
+            packing.unpack_indices_np(np.frombuffer(raw, np.uint8), be,
+                                      b_bits),
+            idx[k * be:(k + 1) * be])
+    got = np.asarray(rans.decode_blocks_device(blobs, b_bits, be)
+                     ).reshape(-1)
+    np.testing.assert_array_equal(got, idx)
+
+
+def test_symbol_rans_series_round_trip(monkeypatch):
+    """symbol_rans=True end to end: bit-identical reconstruction vs the
+    byte-level rans chain, and v2 blobs actually in the steps."""
+    monkeypatch.setattr(rans, "DEVICE_MIN_BYTES", 0)
+    series = _series((300_000,), steps=3)
+    p_s = NumarckParams(error_bound=1e-3, codec="rans", symbol_rans=True,
+                        block_bytes=1 << 14)
+    p_b = NumarckParams(error_bound=1e-3, codec="rans", block_bytes=1 << 14)
+    steps_s = compress_series(series, p_s)
+    assert any(rans.blob_version(b) == 2
+               for st in steps_s if not st.is_anchor
+               for b in st.index_blocks)
+    rec_s = decompress_series(steps_s)
+    rec_b = decompress_series(compress_series(series, p_b))
+    for a, b in zip(rec_s, rec_b):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_symbol_rans_container_magic_matrix(monkeypatch, tmp_path):
+    """NCK1 (uniform codec) / NCK2 (per-block codecs) / NCK3 (symbol
+    blobs) stamping, and NCK3 files round-trip through reader + partial
+    reads."""
+    monkeypatch.setattr(rans, "DEVICE_MIN_BYTES", 0)
+    series = _series((200_000,), steps=3)
+    steps = compress_series(
+        series, NumarckParams(error_bound=1e-3, codec="rans",
+                              symbol_rans=True, block_bytes=1 << 14))
+    path = os.path.join(tmp_path, "s.nck")
+    TemporalArchive.write(path, "v", steps)
+    with open(path, "rb") as f:
+        assert f.read(4) == b"NCK3"
+    r = NCKReader(path)
+    assert r.format_version == 3
+    full = decompress_series(steps)
+    arch = TemporalArchive(path)
+    for it in range(len(steps)):
+        got = arch.read_full("v", it)
+        np.testing.assert_array_equal(got, full[it])
+        sl = arch.read_range("v", it, 12_345, 99_876)
+        np.testing.assert_array_equal(
+            sl, full[it].reshape(-1)[12_345:99_876])
+    # byte-level rans files never carry v2 blobs -> stay NCK1
+    steps_b = compress_series(
+        series, NumarckParams(error_bound=1e-3, codec="rans",
+                              block_bytes=1 << 14))
+    path_b = os.path.join(tmp_path, "b.nck")
+    TemporalArchive.write(path_b, "v", steps_b)
+    with open(path_b, "rb") as f:
+        assert f.read(4) == b"NCK1"
+
+
+# ------------------------------------------------- device decode routing
+
+def test_decompress_device_route_bit_identical(monkeypatch):
+    """Forcing the device decode route changes no byte of the output, and
+    the host lane decoder is never called on it (spy)."""
+    series = _series((400_000,), steps=3)
+    p = NumarckParams(error_bound=1e-3, codec="rans", block_bytes=1 << 16)
+    monkeypatch.setattr(rans, "DEVICE_MIN_BYTES", 0)
+    steps = compress_series(series, p)
+    host_recs = decompress_series(steps)     # device route (forced)
+    calls = {"n": 0}
+    orig = rans.decode_np
+
+    def spy(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(rans, "decode_np", spy)
+    dev_recs = decompress_series(steps)
+    assert calls["n"] == 0, "device route called host decode_np"
+    monkeypatch.setattr(rans, "DEVICE_MIN_BYTES", 1 << 62)  # force host
+    host_only = decompress_series(steps)
+    assert calls["n"] > 0                    # host route does use it
+    for a, b, c in zip(host_recs, dev_recs, host_only):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+
+
+def test_read_telemetry_record_keys(monkeypatch):
+    """Every decompressed step carries the canonical READ_TELEMETRY_KEYS
+    record under an active capture, on both routes."""
+    from repro.obs import report, telemetry
+    series = _series((300_000,), steps=3)
+    p = NumarckParams(error_bound=1e-3, codec="rans", block_bytes=1 << 16)
+    for force_device in (True, False):
+        monkeypatch.setattr(rans, "DEVICE_MIN_BYTES",
+                            0 if force_device else 1 << 62)
+        steps = compress_series(series, p)
+        with telemetry.capture():
+            decompress_series(steps)
+        for st in steps:
+            if st.is_anchor:
+                continue
+            rec = st.meta.get("telemetry_read")
+            assert rec is not None
+            assert tuple(rec) == report.READ_TELEMETRY_KEYS
+            assert rec["device_decode"] is force_device
 
 
 # -------------------------------------------------- satellite: exceptions
