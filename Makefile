@@ -1,8 +1,22 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dist bench-entropy bench-entropy-smoke \
+.PHONY: test test-fast test-dist lint bench-entropy bench-entropy-smoke \
 	bench-chain bench bench-all bench-all-smoke bench-check
+
+# Static analysis: repro-lint (the five AST invariant passes diffed
+# against repro-lint.baseline.json -- see docs/static_analysis.md) plus
+# the ruff subset configured in pyproject.toml.  ruff is pinned in
+# requirements-dev.txt; containers without it skip that half gracefully
+# (CI always installs it, so the zero-findings gate still holds).
+lint:
+	$(PY) -m repro.analysis
+	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
+	  $(PY) -m ruff check src tests benchmarks; \
+	else \
+	  echo "ruff not installed; skipping style gate" \
+	       "(pip install -r requirements-dev.txt)"; \
+	fi
 
 # Tier-1 verify (full suite).
 test:

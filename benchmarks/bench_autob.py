@@ -8,8 +8,6 @@ auto-picked B is smaller than the CR-optimal one, while on ASR-like data
 (ZLIB ratio ~1.3) auto-B lands near the optimum."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import Row, timeit
 from repro.core import NumarckParams, compress_step
 from repro.data.temporal import generate_series

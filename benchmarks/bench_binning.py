@@ -6,7 +6,6 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Row, timeit
-from repro.core import NumarckParams
 from repro.core import binning, dp_oracle, ratios
 from repro.data.temporal import generate_series
 
@@ -28,13 +27,11 @@ def run() -> list:
         # paper: points with |ratio| < E excluded from the DP comparison
         rv = rv[np.abs(rv) >= E]
         k = (1 << c["B"]) - 1
-        n = rv.size
         max_bins = 1 << 16
 
         lo, hi = ratios.ratio_range(r, valid)
         dlo, w = ratios.histogram_domain(lo, hi, E, max_bins)
         ids, ok = ratios.candidate_bin_ids(r, valid, dlo, w, max_bins)
-        sel = np.abs(np.asarray(r)[np.asarray(valid)]) >= E
 
         # ---- DP oracle ---------------------------------------------------
         sub = rv if rv.size <= 200_000 else np.random.default_rng(0).choice(

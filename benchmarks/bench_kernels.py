@@ -4,7 +4,6 @@ tiling was designed for)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row, timeit

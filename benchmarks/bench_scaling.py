@@ -21,8 +21,8 @@ import zlib
 import numpy as np
 
 from benchmarks.common import Row, timeit
-from repro.core import NumarckParams, compress_step
-from repro.core import binning, blocks, packing, ratios, select_b
+from repro.core import NumarckParams
+from repro.core import binning, packing, ratios
 from repro.data.temporal import generate_series
 
 # collective model: latency-bandwidth ring allreduce over p members

@@ -14,15 +14,20 @@ SS Roofline for the 40 (arch x shape) cells is a separate reader
 from __future__ import annotations
 
 import argparse
+import importlib.util
 import os
 import sys
 
 # Runnable as `python benchmarks/run.py` from the repo root: put the root
-# (for `benchmarks.*`) and src (for `repro.*`) on the path.
+# (for `benchmarks.*`) and src (for `repro.*`) on the path -- but only
+# when the packages aren't already importable (installed wheel, or
+# PYTHONPATH=src), so an installed `repro` isn't shadowed by the tree.
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-for _p in (_ROOT, os.path.join(_ROOT, "src")):
-    if _p not in sys.path:
-        sys.path.insert(0, _p)
+if (importlib.util.find_spec("repro") is None
+        or importlib.util.find_spec("benchmarks") is None):
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
 
 
 def bench_all(out_dir: str, smoke: bool = False) -> int:

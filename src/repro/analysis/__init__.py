@@ -1,0 +1,32 @@
+"""repro-lint: project-specific static analysis for the pipeline's
+cross-cutting contracts.
+
+The pipeline's correctness and performance rest on invariants that span
+modules and that generic linters cannot see: device-resident paths must
+not host-sync (PR 4/5/7), ``jax.jit``/``shard_map`` callables must come
+from keyed caches so temporal series trace once (a retrace storm is a
+silent 10x regression), the overlap/entropy concurrency machinery has a
+lock and labelling discipline (PR 3/6), the NCK container / rANS blob
+format matrix must stay closed (PR 5/7), and float64 must never reach a
+device path without an x64 guard (PR 4).  ``repro.analysis`` encodes each
+of those contracts as an AST pass over ``src/repro``:
+
+  * :mod:`repro.analysis.core` -- shared source model: parsed AST,
+    qualified function scopes, ``# repro-lint: disable=<rule>`` inline
+    suppressions.
+  * :mod:`repro.analysis.registry` -- the pass-plugin registry; passes
+    self-register at import.
+  * :mod:`repro.analysis.baseline` -- committed-baseline handling: CI
+    fails only on *new* violations (line-number-free fingerprints).
+  * :mod:`repro.analysis.passes` -- the five shipped passes (see
+    ``docs/static_analysis.md`` for the rule catalogue).
+  * :mod:`repro.analysis.cli` -- ``python -m repro.analysis`` /
+    ``repro-lint`` entry point (``make lint``).
+"""
+from repro.analysis.core import (LintPass, Project, SourceFile, Violation,
+                                 device_resident, load_project)
+from repro.analysis.registry import all_passes, get_pass, register_pass
+
+__all__ = ["LintPass", "Project", "SourceFile", "Violation",
+           "device_resident", "load_project", "all_passes", "get_pass",
+           "register_pass"]

@@ -1,0 +1,94 @@
+"""Pass: dtype-hazard.
+
+The pipeline runs with jax's default x64-disabled config: a ``float64``
+/ ``int64`` literal dtype reaching a jitted device path is silently
+downcast (changing quantization bin edges and therefore *bytes*, a
+byte-identity break that only shows up when someone flips
+``jax_enable_x64``), or worse, forces an f64 constant onto an
+accelerator that emulates it.  This pass flags 64-bit dtype requests
+inside device-reachable functions -- device-resident registry names plus
+any function carrying a ``jax.jit``/``partial(jax.jit, ...)`` decorator:
+
+  * ``jnp.float64`` / ``jnp.int64`` / ``np.float64`` attribute uses
+  * ``dtype="float64"`` / ``.astype("int64")`` string dtypes
+  * ``jnp.asarray(x, dtype=np.float64)``-style keyword requests
+
+unless the function (or the statement) is guarded by an x64-awareness
+check (a test mentioning ``jax_enable_x64`` / ``x64_enabled``).  Host-side
+float64 staging (e.g. ``np.float64`` accumulators in pure-numpy paths)
+is untouched -- only device-reachable scopes are scanned.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Set
+
+from repro.analysis.core import LintPass, SourceFile, dotted_name, names_in
+from repro.analysis.registry import register_pass
+from repro.analysis.passes.host_sync import is_device_resident
+
+_WIDE_ATTRS: Set[str] = {
+    "jnp.float64", "jnp.int64", "jnp.uint64", "jnp.complex128",
+    "np.float64", "np.int64", "numpy.float64", "numpy.int64",
+    "jax.numpy.float64", "jax.numpy.int64",
+}
+_WIDE_STRINGS: Set[str] = {"float64", "int64", "uint64", "complex128"}
+_X64_GUARDS = {"jax_enable_x64", "x64_enabled", "enable_x64"}
+
+_JIT_DECOS = {"jax.jit", "jit", "pjit", "jax.pjit", "shard_map"}
+
+
+def _is_jitted(decorators) -> bool:
+    return any(d.rsplit(".", 1)[-1] in {n.rsplit(".", 1)[-1]
+                                        for n in _JIT_DECOS}
+               or d in _JIT_DECOS for d in decorators)
+
+
+def _x64_guarded_lines(fn_node: ast.AST) -> Set[int]:
+    out: Set[int] = set()
+    for node in ast.walk(fn_node):
+        if not isinstance(node, ast.If):
+            continue
+        tails = {n.rsplit(".", 1)[-1] for n in names_in(node.test)}
+        consts = {c.value for c in ast.walk(node.test)
+                  if isinstance(c, ast.Constant) and isinstance(c.value, str)}
+        if tails & _X64_GUARDS or consts & _X64_GUARDS:
+            for stmt in node.body + node.orelse:
+                lo = stmt.lineno
+                hi = getattr(stmt, "end_lineno", lo) or lo
+                out.update(range(lo, hi + 1))
+    return out
+
+
+@register_pass
+class DtypeHazardPass(LintPass):
+    rule = "dtype-hazard"
+    description = ("no unguarded 64-bit dtypes in device-reachable "
+                   "functions (x64 is off; silent downcasts change bytes)")
+
+    def check_file(self, sf: SourceFile) -> None:
+        for fi in sf.functions:
+            if not (is_device_resident(fi.name, fi.decorators)
+                    or _is_jitted(fi.decorators)):
+                continue
+            guarded = _x64_guarded_lines(fi.node)
+            for node in ast.walk(fi.node):
+                line = getattr(node, "lineno", None)
+                if line is None or line in guarded:
+                    continue
+                if sf.scope_at(line).rsplit(".", 1)[-1] != fi.name:
+                    continue
+                if isinstance(node, ast.Attribute):
+                    dn = dotted_name(node)
+                    if dn in _WIDE_ATTRS:
+                        self.emit(sf, line,
+                                  f"64-bit dtype `{dn}` in device-reachable "
+                                  f"function `{fi.name}` without an x64 "
+                                  "guard")
+                elif isinstance(node, ast.Constant) \
+                        and isinstance(node.value, str) \
+                        and node.value in _WIDE_STRINGS:
+                    self.emit(sf, line,
+                              f'64-bit dtype string "{node.value}" in '
+                              f"device-reachable function `{fi.name}` "
+                              "without an x64 guard")

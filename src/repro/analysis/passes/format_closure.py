@@ -1,0 +1,271 @@
+"""Pass: format-closure.
+
+The on-disk format is a closed matrix (PR 5/7): every NCK container
+magic has a reader branch and old readers reject newer files cleanly;
+every rANS blob version is written and parsed from one ``_V_*``
+definition; and the per-step / per-read telemetry records carry exactly
+the canonical key sets so trajectory tooling can diff rollups
+structurally.  A new magic, blob version, or telemetry key that lands in
+only one of its places is a corrupt-file or broken-dashboard bug waiting
+for the next reader.  Sub-checks:
+
+  1. **Magic matrix** (``core/container.py``): the ``_MAGIC_V*``
+     constants, the ``_MAGICS`` reader-accept dict and the writer's
+     version->magic map must cover exactly the same set, and every magic
+     byte-string must appear in at least one test (the NCK1/NCK2/NCK3
+     compat matrix is a tested contract, not an implementation detail).
+
+  2. **Blob versions** (``kernels/rans.py``): every ``_V_*`` constant
+     must appear in both a writer context (``*.pack(...)`` argument) and
+     a reader comparison (``version == _V_X``); header pack calls must
+     pass the named constant, never an integer literal.
+
+  3. **Telemetry key canon**: dict literals stored into
+     ``...["telemetry"]`` / ``...["telemetry_read"]`` must use exactly
+     the canonical keys (``obs.report.STEP_TELEMETRY_KEYS`` /
+     ``READ_TELEMETRY_KEYS``, parsed from their one definition) --
+     finalize-stage writes match exactly; driver-stage partial records
+     (folded by finalize) may use the canonical subset plus
+     ``device_entropy_s``; single-key stores must name a canonical key.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import LintPass, Project, SourceFile, call_name
+from repro.analysis.registry import register_pass
+
+# Driver-stage partial record keys that finalize_step folds into the
+# canonical record (see core/pipeline.py).
+_DRIVER_EXTRA_KEYS = {"device_entropy_s"}
+
+
+def _const_str_keys(d: ast.Dict) -> Optional[List[str]]:
+    keys = []
+    for k in d.keys:
+        if isinstance(k, ast.Constant) and isinstance(k.value, str):
+            keys.append(k.value)
+        else:
+            return None
+    return keys
+
+
+def _tuple_of_strs(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        vals = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                vals.append(e.value)
+            else:
+                return None
+        return tuple(vals)
+    return None
+
+
+def _module_str_assigns(sf: SourceFile) -> Dict[str, bytes]:
+    """Module-level ``NAME = b"..."`` / ``NAME = "..."`` assignments."""
+    out: Dict[str, bytes] = {}
+    for node in sf.tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Constant) \
+                and isinstance(node.value.value, (bytes, str)):
+            name = node.targets[0].id
+            v = node.value.value
+            out[name] = v if isinstance(v, bytes) else v.encode()
+    return out
+
+
+@register_pass
+class FormatClosurePass(LintPass):
+    rule = "format-closure"
+    description = ("container magics, blob versions and telemetry key "
+                   "sets stay closed across writer/reader/tests")
+
+    def check_project(self, project: Project) -> None:
+        canon = self._load_canon(project)
+        for sf in project.files:
+            self._check_telemetry_writes(sf, canon)
+        csf = project.by_rel("src/repro/core/container.py")
+        if csf is not None:
+            self._check_magics(csf, project)
+        rsf = project.by_rel("src/repro/kernels/rans.py")
+        if rsf is not None:
+            self._check_blob_versions(rsf)
+
+    # ----------------------------------------------------- canon loading
+    @staticmethod
+    def _load_canon(project: Project) -> Dict[str, Tuple[str, ...]]:
+        canon: Dict[str, Tuple[str, ...]] = {}
+        rsf = project.by_rel("src/repro/obs/report.py")
+        if rsf is None:
+            return canon
+        for node in rsf.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                name = node.targets[0].id
+                if name in ("STEP_TELEMETRY_KEYS", "READ_TELEMETRY_KEYS"):
+                    vals = _tuple_of_strs(node.value)
+                    if vals:
+                        canon[name] = vals
+        return canon
+
+    # ----------------------------------------------- telemetry key canon
+    def _check_telemetry_writes(self, sf: SourceFile,
+                                canon: Dict[str, Tuple[str, ...]]) -> None:
+        step_keys = set(canon.get("STEP_TELEMETRY_KEYS", ()))
+        read_keys = set(canon.get("READ_TELEMETRY_KEYS", ()))
+        if not step_keys or not read_keys:
+            return
+        # Dict literals assigned to local names, for one-hop resolution
+        # (the `rec = {...}; meta["telemetry_read"] = rec` pattern).
+        local_dicts: Dict[Tuple[str, str], ast.Dict] = {}
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Dict):
+                local_dicts[(sf.scope_at(node.lineno),
+                             node.targets[0].id)] = node.value
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            for tgt in node.targets:
+                which = self._telemetry_slot(tgt)
+                if which is None:
+                    continue
+                slot, sub_key = which
+                exact = slot == "telemetry_read" or sf.scope_at(
+                    node.lineno).rsplit(".", 1)[-1].startswith("finalize")
+                allowed = (read_keys if slot == "telemetry_read"
+                           else step_keys)
+                if sub_key is not None:
+                    # x["telemetry_read"]["fetch_s"] = ... single-key store
+                    if sub_key not in allowed:
+                        self.emit(sf, node.lineno,
+                                  f'key "{sub_key}" written to '
+                                  f'meta["{slot}"] is not in the canonical '
+                                  'key set')
+                    continue
+                d = node.value
+                if isinstance(d, ast.Name):
+                    d = local_dicts.get((sf.scope_at(node.lineno), d.id), d)
+                if not isinstance(d, ast.Dict):
+                    continue
+                keys = _const_str_keys(d)
+                if keys is None:
+                    self.emit(sf, node.lineno,
+                              f'meta["{slot}"] written with non-literal '
+                              'keys; the canonical key set cannot be '
+                              'checked')
+                    continue
+                extra = ([k for k in keys if k not in allowed]
+                         if slot == "telemetry_read" or exact else
+                         [k for k in keys
+                          if k not in allowed | _DRIVER_EXTRA_KEYS])
+                missing = ([k for k in sorted(allowed)
+                            if k not in keys] if exact else [])
+                for k in extra:
+                    self.emit(sf, node.lineno,
+                              f'key "{k}" written to meta["{slot}"] is '
+                              'not in the canonical key set')
+                if missing:
+                    self.emit(sf, node.lineno,
+                              f'meta["{slot}"] record is missing canonical '
+                              f'keys: {", ".join(missing)}')
+
+    @staticmethod
+    def _telemetry_slot(tgt: ast.AST) -> Optional[Tuple[str, Optional[str]]]:
+        """(slot, sub_key) when `tgt` stores into a telemetry record."""
+        if not isinstance(tgt, ast.Subscript):
+            return None
+        key = tgt.slice
+        if not (isinstance(key, ast.Constant) and isinstance(key.value, str)):
+            return None
+        if key.value in ("telemetry", "telemetry_read"):
+            return key.value, None
+        # one level deeper: x["telemetry_read"]["fetch_s"] = ...
+        inner = tgt.value
+        if isinstance(inner, ast.Subscript) \
+                and isinstance(inner.slice, ast.Constant) \
+                and inner.slice.value in ("telemetry", "telemetry_read"):
+            return inner.slice.value, key.value
+        return None
+
+    # -------------------------------------------------- container magics
+    def _check_magics(self, sf: SourceFile, project: Project) -> None:
+        consts = {k: v for k, v in _module_str_assigns(sf).items()
+                  if re.fullmatch(r"_MAGIC_V\d+", k)}
+        magics_keys: Set[str] = set()
+        writer_magics: Set[str] = set()
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign) \
+                    and any(isinstance(t, ast.Name) and t.id == "_MAGICS"
+                            for t in node.targets) \
+                    and isinstance(node.value, ast.Dict):
+                for k in node.value.keys:
+                    if isinstance(k, ast.Name):
+                        magics_keys.add(k.id)
+            # the writer's version -> magic literal map ({1: _MAGIC_V1,..})
+            elif isinstance(node, ast.Dict) and node.keys and all(
+                    isinstance(k, ast.Constant) and isinstance(k.value, int)
+                    for k in node.keys):
+                for v in node.values:
+                    if isinstance(v, ast.Name) and v.id in consts:
+                        writer_magics.add(v.id)
+        for name in sorted(consts):
+            if name not in magics_keys:
+                self.emit(sf, 1, f"container magic `{name}` is not accepted "
+                          "by the `_MAGICS` reader matrix", scope="<module>")
+            if writer_magics and name not in writer_magics:
+                self.emit(sf, 1, f"container magic `{name}` has no writer "
+                          "branch (version -> magic map)",
+                          scope="<module>")
+        # every magic byte-string must appear in a test file
+        tests_text = ""
+        for path in project.iter_tree_files("tests"):
+            with open(path, "r", encoding="utf-8") as fh:
+                tests_text += fh.read()
+        for name, magic in sorted(consts.items()):
+            token = magic.decode("ascii", "replace")
+            if tests_text and token not in tests_text:
+                self.emit(sf, 1, f"container magic `{name}` ({token}) has "
+                          "no test fixture exercising it",
+                          scope="<module>")
+
+    # ---------------------------------------------------- blob versions
+    def _check_blob_versions(self, sf: SourceFile) -> None:
+        vnames = {node.targets[0].id
+                  for node in sf.tree.body
+                  if isinstance(node, ast.Assign)
+                  and len(node.targets) == 1
+                  and isinstance(node.targets[0], ast.Name)
+                  and re.fullmatch(r"_V_\w+", node.targets[0].id)}
+        packed: Set[str] = set()
+        compared: Set[str] = set()
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                cn = call_name(node) or ""
+                if cn.endswith(".pack") or cn.endswith(".pack_into"):
+                    for i, a in enumerate(node.args):
+                        if isinstance(a, ast.Name) and a.id in vnames:
+                            packed.add(a.id)
+                        elif isinstance(a, ast.Constant) \
+                                and isinstance(a.value, int) and i == 1 \
+                                and cn.startswith(("_HDR", "_RAW_HDR")):
+                            self.emit(sf, node.lineno,
+                                      "blob header packed with literal "
+                                      f"version {a.value}; use the `_V_*` "
+                                      "constant")
+            elif isinstance(node, ast.Compare):
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Name) and sub.id in vnames:
+                        compared.add(sub.id)
+        for name in sorted(vnames):
+            if name not in packed:
+                self.emit(sf, 1, f"blob version `{name}` is never written "
+                          "(no pack site uses it)", scope="<module>")
+            if name not in compared:
+                self.emit(sf, 1, f"blob version `{name}` has no reader "
+                          "branch (never compared)", scope="<module>")

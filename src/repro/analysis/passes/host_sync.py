@@ -1,0 +1,127 @@
+"""Pass: host-sync-in-device-path.
+
+The device-resident stages (PR 4/5/7) exist so that between-step state
+never round-trips through the host; one stray ``np.asarray`` inside them
+silently serializes the whole overlapped pipeline.  This pass flags host
+synchronization primitives inside functions *registered* as
+device-resident:
+
+  * explicit sync calls: ``jax.device_get``, ``jax.block_until_ready``,
+    ``.block_until_ready()``, ``.item()``, ``np.asarray``/``np.array``
+  * scalar fetches of device dict results: ``float(x[...])`` /
+    ``int(x[...])`` (the ``int(a["b_auto"])`` pattern -- a subscripted
+    argument is how analyze-stage results cross to host; plain
+    ``int(params.b_bits)`` is not flagged).
+
+Registered means: listed in :data:`DEVICE_RESIDENT_NAMES` (exact names or
+``fnmatch`` patterns -- the ``_*_shard`` bodies), or decorated with
+``repro.analysis.device_resident``.
+
+Allowance: sync points gated on telemetry are *by design* (span durations
+must mean stage time, not dispatch time -- see ``docs/observability.md``),
+so anything under ``if telemetry.enabled():`` / ``if tele:`` is exempt.
+Intentional boundary syncs (the analyze-stage b_auto fetch, the final
+``idx_fetch``) carry inline suppressions or live in the committed
+baseline -- the point of the pass is that *new* ones cannot land quietly.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import List, Set, Tuple
+
+from repro.analysis.core import LintPass, SourceFile, call_name, names_in
+from repro.analysis.registry import register_pass
+
+# Functions whose bodies are device paths.  Names (not paths) so seeded
+# fixtures and future modules are covered the moment they reuse a name;
+# patterns cover the shard_map stage bodies.
+DEVICE_RESIDENT_NAMES: Tuple[str, ...] = (
+    "encode_device",
+    "decompress_step_device",
+    "decode_anchor_device",
+    "chain_advance",
+    "chain_advance_core",
+    "decode_blocks_device",
+    "decode_bytes_blocks_device",
+    "compress_blocks_device",
+    "compress_blocks_device_symbols",
+    "_*_shard",
+)
+
+# Callee names that force a device->host sync.
+_SYNC_CALLS: Set[str] = {
+    "jax.device_get", "jax.block_until_ready", "np.asarray", "np.array",
+    "numpy.asarray", "numpy.array",
+}
+# Attribute-method syncs: flagged whatever the receiver (a device path
+# has no business calling these on anything).
+_SYNC_METHODS: Set[str] = {"item", "block_until_ready"}
+# Builtins that sync when fed a device subscript (dict-of-arrays fetch).
+_SCALAR_BUILTINS: Set[str] = {"float", "int", "bool"}
+
+_TELE_GATES = {"tele", "telemetry.enabled"}
+
+
+def is_device_resident(name: str, decorators: List[str]) -> bool:
+    if any(d.endswith("device_resident") for d in decorators):
+        return True
+    return any(fnmatch.fnmatchcase(name, pat)
+               for pat in DEVICE_RESIDENT_NAMES)
+
+
+def _telemetry_gated_lines(fn_node: ast.AST) -> Set[int]:
+    """Lines inside ``if tele:`` / ``if telemetry.enabled():`` branches."""
+    out: Set[int] = set()
+    for node in ast.walk(fn_node):
+        if not isinstance(node, ast.If):
+            continue
+        if names_in(node.test) & _TELE_GATES:
+            for stmt in node.body:
+                lo = stmt.lineno
+                hi = getattr(stmt, "end_lineno", lo) or lo
+                out.update(range(lo, hi + 1))
+    return out
+
+
+@register_pass
+class HostSyncPass(LintPass):
+    rule = "host-sync-in-device-path"
+    description = ("no host synchronization inside device-resident "
+                   "functions (telemetry-gated syncs exempt)")
+
+    def check_file(self, sf: SourceFile) -> None:
+        for fi in sf.functions:
+            if not is_device_resident(fi.name, fi.decorators):
+                continue
+            gated = _telemetry_gated_lines(fi.node)
+            lo, hi = fi.line_range
+            for node in ast.walk(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                if node.lineno in gated:
+                    continue
+                # Nested defs inside a device function are separate
+                # scopes (closures run later, host-side); only flag
+                # calls whose innermost scope is this function.
+                if sf.scope_at(node.lineno).rsplit(".", 1)[-1] != fi.name:
+                    continue
+                name = call_name(node)
+                if name in _SYNC_CALLS:
+                    self.emit(sf, node.lineno,
+                              f"host sync `{name}` in device-resident "
+                              f"function `{fi.name}`")
+                elif (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _SYNC_METHODS
+                        and name not in _SYNC_CALLS):
+                    self.emit(sf, node.lineno,
+                              f"host sync `.{node.func.attr}()` in "
+                              f"device-resident function `{fi.name}`")
+                elif (isinstance(node.func, ast.Name)
+                        and node.func.id in _SCALAR_BUILTINS
+                        and node.args
+                        and isinstance(node.args[0], ast.Subscript)):
+                    self.emit(sf, node.lineno,
+                              f"scalar fetch `{node.func.id}(...[...])` in "
+                              f"device-resident function `{fi.name}` forces "
+                              "a device sync")

@@ -1,0 +1,142 @@
+"""Pass: jit-cache-hygiene.
+
+A ``jax.jit``/``shard_map`` callable constructed per call retraces every
+step -- a silent 10x regression on exactly the temporal-series hot path
+the paper's parallel design exists to speed up (the sharded driver's
+per-step shard_map retrace used to dominate before the
+``self._analyze_fns[key]`` caches landed, PR 3).  This pass enforces the
+sanctioned shapes:
+
+  1. **module scope** -- ``@jax.jit`` / ``@partial(jax.jit, ...)``
+     decorators on top-level functions, or module-level
+     ``fn = jax.jit(...)`` assignments: traced once per process per
+     static signature.
+  2. **keyed cache stores** -- inside a function, the ``jax.jit(...)`` /
+     ``shard_map(...)`` result must be assigned into a subscript
+     (``self._analyze_fns[key] = jax.jit(fn)``), the memoized-executable
+     pattern of ``distributed/pipeline.py``.
+
+Everything else inside a function body is flagged, with
+``jax.jit(lambda ...)`` called out explicitly -- that one is *always* a
+per-call trace.  Constructor-time ``self._fn = jax.jit(...)`` stores are
+*not* auto-sanctioned: they trace per instance, which is fine for
+long-lived engines but wrong for per-step objects -- legitimate ones
+carry an inline suppression so the reviewer sees the claim.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Optional
+
+from repro.analysis.core import LintPass, SourceFile, call_name, dotted_name
+from repro.analysis.registry import register_pass
+
+_JIT_NAMES = {"jax.jit", "jit", "shard_map", "pjit", "jax.pjit"}
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    name = call_name(node)
+    if name in _JIT_NAMES:
+        return True
+    # partial(jax.jit, ...) / functools.partial(shard_map, ...)
+    if name in {"partial", "functools.partial"} and node.args:
+        return dotted_name(node.args[0]) in _JIT_NAMES
+    return False
+
+
+@register_pass
+class JitCachePass(LintPass):
+    rule = "jit-cache-hygiene"
+    description = ("jax.jit/shard_map call sites must be module-level or "
+                   "stored into a keyed cache dict")
+
+    def check_file(self, sf: SourceFile) -> None:
+        parent: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(sf.tree):
+            for child in ast.iter_child_nodes(node):
+                parent[child] = node
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call) or not _is_jit_call(node):
+                continue
+            enc_func = self._enclosing_function(parent, node)
+            if enc_func is None:
+                continue            # module scope: traced once, fine
+            if self._is_decorator_of(enc_func, node, parent):
+                # @jax.jit on a def: fine when the def itself is at
+                # module/class scope (the FunctionDef's own enclosing
+                # function decides).
+                if self._enclosing_function(parent, enc_func) is None:
+                    continue
+                self.emit(sf, node.lineno,
+                          f"`@{call_name(node) or 'jit'}` on the nested "
+                          f"function `{enc_func.name}` traces per call of "
+                          "the enclosing function")
+                continue
+            stmt = self._enclosing_statement(parent, node)
+            if stmt is not None and self._keyed_store(stmt, node, enc_func):
+                continue
+            lam = any(isinstance(a, ast.Lambda) for a in node.args)
+            what = call_name(node) or "jit"
+            fname = enc_func.name
+            msg = (f"per-call `{what}(lambda ...)` inside `{fname}` "
+                   "retraces on every invocation" if lam else
+                   f"`{what}` inside `{fname}` is neither module-level "
+                   "nor stored into a keyed cache "
+                   "(`self._fns[key] = ...` pattern)")
+            self.emit(sf, node.lineno, msg)
+
+    @staticmethod
+    def _enclosing_function(parent, node) -> Optional[ast.AST]:
+        cur = parent.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                return cur
+            cur = parent.get(cur)
+        return None
+
+    @staticmethod
+    def _is_decorator_of(func: ast.AST, node: ast.AST, parent) -> bool:
+        decs = getattr(func, "decorator_list", [])
+        cur = node
+        while cur is not None and cur is not func:
+            if any(cur is d for d in decs):
+                return True
+            cur = parent.get(cur)
+        return False
+
+    @staticmethod
+    def _enclosing_statement(parent, node) -> Optional[ast.stmt]:
+        cur = parent.get(node)
+        while cur is not None:
+            if isinstance(cur, ast.stmt):
+                return cur
+            cur = parent.get(cur)
+        return None
+
+    @staticmethod
+    def _keyed_store(stmt: ast.stmt, call: ast.Call,
+                     enc_func: ast.AST) -> bool:
+        """``cache[key] = jax.jit(...)`` (the call feeds the value), or a
+        two-step version of the same: ``fn = shard_map(...)`` whose name
+        is stored into a subscript elsewhere in the function
+        (``self._fns[key] = jax.jit(fn)``)."""
+        if not isinstance(stmt, ast.Assign):
+            return False
+        if not any(n is call for n in ast.walk(stmt.value)):
+            return False
+        if any(isinstance(t, ast.Subscript) for t in stmt.targets):
+            return True
+        tnames = {t.id for t in stmt.targets if isinstance(t, ast.Name)}
+        if not tnames:
+            return False
+        for other in ast.walk(enc_func):
+            if other is stmt or not isinstance(other, ast.Assign):
+                continue
+            if not any(isinstance(t, ast.Subscript) for t in other.targets):
+                continue
+            used = {n.id for n in ast.walk(other.value)
+                    if isinstance(n, ast.Name)}
+            if tnames & used:
+                return True
+        return False

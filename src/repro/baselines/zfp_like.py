@@ -62,7 +62,6 @@ def compress(data: np.ndarray, tol_abs: float) -> ZfpBlob:
     pad = (-n) % 4
     flat_p = np.pad(flat, (0, pad))
     blocks = flat_p.reshape(-1, 4)
-    nb = blocks.shape[0]
 
     # common exponent per block
     amax = np.abs(blocks).max(axis=1)

@@ -7,12 +7,8 @@ selection (select_b.py).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-
-from repro.core import ratios as R
 
 
 def local_histogram(bin_ids: jax.Array, ok: jax.Array, max_bins: int):

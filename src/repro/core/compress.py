@@ -38,7 +38,7 @@ from repro.core.pipeline import DeviceEncoded
 from repro.kernels import ops as kops
 from repro.kernels import rans
 from repro.obs import telemetry
-from repro.core.types import (CompressedStep, NumarckParams, REF_ORIGINAL,
+from repro.core.types import (CompressedStep, NumarckParams,
                               REF_RECONSTRUCTED, STRATEGY_EQUAL,
                               STRATEGY_KMEANS, STRATEGY_LOG, STRATEGY_TOPK,
                               dtype_nbytes)
@@ -196,10 +196,11 @@ def encode_device(prev, curr, params: NumarckParams,
     pre-compressed blobs and the compacted exceptions, so nothing
     host-side ever touches the table.
     """
+    # Host-ndarray inputs are normalized in place -- no device round-trip.
     if not isinstance(prev, jax.Array):
-        prev = np.asarray(prev)
+        prev = np.asarray(prev)   # repro-lint: disable=host-sync-in-device-path
     if not isinstance(curr, jax.Array):
-        curr = np.asarray(curr)
+        curr = np.asarray(curr)   # repro-lint: disable=host-sync-in-device-path
     if prev.shape != curr.shape:
         raise ValueError("temporal steps must share a shape")
     ebytes = dtype_nbytes(curr.dtype)
@@ -277,6 +278,9 @@ def encode_device(prev, curr, params: NumarckParams,
                     pool=entropy._shared_pool())
             coded_name = params.codec
     with telemetry.span("encode.idx_fetch") as sp_fetch:
+        # The one designed host fetch of the table; skipped entirely when
+        # the caller's chain is device-resident (need_host_idx=False).
+        # repro-lint: disable=host-sync-in-device-path
         idx_host = (np.asarray(idx) if need_host_idx or coded is None
                     else None)
     enc = pipe.EncodedIndices(idx=idx_host, b_bits=b_bits,

@@ -16,7 +16,6 @@ import numpy as np
 from repro.core import blocks, entropy
 from repro.core.container import NCKReader, NCKWriter
 from repro.core.pipeline import reconstruction_dtype
-from repro.core.types import CompressedStep
 
 
 def _range_blocks(start: int, stop: int, block_elems: int):

@@ -10,7 +10,7 @@ loss a learnable structure for convergence tests.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

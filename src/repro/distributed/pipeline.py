@@ -344,7 +344,7 @@ class ShardedCompressor:
             if be > ln:
                 raise ValueError(
                     f"shard length {ln} smaller than minimum block (32); "
-                    f"use fewer shards or larger inputs")
+                    "use fewer shards or larger inputs")
 
         encode = self._encode_fn(bb, k_eff, be, ln, n)
         with telemetry.span("encode.index", annotate=True,

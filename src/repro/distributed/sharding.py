@@ -13,11 +13,9 @@ active -- CPU unit tests).
 """
 from __future__ import annotations
 
-import re
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _ACTIVE = {"mesh": None, "dp": ("data",), "tp": "model",
@@ -52,12 +50,12 @@ def logical_to_spec(logical: Tuple, mesh: Mesh, dp, tp,
     expert parallelism, E=8 on a 16-way axis).
     """
     elems = []
-    for i, l in enumerate(logical):
-        if l == "dp":
+    for i, ax in enumerate(logical):
+        if ax == "dp":
             elems.append(dp if len(dp) > 1 else dp[0])
-        elif l == "tp!":
+        elif ax == "tp!":
             elems.append(tp)
-        elif l == "tp":
+        elif ax == "tp":
             if shape is not None and shape[i] % axis_size(mesh, tp) != 0:
                 elems.append(None)
             else:
@@ -77,8 +75,8 @@ def constrain(x, *logical):
         return x
     dp, tp = _ACTIVE["dp"], _ACTIVE["tp"]
     resolved = tuple(
-        ("tp" if _ACTIVE["shard_seq"] else None) if l == "seq" else l
-        for l in logical)
+        ("tp" if _ACTIVE["shard_seq"] else None) if ax == "seq" else ax
+        for ax in logical)
     spec = logical_to_spec(resolved, mesh, dp, tp, shape=x.shape)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
@@ -159,20 +157,20 @@ def param_specs(params_tree, cfg, mesh: Mesh, dp=("data",), tp="model"):
     def one(path, leaf):
         shape = leaf.shape
         logical = param_logical(_path_str(path), len(shape), cfg)
-        resolved = tuple("dp" if l == "dp" else l for l in logical)
+        resolved = tuple("dp" if ax == "dp" else ax for ax in logical)
         # fsdp ('dp') dims must also divide; else replicate.  'tp!' forces
         # the sharding (GSPMD pads; padded expert parallelism).
         elems = []
-        for i, l in enumerate(resolved):
-            if l == "dp":
+        for i, ax in enumerate(resolved):
+            if ax == "dp":
                 if shape[i] % axis_size(mesh, dp if len(dp) > 1 else dp[0]) \
                         != 0:
                     elems.append(None)
                 else:
                     elems.append(dp if len(dp) > 1 else dp[0])
-            elif l == "tp!":
+            elif ax == "tp!":
                 elems.append(tp)
-            elif l == "tp":
+            elif ax == "tp":
                 if shape[i] % axis_size(mesh, tp) != 0:
                     elems.append(None)
                 else:
@@ -230,20 +228,20 @@ def cache_specs(cache_tree, mesh: Mesh, dp=("data",), tp="model",
         elems = [None] * lead
         primary_failed = False
         used_tp = False
-        for i, l in enumerate(logical):
+        for i, ax in enumerate(logical):
             dim = shape[lead + i]
-            if l == "batch" and dim % dp_size == 0:
+            if ax == "batch" and dim % dp_size == 0:
                 elems.append(dp_name)
-            elif l == "tp" and dim % tp_size == 0 and dim > 1:
+            elif ax == "tp" and dim % tp_size == 0 and dim > 1:
                 elems.append(tp)
-            elif l == "tp>":
+            elif ax == "tp>":
                 if dim % tp_size == 0 and dim > 1:
                     elems.append(tp)
                     used_tp = True
                 else:
                     elems.append(None)
                     primary_failed = True
-            elif l == "alt":
+            elif ax == "alt":
                 if ((primary_failed or not used_tp)
                         and dim % tp_size == 0 and dim > 1):
                     elems.append(tp)

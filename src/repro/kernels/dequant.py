@@ -24,7 +24,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 LANE = 1024
 DEFAULT_BLOCK_ROWS = 64
@@ -34,9 +33,9 @@ CHUNK = 1024            # codebook elements per one-hot matmul
 def _kernel(idx_ref, prev_ref, centers_ref, out_ref, *, k_padded, marker):
     idx = idx_ref[...]                          # (R, LANE) int32
     prev = prev_ref[...]                        # (R, LANE) f32
-    r, l = idx.shape
-    flat = idx.reshape(r * l)
-    acc = jnp.zeros((r * l,), jnp.float32)
+    r, lanes = idx.shape
+    flat = idx.reshape(r * lanes)
+    acc = jnp.zeros((r * lanes,), jnp.float32)
     for base in range(0, k_padded, CHUNK):      # static unroll, <= 8 iters
         local = flat - base
         onehot = (local[:, None] ==
@@ -44,7 +43,7 @@ def _kernel(idx_ref, prev_ref, centers_ref, out_ref, *, k_padded, marker):
         chunk = centers_ref[pl.dslice(base, CHUNK)]
         acc = acc + jnp.dot(onehot.astype(jnp.float32), chunk,
                             preferred_element_type=jnp.float32)
-    centers_of = acc.reshape(r, l)
+    centers_of = acc.reshape(r, lanes)
     compressible = idx != marker
     out = prev * (1.0 + centers_of)
     out_ref[...] = jnp.where(compressible, out, 0.0)

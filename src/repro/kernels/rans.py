@@ -492,7 +492,7 @@ def sampled_idx_bytes(idx2d: jax.Array, b_bits: int,
     <= 7//b + 2 indices straddling bits [8k, 8k+8)."""
     nb, be = idx2d.shape
     nbytes = be * b_bits // 8
-    p = np.arange(0, nbytes, stride, dtype=np.int64)
+    p = np.arange(0, nbytes, stride, dtype=np.int32)
     bit0 = 8 * p
     i0 = bit0 // b_bits
     maskv = jnp.uint32((1 << b_bits) - 1)
@@ -555,6 +555,9 @@ def compress_blocks_device(idx_dev: jax.Array, b_bits: int, nblocks: int,
     stride = sample_stride(nbytes)
     L = lanes_for(nbytes)
     idx2d = idx_dev.reshape(nblocks, be)
+    # Frequency tables are built host-side from the strided samples --
+    # the one designed sync of the encode path.
+    # repro-lint: disable=host-sync-in-device-path
     samples = np.asarray(sampled_idx_bytes(idx2d, b_bits, stride))
     freqs, fcs = tables_from_samples(samples)
     fc_dev = jnp.asarray(fcs)
@@ -600,6 +603,8 @@ def compress_blocks_device_symbols(idx_dev: jax.Array, b_bits: int,
     construction."""
     be = block_elems
     nbytes = be * b_bits // 8
+    # counts_ranks is already a host array (analyze-boundary metadata).
+    # repro-lint: disable=host-sync-in-device-path
     freq = symbol_freq(np.asarray(counts_ranks), k_eff, nblocks * be)
     fc_dev = jnp.asarray(pack_fc(freq))
     L = lanes_for(be)
@@ -872,6 +877,10 @@ def decode_blocks_device(blobs: Sequence[bytes], b_bits: int,
     else:
         pieces = [run(t) for t in tasks]
 
+    # Host-side block-order bookkeeping: `ix` is the task's host index
+    # array, and the permutation never touches the device until the
+    # single jnp.take below.
+    # repro-lint: disable=host-sync-in-device-path, dtype-hazard
     order = np.concatenate([np.asarray(ix, np.int64) for ix, _ in pieces])
     arrs = [a for _, a in pieces]
     cat = jnp.concatenate(arrs, axis=0) if len(arrs) > 1 else arrs[0]

@@ -1,9 +1,7 @@
 """Pure-jnp oracles for every Pallas kernel (assert_allclose targets)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import packing, ratios
 

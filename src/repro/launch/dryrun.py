@@ -24,7 +24,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, list_archs
@@ -114,7 +113,6 @@ def build_cell(model: Model, shape_name: str, mesh):
     dp = dp_axes(mesh)
     tp = tp_axis(mesh)
     kind = SHAPES[shape_name]["kind"]
-    B = SHAPES[shape_name]["global_batch"]
     S = SHAPES[shape_name]["seq_len"]
 
     params_s = model.shape_params()
@@ -200,6 +198,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir=None,
             dn = (1,)            # KV/SSM cache updates in place
         else:
             dn = ()
+        # One-shot lower/compile for cost analysis -- never re-invoked.
+        # repro-lint: disable=jit-cache-hygiene
         jitted = jax.jit(fn, in_shardings=in_ns, out_shardings=out_ns,
                          donate_argnums=dn)
         lowered = jitted.lower(*args)
@@ -323,15 +323,11 @@ def run_compression_dryrun(mesh_kind: str, out_dir=None,
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     axis_names = mesh.axis_names
     P_ = mesh_chips(mesh)
-    ln = n_elems // P_
     params = NumarckParams(error_bound=1e-3, max_bins=1 << 16)
-    bb = 8
-    be = params.block_elems(bb)
-
-    spec_s = P(axis_names)   # flatten all axes for the data-parallel sweep
     t0 = time.time()
     try:
-        # analyze stage
+        # analyze stage: one-shot lower/compile for cost analysis.
+        # repro-lint: disable=jit-cache-hygiene
         analyze = shard_map(
             partial(pl._analyze_shard, max_bins=params.max_bins,
                     b_max=params.b_max, elem_bytes=4, n_total=n_elems,
@@ -343,6 +339,7 @@ def run_compression_dryrun(mesh_kind: str, out_dir=None,
         n_shards = mesh.shape[axis_names[0]]
         ln_a = n_elems // n_shards
         sds = jax.ShapeDtypeStruct((n_shards * ln_a,), jnp.float32)
+        # repro-lint: disable=jit-cache-hygiene
         low = jax.jit(analyze).lower(sds, sds, jnp.float32(1e-3))
         comp = low.compile()
         from repro.launch.cost_model import hlo_cost

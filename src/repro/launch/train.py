@@ -40,7 +40,7 @@ def main():
     model = build(args.arch, smoke=args.smoke)
     if model.cfg.frontend:
         raise SystemExit(f"{args.arch}: frontend archs train via "
-                         f"examples/train_restart.py sample batches")
+                         "examples/train_restart.py sample batches")
     print(f"arch={model.cfg.name} params~{model.cfg.param_count():,}")
 
     mgr = None

@@ -7,8 +7,8 @@ tests.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Tuple
 
 
 @dataclass(frozen=True)

@@ -13,9 +13,6 @@ Decode caches:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -103,7 +100,7 @@ def chunked_sdpa(q, k, v, *, q_pos, kv_pos, window=0, prefix=0,
     """Blockwise online-softmax attention (flash-style, pure JAX).
 
     Never materializes the (T, S) score matrix: lax.scan over query blocks,
-    inner lax.scan over kv blocks carrying (m, l, acc) running statistics.
+    inner lax.scan over kv blocks carrying (m, lse, acc) running statistics.
     This is what makes the 32k/500k shapes lowerable -- see DESIGN.md.
 
     block_skip (SS Perf iteration): when q/kv positions are the aligned
@@ -139,7 +136,7 @@ def chunked_sdpa(q, k, v, *, q_pos, kv_pos, window=0, prefix=0,
     scale = hd ** -0.5
 
     def kv_step(qblk, qp, carry, kv_in):
-        m, l, acc = carry
+        m, lse, acc = carry
         kblk, vblk, kp = kv_in
         s = jnp.einsum("bqkrh,bskh->bkrqs", qblk, kblk) * scale
         s = s.astype(jnp.float32)
@@ -149,10 +146,10 @@ def chunked_sdpa(q, k, v, *, q_pos, kv_pos, window=0, prefix=0,
         m_new = jnp.maximum(m_new, -1e30)        # keep finite
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l = l * corr + jnp.sum(p, axis=-1)
+        lse = lse * corr + jnp.sum(p, axis=-1)
         pv = jnp.einsum("bkrqs,bskh->bkrqh", p.astype(vblk.dtype), vblk)
         acc = acc * corr[..., None] + pv.astype(jnp.float32)
-        return (m_new, l, acc), None
+        return (m_new, lse, acc), None
 
     def init_carry():
         return (jnp.full((B, K, n_rep, qb), -1e30, jnp.float32),
@@ -176,10 +173,10 @@ def chunked_sdpa(q, k, v, *, q_pos, kv_pos, window=0, prefix=0,
             ks_b = jax.lax.dynamic_slice_in_dim(ks, b0, nb_band, 0)
             vs_b = jax.lax.dynamic_slice_in_dim(vs, b0, nb_band, 0)
             kps_b = jax.lax.dynamic_slice_in_dim(kps, b0, nb_band, 0)
-            (m, l, acc), _ = jax.lax.scan(
+            (m, lse, acc), _ = jax.lax.scan(
                 functools_partial(kv_step, qblk, qp), init_carry(),
                 (ks_b, vs_b, kps_b), unroll=scan_unroll())
-            out = acc / jnp.where(l == 0, 1.0, l)[..., None]
+            out = acc / jnp.where(lse == 0, 1.0, lse)[..., None]
             return None, out.astype(qblk.dtype)
 
         _, outs = jax.lax.scan(
@@ -193,20 +190,20 @@ def chunked_sdpa(q, k, v, *, q_pos, kv_pos, window=0, prefix=0,
         for qi in range(nqb):
             q_hi = (qi + 1) * qb                 # causal end (exclusive)
             b1 = min(Sp // kb, -(-q_hi // kb))   # ceil
-            (m, l, acc), _ = jax.lax.scan(
+            (m, lse, acc), _ = jax.lax.scan(
                 functools_partial(kv_step, qs[qi], qps[qi]), init_carry(),
                 (ks[:b1], vs[:b1], kps[:b1]),
                 unroll=scan_unroll())
-            out_i = acc / jnp.where(l == 0, 1.0, l)[..., None]
+            out_i = acc / jnp.where(lse == 0, 1.0, lse)[..., None]
             outs.append(out_i.astype(q.dtype))
         outs = jnp.stack(outs)                   # (nqb, B, K, R, qb, hdv)
     else:
         def q_step(_, q_in):
             qblk, qp = q_in                      # (B,qb,K,R,hd), (qb,)
-            (m, l, acc), _ = jax.lax.scan(
+            (m, lse, acc), _ = jax.lax.scan(
                 functools_partial(kv_step, qblk, qp), init_carry(),
                 (ks, vs, kps), unroll=scan_unroll())
-            out = acc / jnp.where(l == 0, 1.0, l)[..., None]
+            out = acc / jnp.where(lse == 0, 1.0, lse)[..., None]
             return None, out.astype(qblk.dtype)  # (B,K,R,qb,hdv)
 
         _, outs = jax.lax.scan(q_step, None, (qs, qps),
@@ -370,7 +367,6 @@ def _mla_expand_kv(p, c_kv, k_rope_roped, cfg: ModelConfig):
     dt = c_kv.dtype
     k_nope = jnp.einsum("bte,ehk->bthk", c_kv, p["wk_b"].astype(dt))
     v = jnp.einsum("bte,ehk->bthk", c_kv, p["wv_b"].astype(dt))
-    H = cfg.n_heads
     k_rope_h = jnp.broadcast_to(k_rope_roped[:, :, None, :],
                                 k_nope.shape[:3] + (cfg.qk_rope_dim,))
     k = jnp.concatenate([k_nope, k_rope_h], axis=-1)

@@ -13,7 +13,7 @@ precomputed patch/frame embeddings through `extra_embeds`.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ no device allocation -- which is what the multi-pod dry-run lowers against.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional
 
 import jax
@@ -35,8 +34,8 @@ class Model:
 
     def param_count(self) -> int:
         shapes = self.shape_params()
-        return int(sum(int(jnp.prod(jnp.asarray(l.shape)))
-                       for l in jax.tree.leaves(shapes)))
+        return int(sum(int(jnp.prod(jnp.asarray(leaf.shape)))
+                       for leaf in jax.tree.leaves(shapes)))
 
     # ---- steps -----------------------------------------------------------
     def loss(self, params, batch):
@@ -72,7 +71,7 @@ class Model:
         if shape_name not in runnable_shapes(cfg):
             raise ValueError(
                 f"{cfg.name} skips {shape_name} (full attention; "
-                f"DESIGN.md Sec. 5)")
+                "DESIGN.md Sec. 5)")
         sh = SHAPES[shape_name]
         B, S = sh["global_batch"], sh["seq_len"]
         dt = jnp.dtype(cfg.dtype)

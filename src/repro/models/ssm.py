@@ -108,7 +108,8 @@ def ssd_apply(p, x, *, cfg: ModelConfig, valid_len=None, init_state=None):
     nc = Tp // Q
 
     xdt = (xs.astype(jnp.float32) * dt[..., None]).astype(dt_)
-    ch = lambda t, shape: t.reshape((B_, nc, Q) + shape)
+    def ch(t, shape):
+        return t.reshape((B_, nc, Q) + shape)
     xdt_c, B_c, C_c = ch(xdt, (nh, hd)), ch(Bm, (N,)), ch(Cm, (N,))
     a_c = a.reshape(B_, nc, Q, nh)
     a_cum = jnp.cumsum(a_c, axis=2)                    # (B,nc,Q,nh)

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import json
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -134,8 +134,12 @@ class Engine:
         self.B = batch_size
         self.s_max = s_max
         self.keep_session = keep_session
+        # Engines are long-lived (one per serving process); constructor
+        # traces happen once per instance, not per request.
+        # repro-lint: disable=jit-cache-hygiene
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, s_max=s_max))
+        # repro-lint: disable=jit-cache-hygiene
         self._decode = jax.jit(
             lambda p, c, tok, pos: model.decode(p, c, token=tok, pos=pos))
         self.stats = ServeStats()

@@ -8,7 +8,7 @@ train step, never materializing replicated states).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +35,8 @@ class AdamWConfig:
 
 def init_state(params) -> AdamState:
     # moments are always f32 masters, even for bf16-stored weights
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamState(step=jnp.zeros((), jnp.int32),
                      m=jax.tree.map(zeros, params),
                      v=jax.tree.map(zeros, params))

@@ -10,11 +10,9 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
@@ -66,6 +64,9 @@ class Trainer:
         self.model = model
         self.tcfg = tcfg
         self.ckpt = checkpoint_manager
+        # One Trainer per run: the step executable traces once per
+        # instance.
+        # repro-lint: disable=jit-cache-hygiene
         self._step_fn = jax.jit(make_train_step(model, tcfg))
         self._times: list = []
         self.straggler_events = 0

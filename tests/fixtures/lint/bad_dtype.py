@@ -1,0 +1,22 @@
+"""Fixture: dtype-hazard violations in device-reachable functions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def jitted_wide(x):
+    a = x.astype(jnp.float64)                 # violation: attribute dtype
+    b = jnp.zeros((4,), dtype="int64")        # violation: string dtype
+    return a, b
+
+
+@jax.jit
+def jitted_guarded(x):
+    if jax.config.jax_enable_x64:
+        return x.astype(jnp.float64)          # exempt: x64-guarded
+    return x
+
+
+def host_staging(x):
+    return np.asarray(x, np.float64)          # fine: host-side, unregistered

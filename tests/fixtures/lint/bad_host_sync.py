@@ -1,0 +1,25 @@
+"""Fixture: device-resident functions with forbidden host syncs."""
+import jax
+import numpy as np
+
+from repro.obs import telemetry
+
+
+def encode_device(x):
+    a = np.asarray(x)                      # violation: np.asarray
+    b = x.item()                           # violation: .item()
+    jax.block_until_ready(x)               # violation: explicit sync
+    c = float(a["b_auto"])                 # violation: scalar dict fetch
+    d = float(1.5)                         # NOT a violation: plain scalar
+    tele = telemetry.enabled()
+    if tele:
+        jax.block_until_ready(x)           # exempt: telemetry-gated
+    return a, b, c, d
+
+
+def _analyze_shard(x):
+    return np.asarray(x)                   # violation: _*_shard pattern
+
+
+def host_helper(x):
+    return np.asarray(x)                   # NOT a violation: unregistered

@@ -1,0 +1,17 @@
+"""Fixture: every suppression placement the framework supports."""
+import numpy as np
+
+
+def encode_device(x):
+    a = np.asarray(x)   # repro-lint: disable=host-sync-in-device-path
+    # repro-lint: disable=host-sync-in-device-path
+    b = np.asarray(x)
+    return a, b
+
+
+# repro-lint: disable=host-sync-in-device-path
+def decompress_step_device(x):
+    # def-line (or line above def) suppression covers the whole body
+    a = np.asarray(x)
+    b = np.asarray(x)
+    return a, b

@@ -1,0 +1,337 @@
+"""Tests for repro-lint: the AST invariant checker (PR 8).
+
+Fixture modules under ``tests/fixtures/lint/`` seed known-good and
+known-bad shapes for each pass; the CLI tests exercise the committed
+baseline (the repo itself must lint clean) and the acceptance demo --
+seeding a fresh violation makes ``repro-lint`` exit nonzero.
+"""
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import (
+    LintPass,
+    Violation,
+    all_passes,
+    get_pass,
+    load_project,
+    register_pass,
+)
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.cli import main as cli_main
+from repro.analysis.cli import run_lint
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.dirname(TESTS_DIR)
+FIXTURES = os.path.join(TESTS_DIR, "fixtures", "lint")
+
+ALL_RULES = {
+    "concurrency-discipline",
+    "dtype-hazard",
+    "format-closure",
+    "host-sync-in-device-path",
+    "jit-cache-hygiene",
+}
+
+
+def run_rule(rule, fixture):
+    project = load_project([os.path.join(FIXTURES, fixture)], root=FIXTURES)
+    return get_pass(rule)().run(project)
+
+
+def lines_of(violations):
+    return sorted(v.line for v in violations)
+
+
+# --------------------------------------------------------------- registry
+
+def test_registry_has_all_five_passes():
+    rules = [cls.rule for cls in all_passes()]
+    assert rules == sorted(ALL_RULES)
+
+
+def test_get_pass_unknown_rule_raises():
+    with pytest.raises(ValueError, match="unknown lint rule"):
+        get_pass("no-such-rule")
+
+
+def test_register_pass_rejects_duplicate_rule():
+    class Imposter(LintPass):
+        rule = "host-sync-in-device-path"
+
+    with pytest.raises(ValueError, match="duplicate lint rule"):
+        register_pass(Imposter)
+
+
+def test_register_pass_idempotent_for_same_class():
+    cls = get_pass("dtype-hazard")
+    assert register_pass(cls) is cls
+
+
+# ------------------------------------------------------------- host sync
+
+def test_host_sync_flags_syncs_in_device_resident_functions():
+    vs = run_rule("host-sync-in-device-path", "bad_host_sync.py")
+    # np.asarray, .item(), block_until_ready, float(x[...]) in
+    # encode_device; np.asarray in the _*_shard body.
+    assert lines_of(vs) == [9, 10, 11, 12, 21]
+    scopes = {v.scope for v in vs}
+    assert scopes == {"encode_device", "_analyze_shard"}
+
+
+def test_host_sync_ignores_plain_scalars_host_helpers_and_gated_syncs():
+    vs = run_rule("host-sync-in-device-path", "bad_host_sync.py")
+    # float(1.5) (line 13), the telemetry-gated sync (line 16) and
+    # host_helper's asarray (line 25) must not be flagged.
+    assert not {13, 16, 25} & set(lines_of(vs))
+
+
+def test_device_resident_decorator_extends_the_registry(tmp_path):
+    p = tmp_path / "custom.py"
+    p.write_text(textwrap.dedent("""\
+        import numpy as np
+        from repro.analysis import device_resident
+
+        @device_resident
+        def my_custom_stage(x):
+            return np.asarray(x)
+
+        def undecorated(x):
+            return np.asarray(x)
+        """))
+    project = load_project([str(p)], root=str(tmp_path))
+    vs = get_pass("host-sync-in-device-path")().run(project)
+    assert [v.scope for v in vs] == ["my_custom_stage"]
+
+
+# ----------------------------------------------------------- suppressions
+
+def test_suppressions_same_line_prev_line_and_def_line():
+    vs = run_rule("host-sync-in-device-path", "suppressed_host_sync.py")
+    assert vs == []
+
+
+def test_suppression_is_rule_specific(tmp_path):
+    p = tmp_path / "wrongrule.py"
+    p.write_text(textwrap.dedent("""\
+        import numpy as np
+
+        def encode_device(x):
+            return np.asarray(x)  # repro-lint: disable=jit-cache-hygiene
+        """))
+    project = load_project([str(p)], root=str(tmp_path))
+    vs = get_pass("host-sync-in-device-path")().run(project)
+    assert lines_of(vs) == [4]
+
+
+def test_suppression_comma_list_covers_multiple_rules(tmp_path):
+    p = tmp_path / "multi.py"
+    p.write_text(textwrap.dedent("""\
+        import numpy as np
+
+        def encode_device(x):
+            # repro-lint: disable=host-sync-in-device-path, dtype-hazard
+            return np.asarray(x, np.float64)
+        """))
+    project = load_project([str(p)], root=str(tmp_path))
+    for rule in ("host-sync-in-device-path", "dtype-hazard"):
+        assert get_pass(rule)().run(project) == []
+
+
+# -------------------------------------------------------------- jit cache
+
+def test_jit_cache_flags_per_call_traces_only():
+    vs = run_rule("jit-cache-hygiene", "bad_jit.py")
+    # lambda jit in _encode_shard, loop-body jit, unkeyed __init__ store.
+    assert lines_of(vs) == [22, 29, 49]
+
+
+def test_jit_cache_sanctions_module_scope_and_keyed_stores():
+    vs = run_rule("jit-cache-hygiene", "bad_jit.py")
+    flagged = set(lines_of(vs))
+    # decorators (9, 14), module assignment (18), keyed stores (40, 44).
+    assert not {8, 9, 13, 14, 18, 40, 44} & flagged
+
+
+def test_jit_cache_lambda_message_names_the_retrace():
+    vs = run_rule("jit-cache-hygiene", "bad_jit.py")
+    lam = [v for v in vs if v.line == 22]
+    assert len(lam) == 1 and "lambda" in lam[0].message
+
+
+# ------------------------------------------------------------ concurrency
+
+def test_concurrency_flags_all_three_contracts():
+    vs = run_rule("concurrency-discipline", "bad_concurrency.py")
+    assert lines_of(vs) == [14, 15, 26, 39]
+
+
+def test_concurrency_allows_gated_and_labelled_shapes():
+    vs = run_rule("concurrency-discipline", "bad_concurrency.py")
+    flagged = set(lines_of(vs))
+    # list.append under lock (21), holds_gil-gated pool use (32),
+    # labelled submit (40) all pass.
+    assert not {21, 32, 40} & flagged
+
+
+# ---------------------------------------------------------- dtype hazards
+
+def test_dtype_flags_wide_dtypes_in_jitted_functions():
+    vs = run_rule("dtype-hazard", "bad_dtype.py")
+    assert lines_of(vs) == [9, 10]
+
+
+def test_dtype_exempts_x64_guarded_and_host_side_uses():
+    vs = run_rule("dtype-hazard", "bad_dtype.py")
+    flagged = set(lines_of(vs))
+    assert not {17, 22} & flagged
+
+
+# --------------------------------------------------------------- baseline
+
+def _seed_violations():
+    return run_rule("host-sync-in-device-path", "bad_host_sync.py")
+
+
+def test_baseline_save_load_round_trip(tmp_path):
+    vs = _seed_violations()
+    bl = tmp_path / "baseline.json"
+    baseline_mod.save(str(bl), vs)
+    loaded = baseline_mod.load(str(bl))
+    assert sorted(loaded) == sorted({v.fingerprint() for v in vs})
+    new, stale = baseline_mod.diff(vs, loaded)
+    assert new == [] and stale == []
+
+
+def test_baseline_fingerprint_ignores_line_numbers():
+    v = _seed_violations()[0]
+    moved = Violation(rule=v.rule, path=v.path, line=v.line + 40,
+                      scope=v.scope, message=v.message)
+    new, stale = baseline_mod.diff([moved], [v.fingerprint()])
+    assert new == [] and stale == []
+
+
+def test_baseline_diff_reports_new_and_stale():
+    vs = _seed_violations()
+    known = [v.fingerprint() for v in vs[:-1]]
+    new, stale = baseline_mod.diff(vs, known)
+    assert new == [vs[-1]] and stale == []
+    new, stale = baseline_mod.diff(vs[:-1], [v.fingerprint() for v in vs])
+    assert new == [] and stale == [vs[-1].fingerprint()]
+
+
+def test_baseline_missing_file_is_empty():
+    assert baseline_mod.load("/nonexistent/baseline.json") == []
+
+
+# ------------------------------------------------------------------- CLI
+
+def test_cli_repo_is_clean_against_committed_baseline(capsys):
+    # The acceptance gate: the shipped tree has zero NEW violations.
+    rc = cli_main(["--root", REPO_ROOT])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "0 new violation(s)" in out
+
+
+def test_cli_committed_baseline_has_no_stale_entries(capsys):
+    rc = cli_main(["--root", REPO_ROOT])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "0 stale" in out
+
+
+def test_cli_seeded_violation_exits_nonzero(tmp_path, capsys):
+    # The ISSUE demo: a bare jax.jit in a _*_shard body and an asarray in
+    # encode_device must turn the build red.
+    p = tmp_path / "seeded.py"
+    p.write_text(textwrap.dedent("""\
+        import jax
+        import numpy as np
+
+        def encode_device(x):
+            return np.asarray(x)
+
+        def _quant_shard(x):
+            return jax.jit(lambda y: y + 1)(x)
+        """))
+    rc = cli_main([str(p), "--root", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "host-sync-in-device-path" in out
+    assert "jit-cache-hygiene" in out
+
+
+def test_cli_select_narrows_to_one_rule(tmp_path, capsys):
+    p = tmp_path / "seeded.py"
+    p.write_text("import numpy as np\n\n"
+                 "def encode_device(x):\n"
+                 "    return np.asarray(x)\n")
+    rc = cli_main([str(p), "--root", str(tmp_path),
+                   "--select", "jit-cache-hygiene"])
+    assert rc == 0            # the host-sync finding is out of scope
+    rc = cli_main([str(p), "--root", str(tmp_path),
+                   "--select", "host-sync-in-device-path"])
+    capsys.readouterr()
+    assert rc == 1
+
+
+def test_cli_write_baseline_then_clean_then_regress(tmp_path, capsys):
+    p = tmp_path / "seeded.py"
+    p.write_text("import numpy as np\n\n"
+                 "def encode_device(x):\n"
+                 "    return np.asarray(x)\n")
+    assert cli_main([str(p), "--root", str(tmp_path),
+                     "--write-baseline"]) == 0
+    bl = tmp_path / baseline_mod.DEFAULT_BASELINE
+    assert bl.exists()
+    payload = json.loads(bl.read_text())
+    assert len(payload["entries"]) == 1
+    # Accepted: the same tree now lints clean.
+    assert cli_main([str(p), "--root", str(tmp_path)]) == 0
+    # A NEW violation alongside the baselined one still fails.
+    p.write_text(p.read_text()
+                 + "\ndef decompress_step_device(x):\n"
+                   "    return x.item()\n")
+    capsys.readouterr()
+    rc = cli_main([str(p), "--root", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "decompress_step_device" in out
+
+
+def test_cli_stale_entries_warn_but_do_not_fail(tmp_path, capsys):
+    p = tmp_path / "clean.py"
+    p.write_text("def host_helper(x):\n    return x\n")
+    bl = tmp_path / baseline_mod.DEFAULT_BASELINE
+    baseline_mod.save(str(bl), [Violation(
+        rule="host-sync-in-device-path", path="clean.py", line=2,
+        scope="encode_device", message="host sync `np.asarray` ...")])
+    rc = cli_main([str(p), "--root", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "stale baseline entry" in out
+
+
+def test_cli_no_baseline_reports_accepted_violations():
+    rc = cli_main(["--root", REPO_ROOT, "--no-baseline",
+                   "--select", "host-sync-in-device-path"])
+    # The committed tree has accepted boundary syncs; without the
+    # baseline they surface (and the exit goes red).
+    assert rc == 1
+
+
+def test_cli_list_rules_prints_catalogue(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in ALL_RULES:
+        assert rule in out
+
+
+def test_run_lint_sorts_by_path_line_rule():
+    vs = run_lint([FIXTURES], root=FIXTURES)
+    keys = [(v.path, v.line, v.rule) for v in vs]
+    assert keys == sorted(keys)
+    assert {v.rule for v in vs} >= ALL_RULES - {"format-closure"}

@@ -1,7 +1,6 @@
 """Binning strategies + DP oracle properties."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -78,7 +77,8 @@ def test_strategy_quality_ordering():
     counts = binning.local_histogram(ids, okb, max_bins)
     cd, idd = binning.sort_histogram(counts)
     cs_topk, _ = binning.topk_centers(idd, k, dlo, w)
-    cov = lambda cs: dp_oracle.coverage_of_centers(vals, np.asarray(cs), E)
+    def cov(cs):
+        return dp_oracle.coverage_of_centers(vals, np.asarray(cs), E)
     cov_topk = cov(cs_topk)
     cov_equal = cov(binning.equal_width_centers(float(vals.min()),
                                                 float(vals.max()), k))

@@ -18,7 +18,7 @@ except ImportError:                               # pragma: no cover
 
 from repro.core import (NumarckParams, TemporalCompressor,
                         TemporalDecompressor, compress_series,
-                        decompress_series, decompress_step,
+                        decompress_step,
                         mean_error_rate, reconstruction_dtype)
 from repro.core.chain import (CHAIN_AUTO, CHAIN_DEVICE, CHAIN_HOST,
                               DeviceReferenceChain, HostReferenceChain,

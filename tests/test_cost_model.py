@@ -1,9 +1,6 @@
 """Analytical cost model vs fully-unrolled HLO FLOPs (exact on small
 configs -- validates the roofline numbers in EXPERIMENTS.md)."""
-import dataclasses
-
 import jax
-import numpy as np
 import pytest
 
 from repro.launch import cost_model

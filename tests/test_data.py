@@ -48,7 +48,6 @@ def test_token_pipeline_learnable_structure():
     """Markov structure: next-token entropy is far below uniform."""
     pipe = TokenPipeline(256, 257, 8, seed=0, n_states=16)
     b = pipe.batch(0)
-    toks = np.concatenate([b["tokens"].ravel(), b["labels"][:, -1]])
     pairs = {}
     flat = b["tokens"]
     for row in range(flat.shape[0]):

@@ -2,7 +2,6 @@
 feedback behaviour (the beyond-paper distributed-optimization feature)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st

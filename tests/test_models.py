@@ -77,7 +77,6 @@ def test_prefill_matches_forward_last_logits(arch):
 def test_decode_matches_forward(arch):
     """Teacher-forced decode reproduces forward logits step by step."""
     model = build(arch, smoke=True)
-    cfg = model.cfg
     params = model.init(KEY)
     B, S = 1, 10
     batch = model.sample_batch(jax.random.PRNGKey(5), B, S)
@@ -159,9 +158,9 @@ def test_prefix_lm_bidirectional_mask():
     # prefix block fully visible to everyone
     assert m[:, :4].all()
     # text remains causal among itself
-    assert m[5, 6] == False and m[6, 5] == True
+    assert not m[5, 6] and m[6, 5]
     # prefix rows see future prefix but not future text
-    assert m[0, 3] == True and m[0, 7] == False
+    assert m[0, 3] and not m[0, 7]
 
 
 def test_paligemma_patches_influence_text_logits():

@@ -1,6 +1,4 @@
 """MoE dispatch properties, incl. split-expert equivalence (SS Perf)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -12,7 +12,7 @@ import warnings
 import numpy as np
 import pytest
 
-from repro.core import (NumarckParams, TemporalCompressor, compress_series,
+from repro.core import (NumarckParams, compress_series,
                         decompress_series)
 from repro.core import entropy
 from repro.core.overlap import FinalizeQueue, _attach_context

@@ -305,7 +305,6 @@ def test_device_decode_matches_host_property(kind, nblocks, b_bits):
                                         be)
     got = np.asarray(rans.decode_blocks_device(blobs, b_bits, be)
                      ).reshape(-1)
-    nbytes = be * b_bits // 8
     for k, blob in enumerate(blobs):
         raw = rans.decompress(blob)
         want = packing.unpack_indices_np(np.frombuffer(raw, np.uint8),

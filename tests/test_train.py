@@ -2,7 +2,6 @@
 bit-deterministically, grad compression converges."""
 import jax
 import numpy as np
-import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import NumarckParams
