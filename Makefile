@@ -1,8 +1,9 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dist lint bench-entropy bench-entropy-smoke \
-	bench-chain bench bench-all bench-all-smoke bench-check
+.PHONY: test test-fast test-dist test-multiproc lint bench-entropy \
+	bench-entropy-smoke bench-chain bench bench-all bench-all-smoke \
+	bench-check
 
 # Static analysis: repro-lint (the five AST invariant passes diffed
 # against repro-lint.baseline.json -- see docs/static_analysis.md) plus
@@ -34,6 +35,13 @@ test-dist:
 	$(PY) -m pytest -q tests/test_distributed.py tests/test_checkpoint.py \
 	    tests/test_sharding.py tests/test_elastic.py
 
+# Multi-process tier: jax.distributed launch emulation, per-rank shard
+# writers + NCKM manifest, crash tolerance.  The 2-process byte-identity
+# tests spawn real subprocesses (repro.launch.distributed.spawn_emulated)
+# and are independent of the in-process device count.
+test-multiproc:
+	$(PY) -m pytest -q tests/test_multiprocess.py
+
 # Entropy stage: serial vs parallel host codecs across block sizes, plus
 # the device rANS codec vs the threaded-zlib finalize at 1/16/64 MB.
 # Also writes the BENCH_entropy.json artifact rows.
@@ -53,8 +61,9 @@ bench:
 	$(PY) benchmarks/run.py
 
 # The committed perf trajectory: write BENCH_entropy.json,
-# BENCH_chain.json and BENCH_compression.json into the repo root in the
-# stable diffable schema (machine/config header + named rows).
+# BENCH_chain.json, BENCH_compression.json and BENCH_scaling.json into
+# the repo root in the stable diffable schema (machine/config header +
+# named rows).  The scaling bench launches emulated multi-process runs.
 bench-all:
 	$(PY) benchmarks/run.py --bench-all --out-dir .
 
@@ -73,7 +82,7 @@ bench-all-smoke:
 TOL ?= 0.5
 RATIO_TOL ?= 0.05
 bench-check:
-	@rc=0; for b in entropy chain compression; do \
+	@rc=0; for b in entropy chain compression scaling; do \
 	  $(PY) benchmarks/check_regression.py \
 	    --tracked BENCH_$$b.json --current $(OUT)/BENCH_$$b.json \
 	    --tolerance $(TOL) --ratio-tolerance $(RATIO_TOL) || rc=1; \

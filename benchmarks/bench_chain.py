@@ -27,7 +27,7 @@ if __package__ in (None, ""):                      # standalone invocation
                                     "src"))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.common import Row  # noqa: E402
+from benchmarks.common import Row, rate  # noqa: E402
 
 STEPS = 8
 N = 1_500_000                    # 6 MB/step f32
@@ -66,7 +66,7 @@ def run_single() -> list:
         extra = f" speedup={times['host'] / dt:.3f}x" if chain == "device" \
             else ""
         rows.append((f"chain/single/{chain}", dt * 1e6,
-                     f"MBps={mb / dt:.0f}{extra}"))
+                     f"MBps={rate(mb, dt)}{extra}"))
     return rows
 
 
@@ -84,8 +84,8 @@ _SHARDED_BENCH = textwrap.dedent("""
     # Sized so the 4-config sweep (2 residencies x 2 overlap modes, each
     # warmed + timed) finishes on the small tracked machine; the point of
     # the rows is the relative speedups, not the absolute payload.
-    n = 500_000
-    steps = 4
+    n = 250_000
+    steps = 3
     base = rng.normal(1.0, 0.5, n).astype(np.float32)
     series = [base]
     for t in range(steps - 1):
@@ -117,7 +117,7 @@ _SHARDED_BENCH = textwrap.dedent("""
             assert all(a.index_blocks == b.index_blocks
                        for a, b in zip(ref, blobs)), (chain, overlap)
             mode = "overlap" if overlap else "sync"
-            print(f"RESULT name={chain}_{mode} s={dt:.4f} mb={mb:.0f}")
+            print(f"RESULT name={chain}_{mode} s={dt:.4f} mb={mb:.2f}")
 """)
 
 
@@ -138,7 +138,7 @@ def run_sharded() -> list:
         if base_s is None:
             base_s = s                      # host_sync baseline
         rows.append((f"chain/sharded/{kv['name']}", s * 1e6,
-                     f"MBps={float(kv['mb']) / s:.0f} "
+                     f"MBps={rate(float(kv['mb']), s)} "
                      f"speedup={base_s / s:.3f}x"))
     if not rows:
         rows.append(("chain/sharded", 0.0, f"FAILED rc={res.returncode}"))

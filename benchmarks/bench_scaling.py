@@ -13,9 +13,20 @@ the v5e ICI latency/bandwidth), and derive the strong-scaling curve
 
 The derived speedups are validated against the paper's own shape: near-
 linear until the binning collective dominates (Table 3: allreduce goes
-5% -> 67.6% of the binning phase from 320 -> 1600 cores)."""
+5% -> 67.6% of the binning phase from 320 -> 1600 cores).
+
+``run(real=True)`` adds MEASURED rows on top of the model: it launches
+1/2/4 emulated jax.distributed processes (benchmarks/scaling_worker.py
+via ``repro.launch.distributed.spawn_emulated``) and reports per-rank
+CPU-seconds speedups for strong and weak scaling plus the per-phase
+breakdown aggregated across ranks -- see docs/scaling.md for why
+CPU-seconds (not wall) is the honest measure on the 1-core tracked
+container.  These rows feed BENCH_scaling.json (`make bench-all`) and
+the CI smoke gate."""
 from __future__ import annotations
 
+import json
+import os
 import zlib
 
 import numpy as np
@@ -36,7 +47,7 @@ def allreduce_time(nbytes: float, p: int) -> float:
     return 2 * (p - 1) * (ALLREDUCE_LAT + nbytes / p / ICI_BW)
 
 
-def run() -> list:
+def run_model() -> list:
     rows: list[Row] = []
     series = list(generate_series("stir", n_iterations=2, seed=5, scale=2))
     prev, curr = series[0].ravel(), series[1].ravel()
@@ -115,4 +126,130 @@ def run() -> list:
         rows.append((f"table3_allreduce_share_p{cores}", ar * 1e6,
                      f"share={ar/t_bin*100:.1f}% "
                      f"topk_share={t_topk/t_bin*100:.1f}%"))
+    return rows
+
+
+# --------------------------------------------------------- measured mode
+
+# Paper's perfectly-parallel phases ("no network communication cost"):
+# assign index + bits packing (encode), exception recovery, ZLIB.  The
+# analyze phase carries the histogram allreduce and is collective-bound.
+PAR_KEYS = ("encode_s", "exceptions_s", "entropy_s")
+PHASE_KEYS = ("analyze_s", "encode_s", "exceptions_s", "entropy_s",
+              "finalize_s")
+
+
+def _launch(ranks: int, n: int, steps: int, *, preset: bool = True,
+            timeout: float = 1800.0) -> list:
+    """Spawn `ranks` emulated worker processes; return their RESULT
+    records in rank order."""
+    from repro.launch.distributed import check_spawned, spawn_emulated
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(here, "..", "src"))
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    env["SCALING_N"] = str(n)
+    env["SCALING_STEPS"] = str(steps)
+    res = spawn_emulated(ranks, [os.path.join(here, "scaling_worker.py")],
+                         base_env=env, preset=preset, timeout=timeout)
+    check_spawned(res)
+    recs = []
+    for r in res:
+        for line in r.stdout.splitlines():
+            if line.startswith("RESULT "):
+                recs.append(json.loads(line[len("RESULT "):]))
+    if len(recs) != ranks:
+        raise RuntimeError(f"expected {ranks} RESULT lines, got "
+                           f"{len(recs)}")
+    return recs
+
+
+def _cpu_par(rec: dict) -> float:
+    """The rank's CPU-seconds attributed to the perfectly-parallel
+    phases: total process CPU scaled by the phases' wall share (uniform-
+    contention attribution; docs/scaling.md)."""
+    tot = sum(rec["phases"].values()) or 1.0
+    par = sum(rec["phases"][k] for k in PAR_KEYS)
+    return rec["cpu_s"] * par / tot
+
+
+def run_real(smoke: bool = False) -> list:
+    """Measured speedup-vs-ranks rows from emulated multi-process runs.
+
+    Smoke keeps {1,2} ranks on a smaller payload; full runs {1,2,4}.
+    Smoke row names are a subset of the full run's, so check_regression
+    gates a CI smoke run against the committed full artifact."""
+    rows: list[Row] = []
+    n = 96_000 if smoke else 240_000
+    steps = 2 if smoke else 3
+    ranks = (1, 2) if smoke else (1, 2, 4)
+
+    # Satellite: the runtime-env preset (tcmalloc preload + log quieting
+    # + XLA host-device flag) before/after on the same 1-rank payload.
+    rec_off = _launch(1, n, steps, preset=False)[0]
+    rec_on = _launch(1, n, steps, preset=True)[0]
+    from repro.launch.runtime_env import find_tcmalloc
+    tc = "yes" if find_tcmalloc() else "absent"
+    rows.append(("scaling/runtime_env/off", rec_off["cpu_s"] * 1e6,
+                 f"wall={rec_off['wall_s']:.3f}s"))
+    rows.append(("scaling/runtime_env/on", rec_on["cpu_s"] * 1e6,
+                 f"wall={rec_on['wall_s']:.3f}s tcmalloc={tc} "
+                 f"cpu_speedup="
+                 f"{rec_off['cpu_s'] / rec_on['cpu_s']:.3f}x"))
+
+    # Strong scaling: fixed global payload, more ranks.  The preset 1-rank
+    # run above is exactly the p=1 configuration; reuse it as baseline.
+    strong = {1: [rec_on]}
+    for p in ranks[1:]:
+        strong[p] = _launch(p, n, steps)
+    base_cpu = strong[1][0]["cpu_s"]
+    base_par = _cpu_par(strong[1][0])
+    par_speedups = []
+    for p in ranks:
+        recs = strong[p]
+        max_cpu = max(r["cpu_s"] for r in recs)
+        max_par = max(_cpu_par(r) for r in recs)
+        wall = max(r["wall_s"] for r in recs)
+        spp = base_par / max_par
+        par_speedups.append(spp)
+        rows.append((f"scaling/real/strong/p{p}", max_cpu * 1e6,
+                     f"cpu_speedup={base_cpu / max_cpu:.2f}x "
+                     f"par_speedup={spp:.2f}x wall={wall:.3f}s"))
+        # Per-phase breakdown aggregated across ranks: us = max across
+        # ranks (the critical path), derived = fleet-total share.
+        fleet_tot = sum(sum(r["phases"].values()) for r in recs) or 1.0
+        for k in PHASE_KEYS:
+            k_max = max(r["phases"][k] for r in recs)
+            k_sum = sum(r["phases"][k] for r in recs)
+            rows.append((f"scaling/real/p{p}/phase_{k[:-2]}", k_max * 1e6,
+                         f"sum={k_sum:.4f}s "
+                         f"pct={k_sum / fleet_tot * 100:.1f}%"))
+
+    # Weak scaling: payload grows with the fleet, per-rank share constant.
+    weak = {1: [rec_on]}
+    for p in ranks[1:]:
+        weak[p] = _launch(p, n * p, steps)
+    for p in ranks:
+        max_cpu = max(r["cpu_s"] for r in weak[p])
+        rows.append((f"scaling/real/weak/p{p}", max_cpu * 1e6,
+                     f"eff={base_cpu / max_cpu * 100:.0f}% "
+                     f"wall={max(r['wall_s'] for r in weak[p]):.3f}s"))
+
+    # Gate: speedup of the perfectly-parallel phases must grow with the
+    # rank count.  A *_FAILED row name fails check_regression outright.
+    ok = all(b > a for a, b in zip(par_speedups, par_speedups[1:]))
+    rows.append(("scaling/real/monotonic" + ("" if ok else "_FAILED"),
+                 0.0, "par_speedups=" + ",".join(
+                     f"{s:.2f}" for s in par_speedups)))
+    return rows
+
+
+def run(real: bool = False, smoke: bool = False) -> list:
+    """Analytical model rows, plus the measured multi-process rows when
+    ``real`` (BENCH_scaling.json); smoke shrinks the measured sweep."""
+    rows = run_model()
+    if real:
+        rows += run_real(smoke=smoke)
     return rows

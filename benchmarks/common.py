@@ -42,6 +42,14 @@ def emit(rows: List[Row]):
         print(f"{name},{us:.1f},{derived}")
 
 
+def rate(mb: float, seconds: float) -> str:
+    """MB/s as a derived-field string.  Three significant digits below
+    10 MB/s: the old ``:.0f`` truncated slow sharded rows (< 0.5 MB/s on
+    the 1-CPU tracked container) to a meaningless ``MBps=0``."""
+    v = mb / seconds
+    return f"{v:.0f}" if v >= 10 else f"{v:.3g}"
+
+
 def machine_header() -> Dict:
     """Machine/config fingerprint stamped into every BENCH JSON, so a
     diff between two committed artifacts says whether the runs are even

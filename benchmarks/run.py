@@ -31,17 +31,19 @@ if (importlib.util.find_spec("repro") is None
 
 
 def bench_all(out_dir: str, smoke: bool = False) -> int:
-    """Write the three committed perf-trajectory artifacts --
-    BENCH_entropy.json, BENCH_chain.json, BENCH_compression.json -- into
-    `out_dir` in the stable schema of benchmarks.common.write_bench_json
-    (machine/config header + named rows).
+    """Write the committed perf-trajectory artifacts --
+    BENCH_entropy.json, BENCH_chain.json, BENCH_compression.json,
+    BENCH_scaling.json -- into `out_dir` in the stable schema of
+    benchmarks.common.write_bench_json (machine/config header + named
+    rows).
 
     ``smoke`` runs reduced, in-process variants whose rows are
     name-identical subsets of the full run's, so
     benchmarks/check_regression.py can gate a CI smoke run against the
     committed full artifacts.  Returns the number of failed benches.
     """
-    from benchmarks import bench_chain, bench_compression, bench_entropy
+    from benchmarks import (bench_chain, bench_compression, bench_entropy,
+                            bench_scaling)
     from benchmarks.common import emit, write_bench_json
 
     failed = 0
@@ -60,6 +62,11 @@ def bench_all(out_dir: str, smoke: bool = False) -> int:
              else ("sedov", "stir", "asr", "cmip"),
              include_sharded=not smoke, include_chain=False),
          {"smoke": smoke, "note": "chain rows live in BENCH_chain.json"}),
+        ("scaling", "BENCH_scaling.json",
+         lambda: bench_scaling.run(real=True, smoke=smoke),
+         {"smoke": smoke, "real": True,
+          "note": "scaling/real/* rows are measured emulated multi-"
+                  "process runs; the rest is the paper-scale model"}),
     ]
     for bench, fname, fn, config in plan:
         path = os.path.join(out_dir, fname)
@@ -87,8 +94,9 @@ def main() -> None:
                          "threaded zlib vs raw) and write the rows to "
                          "PATH (the BENCH_entropy.json CI artifact)")
     ap.add_argument("--bench-all", action="store_true",
-                    help="write BENCH_entropy/chain/compression.json into "
-                         "--out-dir (the committed perf trajectory)")
+                    help="write BENCH_entropy/chain/compression/scaling"
+                         ".json into --out-dir (the committed perf "
+                         "trajectory)")
     ap.add_argument("--smoke", action="store_true",
                     help="with --bench-all: reduced in-process variants "
                          "(rows are a name subset of the full run)")

@@ -1,0 +1,99 @@
+"""Per-rank worker for the measured speedup-vs-ranks bench.
+
+Launched N times by ``bench_scaling.run(real=True)`` through
+``repro.launch.distributed.spawn_emulated`` (fleet coordinates arrive in
+the ``REPRO_*`` environment).  Each rank joins the fleet, compresses the
+same deterministic series through ``MultiProcessCompressor`` (warm run
+first, measured run second), and prints one machine-readable line::
+
+    RESULT {"rank":0,"num":2,"wall_s":...,"cpu_s":...,"phases":{...},...}
+
+Measurement notes for the 1-CPU tracked container: with p ranks
+oversubscribed on one core, wall-clock cannot improve, so the honest
+per-rank cost is ``time.process_time()`` CPU-seconds -- each rank's
+*work* shrinks as 1/p for the perfectly-parallel phases even though the
+wall stays flat.  The per-phase wall times from ``meta["telemetry"]``
+are reported for the breakdown; bench_scaling attributes the rank's CPU
+seconds to phases proportionally to those wall shares (uniform-contention
+assumption, documented in docs/scaling.md).
+
+Knobs (environment, set by the parent):
+
+  SCALING_N       elements per step (default 240000)
+  SCALING_STEPS   steps in the series (default 3)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):                      # standalone invocation
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "src"))
+
+PHASE_KEYS = ("analyze_s", "encode_s", "exceptions_s", "entropy_s",
+              "finalize_s")
+
+
+def _series(n: int, steps: int):
+    import numpy as np
+    rng = np.random.default_rng(7)
+    base = rng.normal(1.0, 0.5, n).astype(np.float32)
+    out = [base]
+    for t in range(steps - 1):
+        nxt = (out[-1] * (1 + 0.01 * rng.standard_normal(n))
+               ).astype(np.float32)
+        nxt[t::4001] *= 40.0          # keep the exception path exercised
+        out.append(nxt)
+    return out
+
+
+def main() -> None:
+    n = int(os.environ.get("SCALING_N", "240000"))
+    steps = int(os.environ.get("SCALING_STEPS", "3"))
+
+    from repro.launch import distributed as dist
+    cfg = dist.initialize()
+    mesh = dist.global_mesh()
+
+    from repro.core import NumarckParams
+    from repro.distributed.pipeline import MultiProcessCompressor
+    from repro.obs import telemetry
+
+    series = _series(n, steps)
+    mp = MultiProcessCompressor(mesh, params=NumarckParams(
+        error_bound=1e-3), use_pallas=False)
+    mp.compress_series_fragments(series)          # warm the jit caches
+
+    # Best-of-3 (lowest CPU-seconds): the measured runs are much
+    # cheaper than the process startup they ride on, and the min is the
+    # noise-robust statistic the monotonicity gate needs.  All ranks run
+    # the same repeat count, so the fleet stays in collective lockstep.
+    best = None
+    for _ in range(3):
+        with telemetry.capture():
+            w0, c0 = time.perf_counter(), time.process_time()
+            frags = mp.compress_series_fragments(series)
+            wall = time.perf_counter() - w0
+            cpu = time.process_time() - c0
+        phases = {k: 0.0 for k in PHASE_KEYS}
+        bytes_out = 0
+        for f in frags:
+            tele = f.meta.get("telemetry") or {}
+            for k in PHASE_KEYS:
+                phases[k] += float(tele.get(k, 0.0))
+            bytes_out += int(tele.get("bytes_out", 0))
+        rec = {"rank": cfg.process_id, "num": cfg.num_processes,
+               "wall_s": wall, "cpu_s": cpu, "phases": phases,
+               "n": n, "steps": steps, "bytes_out": bytes_out}
+        if best is None or rec["cpu_s"] < best["cpu_s"]:
+            best = rec
+    mp.close()
+
+    print("RESULT " + json.dumps(best, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

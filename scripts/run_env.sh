@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Host runtime preset for launching repro workers (source me, or use as a
+# command prefix: `scripts/run_env.sh python my_worker.py ...`).
+#
+# Shell twin of repro.launch.runtime_env.runtime_env() -- the launcher
+# applies the same preset programmatically via rank_env(); this script is
+# for hand-launched real multi-host runs (one invocation per host):
+#
+#   REPRO_COORDINATOR=host0:1234 REPRO_NUM_PROCESSES=4 REPRO_PROCESS_ID=$I \
+#     scripts/run_env.sh python my_worker.py
+#
+# Idiom per SNIPPETS §1-3 (HomebrewNLP/olmax run.sh, MaxText):
+#   * tcmalloc LD_PRELOAD when the host ships it (glibc malloc fragments
+#     the finalize stage's large transient buffers);
+#   * silence its large-alloc reports (~60 GB threshold = never);
+#   * quiet TF/XLA C++ worker logging.
+
+for _lib in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+            /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+            /usr/lib/libtcmalloc.so.4 \
+            /usr/lib/libtcmalloc_minimal.so.4; do
+  if [ -e "$_lib" ]; then
+    export LD_PRELOAD="${LD_PRELOAD:+$LD_PRELOAD:}$_lib"
+    export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+    break
+  fi
+done
+unset _lib
+
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+# CPU emulation: REPRO_HOST_DEVICES=K adds the forced host device count
+# (must be in XLA_FLAGS before the worker imports jax).
+if [ -n "${REPRO_HOST_DEVICES:-}" ]; then
+  export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=${REPRO_HOST_DEVICES}"
+fi
+
+# Prefix mode: exec the wrapped command under the preset.
+if [ "$#" -gt 0 ]; then
+  exec "$@"
+fi

@@ -27,6 +27,19 @@ for the next reader.  Sub-checks:
      finalize-stage writes match exactly; driver-stage partial records
      (folded by finalize) may use the canonical subset plus
      ``device_entropy_s``; single-key stores must name a canonical key.
+
+  4. **Manifest magic** (``core/container.py``): when the multi-process
+     ``_MANIFEST_MAGIC`` exists it must have a reader branch (appear in
+     a comparison) and a test fixture, like the data magics -- a
+     manifest the reader cannot distinguish from a data file corrupts
+     every multi-process open.
+
+  5. **Atomic publish discipline**: every durable publish goes through
+     ``core.container.atomic_commit`` (write tmp, flush, fsync, rename).
+     Any other ``os.replace``/``os.rename`` call in ``src/`` is flagged:
+     a rename without the fsync can publish a file whose bytes are not
+     on disk yet, and a crashed save would then corrupt the previous
+     generation instead of leaving it loadable.
 """
 from __future__ import annotations
 
@@ -88,9 +101,11 @@ class FormatClosurePass(LintPass):
         canon = self._load_canon(project)
         for sf in project.files:
             self._check_telemetry_writes(sf, canon)
+            self._check_atomic_publish(sf)
         csf = project.by_rel("src/repro/core/container.py")
         if csf is not None:
             self._check_magics(csf, project)
+            self._check_manifest_magic(csf, project)
         rsf = project.by_rel("src/repro/kernels/rans.py")
         if rsf is not None:
             self._check_blob_versions(rsf)
@@ -233,6 +248,49 @@ class FormatClosurePass(LintPass):
                 self.emit(sf, 1, f"container magic `{name}` ({token}) has "
                           "no test fixture exercising it",
                           scope="<module>")
+
+    # -------------------------------------------------- manifest closure
+    def _check_manifest_magic(self, sf: SourceFile,
+                              project: Project) -> None:
+        consts = _module_str_assigns(sf)
+        magic = consts.get("_MANIFEST_MAGIC")
+        if magic is None:
+            return
+        compared = False
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Compare):
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Name) \
+                            and sub.id == "_MANIFEST_MAGIC":
+                        compared = True
+        if not compared:
+            self.emit(sf, 1, "`_MANIFEST_MAGIC` has no reader branch "
+                      "(never compared against file bytes)",
+                      scope="<module>")
+        token = magic.decode("ascii", "replace")
+        tests_text = ""
+        for path in project.iter_tree_files("tests"):
+            with open(path, "r", encoding="utf-8") as fh:
+                tests_text += fh.read()
+        if tests_text and token not in tests_text:
+            self.emit(sf, 1, f"manifest magic `_MANIFEST_MAGIC` ({token}) "
+                      "has no test fixture exercising it",
+                      scope="<module>")
+
+    def _check_atomic_publish(self, sf: SourceFile) -> None:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            cn = call_name(node) or ""
+            if cn not in ("os.replace", "os.rename"):
+                continue
+            scope = sf.scope_at(node.lineno)
+            if scope.rsplit(".", 1)[-1] == "atomic_commit":
+                continue
+            self.emit(sf, node.lineno,
+                      f"`{cn}` outside core.container.atomic_commit: "
+                      "durable publishes must go through the "
+                      "fsync-before-rename helper")
 
     # ---------------------------------------------------- blob versions
     def _check_blob_versions(self, sf: SourceFile) -> None:

@@ -36,6 +36,7 @@ from repro.core import (NumarckParams, decompress_step, make_anchor)
 from repro.core import chain as chainmod
 from repro.core import pipeline as pipe
 from repro.core.compress import decode_anchor, encode_device
+from repro.core import container
 from repro.core.container import NCKReader, NCKWriter
 from repro.core.overlap import FinalizeQueue
 from repro.obs import telemetry
@@ -109,12 +110,9 @@ class CheckpointManager:
             return {"steps": [], "anchors": []}
 
     def _write_manifest(self, m: Dict):
-        tmp = self._manifest_path() + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(m, f, indent=1)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, self._manifest_path())
+        # Shared fsync-before-rename commit discipline (core.container).
+        container.atomic_commit(self._manifest_path(),
+                                json.dumps(m, indent=1).encode())
 
     # ---------------------------------------------------------------- save
     def save(self, step: int, tree: Any, blocking: Optional[bool] = None):

@@ -31,13 +31,29 @@ blocks (kernels.rans v2 blobs, coding pre-pack B-bit indices -- bytes
 older rANS decoders cannot parse) are stamped "NCK3" by the same
 mechanism: the writer peeks each rans block's self-describing version
 byte when the step is added.  This reader accepts all three.
+
+Multi-process output (paper Sec. IV-D collective write analogue): each
+process writes only its own blocks to a generation-suffixed rank file
+``<path>.g<gen>.rank<k>`` -- a normal NCK file holding *step fragments*
+-- and rank 0 publishes ``<path>`` as an "NCKM" manifest naming the rank
+files.  Payload bytes never cross processes; `NCKReader` opens the
+manifest as one logical file and merges fragments back into
+`CompressedStep`s byte-identical to a single-process write.  All file
+publishes (rank files, manifest, checkpoint manifests) go through
+`atomic_commit`: content is fsynced *before* the rename makes it
+visible, so a crashed rank can never leave a half-written file under a
+published name, and a failed commit leaves the previous manifest (and
+the rank files it references) untouched.
 """
 from __future__ import annotations
 
+import glob
 import json
 import os
 import struct
-from typing import Dict, List, Optional
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Union
 
 import numpy as np
 
@@ -49,20 +65,52 @@ _MAGIC_V2 = b"NCK2"
 _MAGIC_V3 = b"NCK3"
 _MAGICS = {_MAGIC_V1: 1, _MAGIC_V2: 2, _MAGIC_V3: 3}
 _MAGIC = _MAGIC_V1              # legacy alias (default / pre-PR files)
+_MANIFEST_MAGIC = b"NCKM"       # multi-process manifest (not a data file)
 _ALIGN = 64
 
 
-def _has_symbol_blobs(step: CompressedStep) -> bool:
-    """Does any rans block of this step carry the symbol-level (v2) blob
+def atomic_commit(path: str, data: Union[bytes, Iterable[bytes]]) -> None:
+    """Durable atomic publish: write to `path`.tmp, fsync, then rename.
+
+    The one sanctioned way to make a file appear under a published name
+    (NCK files, multi-process manifests, checkpoint manifests all route
+    here; repro-lint's format pass flags any other os.replace/os.rename
+    in the tree).  fsync runs BEFORE the rename so a crash can never
+    publish a name whose content is not yet on disk.
+    """
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        if isinstance(data, (bytes, bytearray, memoryview)):
+            f.write(data)
+        else:
+            for chunk in data:
+                f.write(chunk)
+        f.flush()
+        # durable BEFORE the rename publishes it
+        with telemetry.span("nck.fsync"):
+            os.fsync(f.fileno())
+    with telemetry.span("nck.rename"):
+        os.replace(tmp, path)  # atomic publish (fault tolerance)
+
+
+def _blobs_have_symbol_rans(blobs: List[bytes], codec: str,
+                            block_codecs: Optional[List[str]]) -> bool:
+    """Does any rans blob in this list carry the symbol-level (v2) blob
     format?  Old readers' rANS decoders cannot parse those bytes, so the
     file must not present itself as NCK1/NCK2."""
     from repro.kernels import rans
-    for bi, blob in enumerate(step.index_blocks):
-        if step.codec_for_block(bi) != "rans" or len(blob) < 5:
+    for bi, blob in enumerate(blobs):
+        c = block_codecs[bi] if block_codecs else codec
+        if c != "rans" or len(blob) < 5:
             continue
         if rans.blob_version(blob) == 2:
             return True
     return False
+
+
+def _has_symbol_blobs(step: CompressedStep) -> bool:
+    return _blobs_have_symbol_rans(step.index_blocks, step.codec,
+                                   step.block_codecs)
 
 
 def _pad(n: int) -> int:
@@ -135,37 +183,233 @@ class NCKWriter:
                        b"".join(step.index_blocks))
         self.add_array(f"{name}_incompressible_table", step.incomp_values)
 
-    def write(self, path: str):
+    def bump_format(self, version: int):
+        """Raise the file format floor (2: per-block codec ids, 3: symbol
+        rANS blobs) -- `add_step` does this itself; fragment writers that
+        assemble steps from raw variables declare it explicitly."""
+        self._format_version = max(self._format_version, version)
+
+    def _chunks(self) -> Iterable[bytes]:
         header = json.dumps({"dimensions": self._dims,
                              "variables": self._vars}).encode()
-        tmp = path + ".tmp"
         magic = {1: _MAGIC_V1, 2: _MAGIC_V2,
                  3: _MAGIC_V3}[self._format_version]
+        yield magic
+        yield struct.pack("<Q", len(header))
+        yield header
+        yield b"\0" * _pad(len(_MAGIC) + 8 + len(header))
+        for raw in self._sections:
+            yield raw
+            yield b"\0" * _pad(len(raw))
+
+    def write(self, path: str):
         with telemetry.span("nck.write", path=path,
                             sections=len(self._sections)):
-            with open(tmp, "wb") as f:
-                f.write(magic)
-                f.write(struct.pack("<Q", len(header)))
-                f.write(header)
-                f.write(b"\0" * _pad(len(_MAGIC) + 8 + len(header)))
-                for raw in self._sections:
-                    f.write(raw)
-                    f.write(b"\0" * _pad(len(raw)))
-                f.flush()
-                # durable BEFORE the rename publishes it
-                with telemetry.span("nck.fsync"):
-                    os.fsync(f.fileno())
-            with telemetry.span("nck.rename"):
-                os.replace(tmp, path)  # atomic publish (fault tolerance)
+            atomic_commit(path, self._chunks())
+
+
+# --------------------------------------------------------------------------
+# Multi-process tier: per-rank fragment files + rank-0 manifest.
+# --------------------------------------------------------------------------
+
+@dataclass
+class StepFragment:
+    """One process's contiguous slice of a CompressedStep (paper Sec.
+    IV-D: every rank writes its own blocks; nothing is gathered).
+
+    ``info`` carries the *global* step attributes every rank knows from
+    the replicated analyze outputs (n, shape, B, domain, codec, ...);
+    ``block_start`` anchors this fragment's blocks in the global block
+    order.  ``centers`` is set on rank 0 only -- it is replicated data,
+    so one copy per logical file suffices.
+    """
+
+    is_anchor: bool
+    block_start: int
+    info: dict
+    index_blocks: List[bytes] = field(default_factory=list)
+    centers: Optional[np.ndarray] = None
+    incomp_values: Optional[np.ndarray] = None
+    incomp_block_counts: Optional[np.ndarray] = None
+    block_codecs: Optional[List[str]] = None
+    # Driver telemetry (per-rank phase seconds etc.); never persisted --
+    # the rank file stores `info` attrs only, mirroring CompressedStep.
+    meta: dict = field(default_factory=dict)
+
+
+def rank_file_path(path: str, generation: int, rank: int) -> str:
+    """Per-rank NCK shard file name: ``<path>.g<gen>.rank<k>``.  The
+    generation suffix keeps a crashed save's partial output disjoint from
+    every published generation -- a mixed-generation file set can never
+    be referenced by one manifest."""
+    return f"{path}.g{generation:04d}.rank{rank}"
+
+
+def read_manifest(path: str) -> Optional[dict]:
+    """Parse an NCKM manifest at `path`; None when absent or not a
+    manifest (plain NCK data files return None)."""
+    try:
+        with open(path, "rb") as f:
+            if f.read(4) != _MANIFEST_MAGIC:
+                return None
+            (hlen,) = struct.unpack("<Q", f.read(8))
+            return json.loads(f.read(hlen))
+    except FileNotFoundError:
+        return None
+
+
+def next_generation(path: str) -> int:
+    """Generation for the next multi-process save at `path` (0 when no
+    manifest exists yet).  Every rank derives this from the same on-disk
+    state before any rank writes, so the fleet agrees without a
+    collective."""
+    m = read_manifest(path)
+    return int(m["generation"]) + 1 if m else 0
+
+
+def _gc_stale_generations(path: str, keep: int) -> None:
+    """Drop rank files of other generations after a successful publish
+    (they are unreferenced: the just-committed manifest is the only
+    reader entry point)."""
+    prefix = path + ".g"
+    for f in glob.glob(glob.escape(path) + ".g*.rank*"):
+        try:
+            gen = int(f[len(prefix):].split(".rank")[0])
+        except ValueError:
+            continue
+        if gen != keep:
+            try:
+                os.remove(f)
+            except OSError:
+                pass
+
+
+def write_manifest(path: str, generation: int, num_ranks: int,
+                   steps: List[str], *, timeout: float = 60.0,
+                   poll: float = 0.05) -> str:
+    """Rank 0's commit: wait for every rank file of this generation to be
+    published (rank files appear atomically, so existence == complete),
+    then atomically publish the manifest and GC stale generations.
+
+    A missing rank file (crashed rank) raises TimeoutError BEFORE the
+    manifest is touched: the previous generation's manifest and rank
+    files stay intact and loadable.
+    """
+    files = [rank_file_path(path, generation, r) for r in range(num_ranks)]
+    deadline = time.monotonic() + timeout
+    for f in files:
+        while not os.path.exists(f):
+            if time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"manifest commit for {path}: rank file "
+                    f"{os.path.basename(f)} missing after {timeout:.0f}s; "
+                    "previous manifest left intact")
+            time.sleep(poll)
+    entries = [{"rank": r, "file": os.path.basename(f),
+                "nbytes": os.path.getsize(f)}
+               for r, f in enumerate(files)]
+    payload = json.dumps({"schema": 1, "generation": int(generation),
+                          "num_ranks": int(num_ranks), "ranks": entries,
+                          "steps": list(steps)}).encode()
+    with telemetry.span("nck.manifest", path=path, ranks=num_ranks):
+        atomic_commit(path,
+                      _MANIFEST_MAGIC + struct.pack("<Q", len(payload))
+                      + payload)
+    _gc_stale_generations(path, generation)
+    return path
+
+
+class ShardNCKWriter:
+    """Per-process shard file writer: collects this rank's StepFragments
+    and publishes them as one normal NCK file (same magic matrix, same
+    atomic_commit discipline).  Rank 0 additionally commits the manifest
+    via `commit_manifest` once every rank's file is visible."""
+
+    def __init__(self, path: str, rank: int, num_ranks: int,
+                 generation: Optional[int] = None):
+        self.path = path
+        self.rank = rank
+        self.num_ranks = num_ranks
+        self.generation = (next_generation(path) if generation is None
+                           else generation)
+        self._w = NCKWriter()
+        self.steps: List[str] = []
+
+    @property
+    def rank_path(self) -> str:
+        return rank_file_path(self.path, self.generation, self.rank)
+
+    def add_fragment(self, name: str, frag: StepFragment):
+        info = dict(frag.info)
+        info["block_start"] = int(frag.block_start)
+        info["frag_blocks"] = len(frag.index_blocks)
+        info["frag_rank"] = self.rank
+        if frag.block_codecs is not None:
+            info["block_codecs"] = [str(c) for c in frag.block_codecs]
+            self._w.bump_format(2)
+        if _blobs_have_symbol_rans(frag.index_blocks,
+                                   info.get("codec", "zlib"),
+                                   frag.block_codecs):
+            self._w.bump_format(3)
+        sizes = np.array([len(b) for b in frag.index_blocks], np.int64)
+        offs = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+        counts = None
+        if not frag.is_anchor:
+            counts = (frag.incomp_block_counts
+                      if frag.incomp_block_counts is not None
+                      else np.zeros(len(frag.index_blocks), np.int64))
+            info["frag_n_incompressible"] = int(np.sum(counts))
+        self._w.add_array(f"{name}_frag_info", np.zeros(1, np.int32),
+                          attrs=info)
+        self._w.add_array(f"{name}_frag_index_table_offset", offs)
+        self._w.add_bytes(f"{name}_frag_index_table",
+                          b"".join(frag.index_blocks))
+        if not frag.is_anchor:
+            self._w.add_array(f"{name}_frag_incompressible_counts",
+                              np.asarray(counts, np.int64))
+            values = (frag.incomp_values if frag.incomp_values is not None
+                      else np.zeros(0, info.get("dtype", "float32")))
+            self._w.add_array(f"{name}_frag_incompressible_table", values)
+            if frag.centers is not None:
+                self._w.add_array(f"{name}_bin_centers",
+                                  frag.centers.astype(info["dtype"]))
+        self.steps.append(name)
+
+    def write(self) -> str:
+        """Atomically publish this rank's shard file; returns its path."""
+        self._w.write(self.rank_path)
+        return self.rank_path
+
+    def commit_manifest(self, *, timeout: float = 60.0) -> str:
+        """Rank 0 only: publish the manifest once all rank files exist."""
+        if self.rank != 0:
+            raise ValueError("only rank 0 commits the manifest")
+        return write_manifest(self.path, self.generation, self.num_ranks,
+                              self.steps, timeout=timeout)
 
 
 class NCKReader:
-    """Offset-based reader; `read` pulls only the requested byte range."""
+    """Offset-based reader; `read` pulls only the requested byte range.
+
+    Opening an NCKM manifest presents the per-rank shard files as one
+    logical file: `step_names`/`read_step`/`attrs`/`read_array` work
+    unchanged, with fragments merged back into CompressedSteps identical
+    to a single-process write.  A manifest referencing a missing or
+    truncated rank file is rejected at open with an error naming the
+    shard -- it never silently reads a partial save.
+    """
 
     def __init__(self, path: str):
         self.path = path
+        self.manifest: Optional[dict] = None
+        self._rank_readers: List["NCKReader"] = []
         with open(path, "rb") as f:
             magic = f.read(4)
+            if magic == _MANIFEST_MAGIC:
+                (hlen,) = struct.unpack("<Q", f.read(8))
+                self.manifest = json.loads(f.read(hlen))
+                self._open_ranks(path)
+                return
             if magic not in _MAGICS:
                 raise ValueError(f"{path}: not an NCK file")
             self.format_version = _MAGICS[magic]
@@ -175,11 +419,45 @@ class NCKReader:
         self.dimensions = header["dimensions"]
         self._data_start = 4 + 8 + hlen + _pad(4 + 8 + hlen)
 
+    # ------------------------------------------------- manifest handling
+    def _open_ranks(self, path: str):
+        base = os.path.dirname(os.path.abspath(path))
+        for e in self.manifest["ranks"]:
+            rp = os.path.join(base, e["file"])
+            if not os.path.exists(rp):
+                raise FileNotFoundError(
+                    f"manifest {path} references missing shard file "
+                    f"{e['file']} (rank {e['rank']}); the rank file set "
+                    "is incomplete")
+            size = os.path.getsize(rp)
+            if size != e["nbytes"]:
+                raise ValueError(
+                    f"manifest {path}: shard file {e['file']} is {size} "
+                    f"bytes, manifest recorded {e['nbytes']} (rank "
+                    f"{e['rank']} file was modified after commit)")
+            self._rank_readers.append(NCKReader(rp))
+        self.format_version = max(r.format_version
+                                  for r in self._rank_readers)
+        # Union view of the per-rank variable spaces (fragment names are
+        # disjoint across ranks except replicated extras like centers,
+        # where any copy serves).
+        self.variables = {}
+        self.dimensions = {}
+        self._var_owner: Dict[str, "NCKReader"] = {}
+        for r in self._rank_readers:
+            for v, rec in r.variables.items():
+                if v not in self.variables:
+                    self.variables[v] = rec
+                    self._var_owner[v] = r
+            self.dimensions.update(r.dimensions)
+
     def attrs(self, name: str) -> dict:
         return self.variables[name]["attributes"]
 
     def read(self, name: str, byte_start: int = 0,
              byte_stop: Optional[int] = None) -> bytes:
+        if self.manifest is not None:
+            return self._var_owner[name].read(name, byte_start, byte_stop)
         v = self.variables[name]
         stop = v["nbytes"] if byte_stop is None else min(byte_stop,
                                                          v["nbytes"])
@@ -192,8 +470,73 @@ class NCKReader:
         raw = self.read(name)
         return np.frombuffer(raw, dtype=v["dtype"]).reshape(v["shape"])
 
+    def _read_step_merged(self, name: str) -> CompressedStep:
+        """Merge one step's per-rank fragments (inverse of the
+        ShardNCKWriter tier): blocks, exception values and per-block
+        counts concatenate in global block order; replicated attrs come
+        from the lowest-ranked fragment.  The result is field-identical
+        to the same data written by a single process."""
+        frags = []
+        for r in self._rank_readers:
+            if f"{name}_frag_info" in r.variables:
+                frags.append((r.attrs(f"{name}_frag_info"), r))
+        if not frags:
+            raise KeyError(f"step {name} not present in any shard file "
+                           f"of manifest {self.path}")
+        frags.sort(key=lambda fr: fr[0]["block_start"])
+        info = frags[0][0]
+        blks: List[bytes] = []
+        for fi, r in frags:
+            offs = r.read_array(f"{name}_frag_index_table_offset")
+            table = r.read(f"{name}_frag_index_table")
+            blks += [table[offs[i]:offs[i + 1]]
+                     for i in range(len(offs) - 1)]
+        if info["is_anchor"]:
+            return CompressedStep(
+                n=info["total_data_num"], shape=tuple(info["shape"]),
+                dtype=info["dtype"], b_bits=0,
+                error_bound=info["error_bound"], strategy=info["strategy"],
+                reference=info["reference"], domain_lo=0.0, bin_width=0.0,
+                centers=np.zeros(0),
+                block_elems=info["elements_per_block"],
+                codec=info.get("codec", "zlib"), index_blocks=blks)
+        counts = np.concatenate(
+            [r.read_array(f"{name}_frag_incompressible_counts")
+             for _, r in frags]) if frags else np.zeros(0, np.int64)
+        values = np.concatenate(
+            [r.read_array(f"{name}_frag_incompressible_table")
+             for _, r in frags])
+        incomp_off = np.concatenate(
+            [[0], np.cumsum(counts)])[:-1].astype(np.int64)
+        # Per-block codec ids merge in block order; a uniform result
+        # collapses back to the step-level codec (format parity with the
+        # single-process writer).
+        per: List[str] = []
+        for fi, r in frags:
+            nb = fi["frag_blocks"]
+            per += (list(fi["block_codecs"]) if "block_codecs" in fi
+                    else [fi.get("codec", "zlib")] * nb)
+        block_codecs: Optional[List[str]] = None
+        codec = info.get("codec", "zlib")
+        if len(set(per)) > 1:
+            from repro.core.pipeline import _primary_codec
+            block_codecs, codec = per, _primary_codec(per)
+        return CompressedStep(
+            n=info["total_data_num"], shape=tuple(info["shape"]),
+            dtype=info["dtype"], b_bits=info["B"],
+            error_bound=info["error_bound"], strategy=info["strategy"],
+            reference=info["reference"], domain_lo=info["domain_lo"],
+            bin_width=info["bin_width"],
+            centers=self.read_array(f"{name}_bin_centers"
+                                    ).astype(np.float64),
+            block_elems=info["elements_per_block"], codec=codec,
+            block_codecs=block_codecs, index_blocks=blks,
+            incomp_values=values, incomp_block_offsets=incomp_off)
+
     def read_step(self, name: str) -> CompressedStep:
         """Inverse of NCKWriter.add_step."""
+        if self.manifest is not None:
+            return self._read_step_merged(name)
         if f"{name}_anchor" in self.variables:
             info = self.attrs(f"{name}_anchor_info")
             offs = self.read_array(f"{name}_anchor_offset")
@@ -226,13 +569,19 @@ class NCKReader:
                 f"{name}_incompressible_table_offset"))
 
     def step_names(self) -> List[str]:
+        if self.manifest is not None:
+            return sorted(set(self.manifest["steps"]))
         names = set()
         for v in self.variables:
             if v.endswith("_anchor_info"):
                 names.add(v[: -len("_anchor_info")])
+            elif v.endswith("_frag_info"):
+                names.add(v[: -len("_frag_info")])
             elif v.endswith("_info"):
                 names.add(v[: -len("_info")])
         return sorted(names)
 
 
-__all__ = ["NCKWriter", "NCKReader"]
+__all__ = ["NCKWriter", "NCKReader", "ShardNCKWriter", "StepFragment",
+           "atomic_commit", "write_manifest", "read_manifest",
+           "next_generation", "rank_file_path"]

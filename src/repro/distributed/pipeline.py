@@ -48,9 +48,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import binning, ratios, select_b
+from repro.core import binning, entropy, packing, ratios, select_b
 from repro.core import chain as chainmod
 from repro.core import pipeline as pipe
+from repro.core.container import ShardNCKWriter, StepFragment
 from repro.core.compress import decompress_step, device_entropy_route
 from repro.core.overlap import FinalizeQueue
 from repro.core.pipeline import DeviceEncoded
@@ -65,6 +66,19 @@ from repro.obs import telemetry
 
 def _pad_to(x: np.ndarray, total: int, value) -> np.ndarray:
     return np.pad(x, (0, total - x.size), constant_values=value)
+
+
+def _put_sharded(arr: np.ndarray, sharding):
+    """Host -> device upload honoring `sharding`, multi-process safe:
+    under a multi-process mesh only this process's addressable shards
+    materialize (make_array_from_callback); every process holds the same
+    host array (SPMD input), so the global array is consistent without
+    any cross-process transfer."""
+    if jax.process_count() == 1:
+        return jax.device_put(arr, sharding)
+    arr = np.asarray(arr)
+    return jax.make_array_from_callback(arr.shape, sharding,
+                                        lambda idx: arr[idx])
 
 
 def _analyze_shard(prev_l, curr_l, error_bound, *, max_bins, b_max,
@@ -97,8 +111,11 @@ def _analyze_shard(prev_l, curr_l, error_bound, *, max_bins, b_max,
     counts_desc, ids_desc = binning.sort_histogram(hist)
     b_auto, est_sizes = select_b.choose_b(counts_desc, n_total, elem_bytes,
                                           b_max)
-    return (b_auto[None], ids_desc[None], counts_desc[None],
-            domain_lo[None], width[None], est_sizes[None])
+    # Post-allreduce metadata is identical on every shard; replicated
+    # (P()) out_specs make it host-fetchable on EVERY process of a
+    # multi-process mesh (a P(axis) output's np.asarray would need a
+    # cross-process gather, which jax rightly refuses).
+    return (b_auto, ids_desc, counts_desc, domain_lo, width, est_sizes)
 
 
 def _encode_shard(prev_l, curr_l, ids_desc, domain_lo, width, *, b_bits,
@@ -106,9 +123,8 @@ def _encode_shard(prev_l, curr_l, ids_desc, domain_lo, width, *, b_bits,
                   use_pallas):
     """Per-shard phase 3-5: index, align (ppermute), pack (Pallas)."""
     marker = (1 << b_bits) - 1
-    ids_desc = ids_desc[0]
-    _, bin_ids = kops.change_ratio_bins(prev_l, curr_l, domain_lo[0],
-                                        width[0], max_bins=max_bins,
+    _, bin_ids = kops.change_ratio_bins(prev_l, curr_l, domain_lo,
+                                        width, max_bins=max_bins,
                                         use_pallas=use_pallas)
     lut = binning.rank_lut(ids_desc[:k_eff], k_eff, max_bins)
     ranks = lut[jnp.clip(bin_ids, 0, max_bins - 1)]
@@ -203,7 +219,7 @@ class ShardedCompressor:
                         fixed_domain=p.fixed_domain),
                 mesh=self.mesh,
                 in_specs=(P(self.axis), P(self.axis), P()),
-                out_specs=(P(self.axis),) * 6, check_rep=False)
+                out_specs=(P(),) * 6, check_rep=False)
             self._analyze_fns[key] = jax.jit(fn)
         return self._analyze_fns[key]
 
@@ -217,7 +233,7 @@ class ShardedCompressor:
                         n_total=n, axis=self.axis,
                         use_pallas=self.use_pallas),
                 mesh=self.mesh,
-                in_specs=(P(self.axis),) * 5,
+                in_specs=(P(self.axis), P(self.axis), P(), P(), P()),
                 out_specs=(P(self.axis),) * 3, check_rep=False)
             self._encode_fns[key] = jax.jit(fn)
         return self._encode_fns[key]
@@ -319,9 +335,8 @@ class ShardedCompressor:
             prev_dev = prev
         else:
             prev_f = np.asarray(prev, np.float32).reshape(-1)
-            prev_dev = jax.device_put(_pad_to(prev_f, P_ * ln, 0.0),
-                                      sharded)
-        curr_dev = jax.device_put(_pad_to(curr_f, P_ * ln, 0.0), sharded)
+            prev_dev = _put_sharded(_pad_to(prev_f, P_ * ln, 0.0), sharded)
+        curr_dev = _put_sharded(_pad_to(curr_f, P_ * ln, 0.0), sharded)
         ebytes = np.dtype(np.asarray(curr).dtype).itemsize
 
         analyze = self._analyze_fn(ebytes, n)
@@ -332,9 +347,8 @@ class ShardedCompressor:
             (b_auto, ids_desc, counts_desc, domain_lo, width,
              est_sizes) = analyze(prev_dev, curr_dev,
                                   jnp.float32(p.error_bound))
-            # Out specs are sharded over P copies of identical values;
-            # take row 0.
-            b_auto = int(np.asarray(b_auto)[0])
+            # Replicated out specs: every process holds the full value.
+            b_auto = int(np.asarray(b_auto))
         bb = int(b_bits if b_bits is not None
                  else (p.b_bits if p.b_bits is not None else b_auto))
         k_eff = min((1 << bb) - 1, p.max_bins)
@@ -400,13 +414,13 @@ class ShardedCompressor:
                                   entropy_codec=coded_name,
                                   exc_positions=exc_pos,
                                   exc_block_counts=exc_counts)
-        domain_lo = float(np.asarray(domain_lo)[0])
-        width = float(np.asarray(width)[0])
-        centers = pipe.topk_centers(np.asarray(ids_desc)[0], k_eff,
+        domain_lo = float(np.asarray(domain_lo))
+        width = float(np.asarray(width))
+        centers = pipe.topk_centers(np.asarray(ids_desc), k_eff,
                                     domain_lo, width)
         centers = pipe.round_centers(centers, np.asarray(curr).dtype)
         meta = {"b_auto": b_auto,
-                "est_sizes": np.asarray(est_sizes)[0].tolist(),
+                "est_sizes": np.asarray(est_sizes).tolist(),
                 "n_shards": self.n_shards, "pipeline": "sharded"}
         if telemetry.enabled():
             # Same driver-timing keys as the single-device encode_device;
@@ -600,7 +614,7 @@ class _ShardedDeviceChain(chainmod.ReferenceChain):
                           ).reshape(-1)
         ln = -(-flat.size // d.n_shards)
         sharded, _ = d._shardings()
-        return jax.device_put(_pad_to(flat, d.n_shards * ln, 0.0), sharded)
+        return _put_sharded(_pad_to(flat, d.n_shards * ln, 0.0), sharded)
 
     def seed(self, arr) -> None:
         arr = np.asarray(arr)
@@ -617,8 +631,10 @@ class _ShardedDeviceChain(chainmod.ReferenceChain):
     def advance(self, dev: DeviceEncoded, curr) -> None:
         bb = dev.enc.b_bits
         # Exact cast: centers are a f64 view of dtype-rounded values.
-        centers = jnp.asarray(
-            np.asarray(dev.centers).astype(self._state.dtype))[None]
+        # Host numpy (not a committed local jax.Array): jit replicates it
+        # per the P() in_spec, which stays valid under multi-process
+        # meshes where a single-device-committed array would not.
+        centers = np.asarray(dev.centers).astype(self._state.dtype)[None]
         # dev.curr_dev is the encode stages' f32 copy; a float64 chain
         # (x64) must patch exceptions from the source-precision values.
         curr_dev = (dev.curr_dev if self._state.dtype == jnp.float32
@@ -850,4 +866,358 @@ class ShardedDecompressor:
         return res
 
 
-__all__ = ["ShardedCompressor", "ShardedDecompressor"]
+def _addressable_rows(arr) -> Tuple[int, np.ndarray]:
+    """This process's contiguous rows of an axis-0-sharded array: (global
+    row start, stacked host copy).  Only addressable shards are fetched,
+    so no payload bytes ever cross processes -- a non-addressable fetch
+    is structurally impossible here (jax raises on it)."""
+    shards = sorted(arr.addressable_shards,
+                    key=lambda s: s.index[0].start or 0)
+    datas = [np.asarray(s.data) for s in shards]
+    starts = [s.index[0].start or 0 for s in shards]
+    for i in range(len(starts) - 1):
+        if starts[i] + datas[i].shape[0] != starts[i + 1]:
+            raise ValueError("addressable shards of one process must be "
+                             "contiguous on the mesh axis")
+    return int(starts[0]), np.concatenate(datas, axis=0)
+
+
+class MultiProcessCompressor(ShardedCompressor):
+    """Multi-process NUMARCK: the shard_map stages run unchanged over the
+    global (cross-process) mesh; each process then writes ONLY its own
+    blocks (paper Sec. IV-D collective write analogue).
+
+    Differences from the single-process `ShardedCompressor` path:
+
+      * the packed index blocks are fetched per-process from the
+        *addressable* shards only -- payload bytes never cross hosts;
+      * exceptions are recovered per-rank by unpacking the rank's own
+        packed blocks (the device exception compaction would be a global
+        fetch) and gathering values from the host-resident input;
+      * the entropy stage runs on each host over its own blocks;
+      * output is a `StepFragment` per step per rank, published as a
+        ``<path>.g<gen>.rank<k>`` NCK shard file plus a rank-0 NCKM
+        manifest (`save_series`).
+
+    Blobs are byte-identical to the single-process driver for every
+    concrete codec; ``codec="auto"`` may legitimately pick different
+    per-block codecs (its lzma budget is a *global* payload bound the
+    ranks cannot see) and is therefore only split-identical, not
+    byte-identical.  The temporal reference chain must be mesh-resident
+    (the host chain would need a global index fetch).
+    """
+
+    def __init__(self, mesh: Mesh, axis: str = "data",
+                 params: NumarckParams = NumarckParams(),
+                 use_pallas: bool = True, overlap: bool = False,
+                 chain: str = chainmod.CHAIN_AUTO):
+        super().__init__(mesh, axis, params, use_pallas=use_pallas,
+                         overlap=overlap, chain=chain)
+        if params.symbol_rans:
+            raise ValueError("symbol-level rANS blobs come from the device "
+                             "entropy stage; the multi-process driver "
+                             "entropy-codes per host (set symbol_rans="
+                             "False)")
+        if chain == chainmod.CHAIN_HOST:
+            raise ValueError("multi-process compression needs the mesh-"
+                             "resident reference chain (chain='host' "
+                             "would gather the index table)")
+        import jax as _jax
+        self.rank = _jax.process_index()
+        self.num_ranks = _jax.process_count()
+        pidx = [d.process_index for d in self.mesh.devices.flat]
+        mine = [i for i, pi in enumerate(pidx) if pi == self.rank]
+        if mine != list(range(mine[0], mine[0] + len(mine))):
+            raise ValueError("one process's devices must be contiguous on "
+                             "the mesh axis (use launch.global_mesh)")
+
+    def _make_chain(self, dtype) -> chainmod.ReferenceChain:
+        if (chainmod.resolve_residency(self.chain, dtype)
+                != chainmod.CHAIN_DEVICE):
+            raise ValueError(
+                f"multi-process compression of {np.dtype(dtype)} needs "
+                "the device-resident chain (float64 requires "
+                "jax_enable_x64)")
+        return _ShardedDeviceChain(self)
+
+    # ------------------------------------------------- local device stage
+    def _device_encode_local(self, prev, curr: np.ndarray,
+                             b_bits: Optional[int] = None):
+        """Phases 1-5 on the global mesh; fetches only this process's
+        packed blocks.  Returns (DeviceEncoded for the chain, local
+        payload dict for the fragment finalize)."""
+        p = self.params
+        curr_np = np.asarray(curr)
+        curr_f = np.asarray(curr_np, np.float32).reshape(-1)
+        n = curr_f.size
+        if n >= (1 << 31):
+            raise ValueError("per-variable n >= 2^31 needs jax_enable_x64 "
+                             "(see pipeline offset note)")
+        P_ = self.n_shards
+        ln = -(-n // P_)
+        sharded, _ = self._shardings()
+        if isinstance(prev, jax.Array):
+            if prev.shape != (P_ * ln,):
+                raise ValueError(
+                    f"device-resident chain state {prev.shape} does not "
+                    f"match this step's padded layout ({P_ * ln},); "
+                    "reset() the compressor before changing shapes")
+            prev_dev = prev
+        else:
+            prev_f = np.asarray(prev, np.float32).reshape(-1)
+            prev_dev = _put_sharded(_pad_to(prev_f, P_ * ln, 0.0), sharded)
+        curr_dev = _put_sharded(_pad_to(curr_f, P_ * ln, 0.0), sharded)
+        ebytes = np.dtype(curr_np.dtype).itemsize
+
+        analyze = self._analyze_fn(ebytes, n)
+        with telemetry.span("encode.analyze", annotate=True, n=n) as sp_an:
+            (b_auto, ids_desc, counts_desc, domain_lo, width,
+             est_sizes) = analyze(prev_dev, curr_dev,
+                                  jnp.float32(p.error_bound))
+            b_auto = int(np.asarray(b_auto))
+        bb = int(b_bits if b_bits is not None
+                 else (p.b_bits if p.b_bits is not None else b_auto))
+        k_eff = min((1 << bb) - 1, p.max_bins)
+        be = p.block_elems(bb)
+        if be > ln:
+            be = max(32, ln // 32 * 32) if ln >= 32 else 32
+            if be > ln:
+                raise ValueError(
+                    f"shard length {ln} smaller than minimum block (32); "
+                    "use fewer shards or larger inputs")
+
+        encode = self._encode_fn(bb, k_eff, be, ln, n)
+        with telemetry.span("encode.index", annotate=True,
+                            b_bits=bb) as sp_idx:
+            idx_dev, packed, valid = encode(prev_dev, curr_dev,
+                                            ids_desc, domain_lo, width)
+            if telemetry.enabled():
+                jax.block_until_ready((idx_dev, packed, valid))
+
+        nblocks = -(-n // be)
+        with telemetry.span("encode.pack_fetch") as sp_pack:
+            r0, words = _addressable_rows(packed)
+            _, valid_rows = _addressable_rows(valid)
+            nrows, nbmax = words.shape[0], words.shape[1]
+            words = words.reshape(nrows * nbmax, -1)
+            local_words = words[np.asarray(valid_rows).reshape(-1)]
+        first_blk = lambda s: -(-(s * ln) // be)          # noqa: E731
+        block_start = min(first_blk(r0), nblocks)
+        block_stop = min(first_blk(r0 + nrows), nblocks)
+        if local_words.shape[0] != block_stop - block_start:
+            raise AssertionError(
+                f"rank {self.rank}: fetched {local_words.shape[0]} valid "
+                f"blocks, layout says [{block_start}, {block_stop})")
+
+        domain_lo = float(np.asarray(domain_lo))
+        width = float(np.asarray(width))
+        centers = pipe.topk_centers(np.asarray(ids_desc), k_eff,
+                                    domain_lo, width)
+        centers = pipe.round_centers(centers, curr_np.dtype)
+        meta = {"b_auto": b_auto,
+                "est_sizes": np.asarray(est_sizes).tolist(),
+                "n_shards": self.n_shards, "rank": self.rank,
+                "num_ranks": self.num_ranks, "pipeline": "multiprocess"}
+        if telemetry.enabled():
+            meta["telemetry"] = {
+                "analyze_s": sp_an.duration,
+                "encode_s": sp_idx.duration + sp_pack.duration,
+            }
+        enc = pipe.EncodedIndices(idx=None, b_bits=bb, block_elems=be, n=n)
+        dev = DeviceEncoded(enc=enc, centers=centers, domain_lo=domain_lo,
+                            width=width, meta=meta, idx_dev=idx_dev,
+                            curr_dev=curr_dev)
+        local = {"words": local_words, "block_start": block_start,
+                 "nblocks": nblocks}
+        return dev, local
+
+    # ------------------------------------------------------ host finalize
+    def _fragment_finalize(self, curr: np.ndarray, dev: DeviceEncoded,
+                           local: dict) -> StepFragment:
+        """Per-rank finalize: exceptions recovered by unpacking this
+        rank's own packed blocks, host entropy over the same blocks.
+        Block-for-block byte-identical to `core.pipeline.finalize_step`
+        on the concatenated fragments (concrete codecs)."""
+        p = self.params
+        curr = np.asarray(curr)
+        bb, be, n = dev.enc.b_bits, dev.enc.block_elems, int(dev.enc.n)
+        marker = (1 << bb) - 1
+        nbytes_block = be * bb // 8
+        words = local["words"]
+        g0 = int(local["block_start"])
+        meta = dict(dev.meta)
+        drv_tele = meta.pop("telemetry", None) or {}
+        with telemetry.span("finalize", n=n, b_bits=bb) as sp_fin:
+            with telemetry.span("finalize.exceptions") as sp_exc:
+                curr_flat = curr.reshape(-1)
+                counts = np.zeros(words.shape[0], np.int64)
+                vals = []
+                for j in range(words.shape[0]):
+                    idx_blk = packing.unpack_indices_np(
+                        words[j].astype("<u4").view(np.uint8), be, bb)
+                    pos = np.flatnonzero(idx_blk == marker) + (g0 + j) * be
+                    pos = pos[pos < n]       # final-block marker padding
+                    counts[j] = pos.size
+                    vals.append(curr_flat[pos])
+                values = (np.concatenate(vals) if vals
+                          else np.zeros(0, curr.dtype)
+                          ).astype(curr.dtype, copy=False)
+            block_codecs: Optional[List[str]] = None
+            with telemetry.span("finalize.entropy") as sp_ent:
+                raws = [w.astype("<u4").tobytes()[:nbytes_block]
+                        for w in words]
+                if p.codec == entropy.AUTO_CODEC and len(raws) > 1:
+                    per = entropy.choose_block_codecs(raws, p.zlib_level)
+                    if len(set(per)) > 1:
+                        codec = pipe._primary_codec(per)
+                        block_codecs = per
+                        blks = entropy.compress_blocks_per_codec(
+                            raws, per, level=p.zlib_level,
+                            parallel=p.parallel_entropy)
+                    else:
+                        codec = per[0]
+                        blks = entropy.compress_blocks(
+                            raws, codec=codec, level=p.zlib_level,
+                            parallel=p.parallel_entropy)
+                else:
+                    codec = entropy.resolve_codec(p.codec, raws,
+                                                  p.zlib_level)
+                    blks = entropy.compress_blocks(
+                        raws, codec=codec, level=p.zlib_level,
+                        parallel=p.parallel_entropy)
+                sp_ent.set(codec=codec, blocks=len(blks))
+            centers = dev.centers
+            if centers.size > marker:
+                centers = centers[:marker]
+            bytes_in = len(raws) * nbytes_block
+            bytes_out = sum(len(b) for b in blks)
+            sp_fin.set(codec=codec, bytes_in=bytes_in, bytes_out=bytes_out)
+        info = dict(
+            total_data_num=n, shape=list(curr.shape), dtype=str(curr.dtype),
+            bin_centers_number=int(centers.size), elements_per_block=be,
+            B=bb, error_bound=p.error_bound, strategy=p.strategy,
+            reference=p.reference, domain_lo=dev.domain_lo,
+            bin_width=dev.width, is_anchor=False,
+            n_blocks=int(local["nblocks"]), codec=codec)
+        frag = StepFragment(
+            is_anchor=False, block_start=g0, info=info, index_blocks=blks,
+            centers=centers if self.rank == 0 else None,
+            incomp_values=values, incomp_block_counts=counts,
+            block_codecs=block_codecs)
+        if telemetry.enabled():
+            meta["telemetry"] = {
+                "analyze_s": float(drv_tele.get("analyze_s", 0.0)),
+                "encode_s": float(drv_tele.get("encode_s", 0.0)),
+                "exceptions_s": sp_exc.duration,
+                "entropy_s": sp_ent.duration,
+                "finalize_s": sp_fin.duration,
+                "bytes_in": bytes_in, "bytes_out": bytes_out,
+                "entropy_ratio": bytes_in / max(bytes_out, 1),
+                "codec": codec, "device_entropy": False,
+            }
+        frag.meta = meta
+        return frag
+
+    def _anchor_fragment(self, arr: np.ndarray) -> StepFragment:
+        """Lossless anchor, split by block index: rank k owns the global
+        anchor blocks [k*nb/R, (k+1)*nb/R) of the same block grid the
+        single-process `finalize_anchor` uses, so per-block bytes match
+        it exactly (blocks compress independently)."""
+        p = self.params
+        arr = np.asarray(arr)
+        flat = arr.reshape(-1)
+        be_a = max(1, p.block_bytes // flat.dtype.itemsize)
+        slices = pipe.block_slices(flat.size, be_a)
+        nb = len(slices)
+        g_lo = self.rank * nb // self.num_ranks
+        g_hi = (self.rank + 1) * nb // self.num_ranks
+        with telemetry.span("finalize.anchor", n=arr.size) as sp:
+            raws = [flat[s:e].tobytes() for s, e in slices[g_lo:g_hi]]
+            codec = entropy.resolve_codec(p.codec, raws, p.zlib_level)
+            blks = entropy.compress_blocks(raws, codec=codec,
+                                           level=p.zlib_level,
+                                           parallel=p.parallel_entropy)
+            sp.set(codec=codec)
+        info = dict(
+            total_data_num=arr.size, shape=list(arr.shape),
+            dtype=str(arr.dtype), bin_centers_number=0,
+            elements_per_block=be_a, B=0, error_bound=p.error_bound,
+            strategy=p.strategy, reference=p.reference, domain_lo=0.0,
+            bin_width=0.0, is_anchor=True, n_blocks=nb, codec=codec)
+        frag = StepFragment(is_anchor=True, block_start=g_lo, info=info,
+                            index_blocks=blks)
+        if telemetry.enabled():
+            bytes_in = sum(len(r) for r in raws)
+            bytes_out = sum(len(b) for b in blks)
+            frag.meta["telemetry"] = {
+                "analyze_s": 0.0, "encode_s": 0.0, "exceptions_s": 0.0,
+                "entropy_s": sp.duration, "finalize_s": sp.duration,
+                "bytes_in": bytes_in, "bytes_out": bytes_out,
+                "entropy_ratio": bytes_in / max(bytes_out, 1),
+                "codec": codec, "device_entropy": False,
+            }
+        return frag
+
+    # ------------------------------------------------- temporal streaming
+    def add_fragment_async(self, arr: np.ndarray) -> "Future[StepFragment]":
+        """Streaming multi-process interface: like `add_async`, but the
+        future resolves to this rank's StepFragment (first call seeds the
+        chain and fragments a lossless anchor)."""
+        arr = np.asarray(arr)
+        step_i, self._step = self._step, self._step + 1
+        if self._chain is None or self._chain.empty:
+            self._chain = self._make_chain(arr.dtype)
+            self._chain.seed(arr)
+            return self._q.submit(self._anchor_fragment, arr.copy(),
+                                  label=f"anchor fragment {step_i}")
+        dev, local = self._device_encode_local(self._chain.peek(), arr)
+        if self.params.reference == REF_RECONSTRUCTED:
+            self._chain.advance(dev, arr)
+        else:
+            self._chain.replace(arr)
+        curr_s = np.array(arr, copy=True) if self.overlap else arr
+        return self._q.submit(self._fragment_finalize, curr_s, dev, local,
+                              label=f"fragment step {step_i}")
+
+    def add_fragment(self, arr: np.ndarray) -> StepFragment:
+        return self.add_fragment_async(arr).result()
+
+    def compress_series_fragments(self, arrays) -> List[StepFragment]:
+        """This rank's fragments of a temporal series (double-buffered
+        when overlap=True), device work in lockstep across ranks."""
+        self.reset()
+        out: List[StepFragment] = []
+        futs: Deque[Future] = deque()
+        for a in arrays:
+            futs.append(self.add_fragment_async(a))
+            while len(futs) > 2:
+                out.append(futs.popleft().result())
+        out.extend(f.result() for f in futs)
+        return out
+
+    def save_series(self, path: str, arrays, names=None, *,
+                    generation: Optional[int] = None,
+                    manifest_timeout: float = 60.0) -> str:
+        """Compress a series and publish it multi-process: every rank
+        writes its own ``<path>.g<gen>.rank<k>`` shard file (atomic),
+        rank 0 waits for the full file set and commits the NCKM
+        manifest.  Returns the manifest path on rank 0, this rank's
+        shard path elsewhere.  `NCKReader(path)` then reads the logical
+        file; a crashed rank leaves the previous manifest loadable."""
+        frags = self.compress_series_fragments(arrays)
+        names = (list(names) if names is not None
+                 else [f"step{i:04d}" for i in range(len(frags))])
+        if len(names) != len(frags):
+            raise ValueError(f"{len(names)} names for {len(frags)} steps")
+        w = ShardNCKWriter(path, self.rank, self.num_ranks,
+                           generation=generation)
+        for name, frag in zip(names, frags):
+            w.add_fragment(name, frag)
+        w.write()
+        if self.rank == 0:
+            return w.commit_manifest(timeout=manifest_timeout)
+        return w.rank_path
+
+
+__all__ = ["ShardedCompressor", "ShardedDecompressor",
+           "MultiProcessCompressor"]

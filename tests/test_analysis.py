@@ -226,6 +226,27 @@ def test_baseline_missing_file_is_empty():
     assert baseline_mod.load("/nonexistent/baseline.json") == []
 
 
+# --------------------------------------------------------- format closure
+
+def test_format_closure_flags_unsanctioned_renames():
+    # os.replace/os.rename outside atomic_commit (the fsync-before-rename
+    # helper) are flagged; the helper's own rename is sanctioned.
+    vs = run_rule("format-closure", "bad_publish.py")
+    assert lines_of(vs) == [18, 22]
+    assert {v.scope for v in vs} == {"sloppy_publish", "sloppy_rename"}
+    assert all("atomic_commit" in v.message for v in vs)
+
+
+def test_format_closure_manifest_magic_is_closed():
+    # The committed container: _MANIFEST_MAGIC (NCKM) has a reader branch
+    # and a test fixture, so the sub-check stays silent on the repo.
+    project = load_project(
+        [os.path.join(REPO_ROOT, "src", "repro", "core", "container.py")],
+        root=REPO_ROOT)
+    vs = get_pass("format-closure")().run(project)
+    assert not [v for v in vs if "_MANIFEST_MAGIC" in v.message], vs
+
+
 # ------------------------------------------------------------------- CLI
 
 def test_cli_repo_is_clean_against_committed_baseline(capsys):
