@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dist test-multiproc lint bench-entropy \
+.PHONY: test test-fast test-dist test-multiproc test-faults lint bench-entropy \
 	bench-entropy-smoke bench-chain bench bench-all bench-all-smoke \
 	bench-check
 
@@ -41,6 +41,14 @@ test-dist:
 # and are independent of the in-process device count.
 test-multiproc:
 	$(PY) -m pytest -q tests/test_multiprocess.py
+
+# Fault-tolerance tier: corruption fuzz over NCK1/2/3/4 + NCKM (every
+# flip/truncation must raise a structured IntegrityError), the
+# REPRO_FAULTS injection registry, the self-healing manifest commit
+# (quarantine / rollback / convergence), and the injected-fleet tests.
+# See docs/robustness.md.
+test-faults:
+	$(PY) -m pytest -q tests/test_faults.py
 
 # Entropy stage: serial vs parallel host codecs across block sizes, plus
 # the device rANS codec vs the threaded-zlib finalize at 1/16/64 MB.

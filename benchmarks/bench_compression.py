@@ -81,6 +81,10 @@ def run(datasets=("sedov", "stir", "asr", "cmip"),
         t_zl, blob_l = timeit(zlib_lossless.compress, curr, repeat=1)
         rows.append((f"fig9_12_cr_zlib_{name}", t_zl * 1e6,
                      f"CR={nbytes/blob_l.nbytes:.2f} ME=0"))
+    # --- robustness: NCK4 checksum-frame overhead (PR 10) ---------------
+    # Unconditional so the smoke subset keeps the rows and bench-check
+    # gates them against the committed artifact.
+    rows.extend(run_checksum_overhead())
     if include_sharded:
         rows.extend(run_sharded_overlap())
     if include_chain:
@@ -88,6 +92,49 @@ def run(datasets=("sedov", "stir", "asr", "cmip"),
         # overlap on/off) -- the ReferenceChain refactor, measured.
         from benchmarks import bench_chain
         rows.extend(bench_chain.run())
+    return rows
+
+
+def run_checksum_overhead() -> list:
+    """Container write+read with the NCK4 checksum frame on vs off
+    (``NCKWriter(checksums=...)``), same compressed payload both ways.
+    The delta is the pure crc32 cost of the integrity layer
+    (docs/robustness.md): one digest pass over the payload each way,
+    clearly visible on raw container reads (no entropy decode here) and
+    amortized to noise in decode-dominated workloads."""
+    import tempfile
+
+    from repro.core import compress_series
+    from repro.core.container import NCKReader, NCKWriter
+
+    rng = np.random.default_rng(23)
+    n = 1 << 20                                   # 4 MB/step float32
+    a = rng.normal(1.0, 0.5, n).astype(np.float32)
+    b = (a * (1 + 0.01 * rng.standard_normal(n))).astype(np.float32)
+    steps = compress_series([a, b], NumarckParams(error_bound=E))
+    payload = float(sum(s.nbytes for s in steps))
+
+    rows: list[Row] = []
+    with tempfile.TemporaryDirectory() as d:
+        for label, checksums in (("checksum_on", True),
+                                 ("checksum_off", False)):
+            path = os.path.join(d, f"{label}.nck")
+
+            def write():
+                w = NCKWriter(checksums=checksums)
+                for i, s in enumerate(steps):
+                    w.add_step(f"step{i:04d}", s)
+                w.write(path)
+
+            def read():
+                r = NCKReader(path)
+                return [r.read_step(nm) for nm in r.step_names()]
+
+            t_w, _ = timeit(write, repeat=3)
+            t_r, _ = timeit(read, repeat=3)
+            rows.append((f"robustness/{label}", (t_w + t_r) * 1e6,
+                         f"write_MBps={payload/t_w/1e6:.0f} "
+                         f"read_MBps={payload/t_r/1e6:.0f}"))
     return rows
 
 

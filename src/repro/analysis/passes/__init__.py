@@ -11,3 +11,4 @@ from repro.analysis.passes import dtype_hazards      # noqa: F401
 from repro.analysis.passes import format_closure     # noqa: F401
 from repro.analysis.passes import host_sync          # noqa: F401
 from repro.analysis.passes import jit_cache          # noqa: F401
+from repro.analysis.passes import retry_discipline   # noqa: F401

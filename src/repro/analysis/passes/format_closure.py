@@ -106,6 +106,7 @@ class FormatClosurePass(LintPass):
         if csf is not None:
             self._check_magics(csf, project)
             self._check_manifest_magic(csf, project)
+            self._check_checksum_frame(csf, project)
         rsf = project.by_rel("src/repro/kernels/rans.py")
         if rsf is not None:
             self._check_blob_versions(rsf)
@@ -276,6 +277,66 @@ class FormatClosurePass(LintPass):
             self.emit(sf, 1, f"manifest magic `_MANIFEST_MAGIC` ({token}) "
                       "has no test fixture exercising it",
                       scope="<module>")
+
+    # -------------------------------------------- NCK4 checksum closure
+    def _check_checksum_frame(self, sf: SourceFile,
+                              project: Project) -> None:
+        """The NCK4 checksum frame joins the writer/reader/test closure:
+        when `_MAGIC_V4` exists, the `_CRC_KEY` / `_BLOCK_CRC_KEY`
+        record keys must each have a writer site (subscript store or
+        dict-literal key), a reader site (load / `.get` / membership
+        test), and a test exercising the literal key string -- a digest
+        that is stamped but never verified (or vice versa) is an open
+        frame."""
+        consts = _module_str_assigns(sf)
+        if "_MAGIC_V4" not in consts:
+            return
+        keys = [k for k in ("_CRC_KEY", "_BLOCK_CRC_KEY") if k in consts]
+        for want in ("_CRC_KEY", "_BLOCK_CRC_KEY"):
+            if want not in consts:
+                self.emit(sf, 1, f"NCK4 exists but checksum key constant "
+                          f"`{want}` is not defined", scope="<module>")
+        written: Set[str] = set()
+        read: Set[str] = set()
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Subscript) \
+                    and isinstance(node.slice, ast.Name) \
+                    and node.slice.id in keys:
+                if isinstance(node.ctx, ast.Store):
+                    written.add(node.slice.id)
+                else:
+                    read.add(node.slice.id)
+            elif isinstance(node, ast.Dict):
+                for k in node.keys:
+                    if isinstance(k, ast.Name) and k.id in keys:
+                        written.add(k.id)
+            elif isinstance(node, ast.Call):
+                cn = call_name(node) or ""
+                if cn.endswith(".get"):
+                    for a in node.args:
+                        if isinstance(a, ast.Name) and a.id in keys:
+                            read.add(a.id)
+            elif isinstance(node, ast.Compare):
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Name) and sub.id in keys:
+                        read.add(sub.id)
+        for name in keys:
+            if name not in written:
+                self.emit(sf, 1, f"checksum key `{name}` is never stamped "
+                          "by a writer (no store site)", scope="<module>")
+            if name not in read:
+                self.emit(sf, 1, f"checksum key `{name}` is never verified "
+                          "by a reader (no load site)", scope="<module>")
+        tests_text = ""
+        for path in project.iter_tree_files("tests"):
+            with open(path, "r", encoding="utf-8") as fh:
+                tests_text += fh.read()
+        for name in keys:
+            token = consts[name].decode("ascii", "replace")
+            if tests_text and f'"{token}"' not in tests_text:
+                self.emit(sf, 1, f"checksum key `{name}` (\"{token}\") has "
+                          "no test fixture exercising it",
+                          scope="<module>")
 
     def _check_atomic_publish(self, sf: SourceFile) -> None:
         for node in ast.walk(sf.tree):

@@ -83,6 +83,8 @@ class CheckpointManager:
         self.compress = compress
         self.async_save = async_save
         self.exempt = exempt_substrings
+        # Populated by restore_latest: steps it had to skip and why.
+        self.last_restore_report: List[Dict] = []
         self.chain = chain
         os.makedirs(directory, exist_ok=True)
         # One ReferenceChain per tensor path: the prev->recon state every
@@ -272,9 +274,15 @@ class CheckpointManager:
                        ) -> Optional[Tuple[int, Any]]:
         """(step, tree) from the newest valid checkpoint; walks back past
         corrupt files.  With `template`, leaves are reshaped/cast onto the
-        template pytree (elastic restore does its resharding there)."""
+        template pytree (elastic restore does its resharding there).
+
+        Every skipped (corrupt/missing) step is recorded in
+        ``last_restore_report`` -- a list of ``{"step", "error"}`` dicts
+        -- so a restore that silently walked past damage is still
+        auditable after the fact."""
         self.wait()                      # drain in-flight async saves
         m = self._read_manifest()
+        self.last_restore_report: List[Dict] = []
         for step in reversed(m["steps"]):
             try:
                 flat = self._load_flat(step, m)
@@ -283,7 +291,9 @@ class CheckpointManager:
                 self._save_count = len(
                     [s for s in m["steps"] if s <= step])
                 return step, self._unflatten(flat, template)
-            except Exception:  # noqa: BLE001 -- corrupt/missing: walk back
+            except Exception as e:  # noqa: BLE001 -- corrupt/missing: walk back
+                self.last_restore_report.append(
+                    {"step": int(step), "error": f"{type(e).__name__}: {e}"})
                 continue
         return None
 

@@ -35,6 +35,7 @@ from repro.core import chain as chainmod
 from repro.core import pipeline as pipe
 from repro.core.overlap import FinalizeQueue
 from repro.core.pipeline import DeviceEncoded
+from repro.faults.errors import IntegrityError
 from repro.kernels import ops as kops
 from repro.kernels import rans
 from repro.obs import telemetry
@@ -102,7 +103,16 @@ def decode_anchor(step: CompressedStep) -> np.ndarray:
         else:
             raw = b"".join(entropy.decompress_blocks(step.index_blocks,
                                                      step.codec))
-    out = np.frombuffer(raw, dtype=step.dtype).reshape(step.shape).copy()
+    try:
+        out = np.frombuffer(raw, dtype=step.dtype).reshape(step.shape).copy()
+    except ValueError as e:
+        # Blocks inflated "successfully" but to the wrong total size:
+        # corruption the codec stream itself could not detect.
+        raise IntegrityError(
+            f"anchor decode produced {len(raw)} bytes, expected "
+            f"{step.n * np.dtype(step.dtype).itemsize} for shape "
+            f"{tuple(step.shape)} {step.dtype} ({e}) -- payload corrupt "
+            "or truncated") from e
     if tele:
         _record_read(step, entropy_s=sp_e.duration,
                      device=device_decode_route(step))

@@ -30,7 +30,23 @@ open instead of mis-decoding blocks.  Files carrying symbol-level rANS
 blocks (kernels.rans v2 blobs, coding pre-pack B-bit indices -- bytes
 older rANS decoders cannot parse) are stamped "NCK3" by the same
 mechanism: the writer peeks each rans block's self-describing version
-byte when the step is added.  This reader accepts all three.
+byte when the step is added.  Files carrying the *checksum frame* --
+CRC-32 digests stamped into the header so every read path can verify
+payload bytes before decoding them -- are "NCK4":
+
+  magic "NCK4" | u64 header_len | u32 header_crc | JSON header | pad->64
+              | section bytes ...
+
+``header_crc`` is crc32(header + pad), so a flipped bit anywhere in the
+metadata is caught before it can misdirect a read.  Each variable record
+carries ``crc32`` (whole payload); blocked variables (index tables,
+anchors, fragment tables) additionally carry ``block_crc32``, a per-block
+digest list, so partial and sharded reads verify exactly the blocks they
+slice.  Writers stamp the frame by default (``checksums=False`` restores
+the NCK1/2/3 matrix for compatibility tests); this reader accepts all
+four versions and raises a structured
+:class:`repro.faults.errors.CorruptBlockError` -- naming file, variable,
+block and both digests -- instead of decoding garbage.
 
 Multi-process output (paper Sec. IV-D collective write analogue): each
 process writes only its own blocks to a generation-suffixed rank file
@@ -44,6 +60,18 @@ publishes (rank files, manifest, checkpoint manifests) go through
 visible, so a crashed rank can never leave a half-written file under a
 published name, and a failed commit leaves the previous manifest (and
 the rank files it references) untouched.
+
+Manifest schema 2 adds its own integrity + self-healing layer: the NCKM
+payload ends in a u32 crc32 trailer, records each rank file's size AND
+whole-file crc32, and embeds the previous durable generation's entries
+under ``previous``.  Rank 0's commit verifies every rank file before
+referencing it, quarantines corrupt ones (renamed aside so a re-publish
+can land), polls with bounded jittered backoff, and on deadline raises
+:class:`repro.faults.errors.CommitTimeoutError` carrying a structured
+rollback report -- the previous manifest is untouched byte for byte.
+`NCKReader` mirrors this: when the newest generation fails verification
+it falls back to the ``previous`` entries and records
+``recovered_generation``.
 """
 from __future__ import annotations
 
@@ -52,21 +80,33 @@ import json
 import os
 import struct
 import time
+import zlib
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Union
+from typing import Dict, Iterable, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.types import CompressedStep
+from repro.faults import inject
+from repro.faults.errors import (CommitTimeoutError, CorruptBlockError,
+                                 CorruptShardError, IntegrityError)
+from repro.faults.retry import Backoff
 from repro.obs import telemetry
 
 _MAGIC_V1 = b"NCK1"
 _MAGIC_V2 = b"NCK2"
 _MAGIC_V3 = b"NCK3"
-_MAGICS = {_MAGIC_V1: 1, _MAGIC_V2: 2, _MAGIC_V3: 3}
+_MAGIC_V4 = b"NCK4"
+_MAGICS = {_MAGIC_V1: 1, _MAGIC_V2: 2, _MAGIC_V3: 3, _MAGIC_V4: 4}
 _MAGIC = _MAGIC_V1              # legacy alias (default / pre-PR files)
 _MANIFEST_MAGIC = b"NCKM"       # multi-process manifest (not a data file)
 _ALIGN = 64
+
+# Checksum frame keys inside each variable record (NCK4 only).
+_CRC_KEY = "crc32"              # crc32 of the whole variable payload
+_BLOCK_CRC_KEY = "block_crc32"  # per-block crc32 list for blocked variables
+
+_MANIFEST_SCHEMA = 2            # 2: crc trailer + per-rank crcs + previous
 
 
 def atomic_commit(path: str, data: Union[bytes, Iterable[bytes]]) -> None:
@@ -77,6 +117,12 @@ def atomic_commit(path: str, data: Union[bytes, Iterable[bytes]]) -> None:
     here; repro-lint's format pass flags any other os.replace/os.rename
     in the tree).  fsync runs BEFORE the rename so a crash can never
     publish a name whose content is not yet on disk.
+
+    Fault-injection sites (active only under ``REPRO_FAULTS=``):
+    ``fsync_fail`` / ``rename_fail`` raise OSError at the corresponding
+    syscall; ``torn_shard`` / ``bitflip_shard`` corrupt the tmp file of a
+    ``.rank`` shard publish so the damage rides the atomic rename exactly
+    like real silent corruption would.
     """
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
@@ -86,9 +132,12 @@ def atomic_commit(path: str, data: Union[bytes, Iterable[bytes]]) -> None:
             for chunk in data:
                 f.write(chunk)
         f.flush()
+        inject.fire("fsync_fail", path=path)
         # durable BEFORE the rename publishes it
         with telemetry.span("nck.fsync"):
             os.fsync(f.fileno())
+    inject.mangle_file(tmp, path)
+    inject.fire("rename_fail", path=path)
     with telemetry.span("nck.rename"):
         os.replace(tmp, path)  # atomic publish (fault tolerance)
 
@@ -117,34 +166,67 @@ def _pad(n: int) -> int:
     return (-n) % _ALIGN
 
 
-class NCKWriter:
-    """Assemble sections then write the file in one shot (or via append)."""
+def _file_crc32(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                return crc
+            crc = zlib.crc32(chunk, crc)
 
-    def __init__(self):
+
+class NCKWriter:
+    """Assemble sections then write the file in one shot (or via append).
+
+    ``checksums=True`` (the default) stamps the NCK4 checksum frame:
+    header crc + per-variable (and per-block, where blocked) payload
+    digests.  ``checksums=False`` restores the NCK1/2/3 magic matrix for
+    compatibility with pre-checksum readers.
+    """
+
+    def __init__(self, *, checksums: bool = True):
         self._sections: List[bytes] = []
         self._vars: Dict[str, dict] = {}
         self._dims: Dict[str, int] = {}
         self._offset = 0
+        self._checksums = bool(checksums)
         # Bumped to 2 the moment a step with per-block codec ids is added;
         # NCK1 files must stay readable by pre-per-block readers.
         self._format_version = 1
+
+    @property
+    def checksums(self) -> bool:
+        return self._checksums
 
     def add_array(self, name: str, arr: np.ndarray, attrs: Optional[dict] = None):
         arr = np.ascontiguousarray(arr)
         self._add_bytes(name, arr.tobytes(), str(arr.dtype), list(arr.shape),
                         attrs)
 
-    def add_bytes(self, name: str, raw: bytes, attrs: Optional[dict] = None):
-        self._add_bytes(name, raw, "uint8", [len(raw)], attrs)
+    def add_bytes(self, name: str, raw: bytes, attrs: Optional[dict] = None,
+                  *, block_crcs: Optional[Sequence[int]] = None):
+        self._add_bytes(name, raw, "uint8", [len(raw)], attrs,
+                        block_crcs=block_crcs)
 
-    def _add_bytes(self, name, raw, dtype, shape, attrs):
+    def _add_bytes(self, name, raw, dtype, shape, attrs, *, block_crcs=None):
         if name in self._vars:
             raise ValueError(f"duplicate variable {name}")
-        self._vars[name] = dict(dtype=dtype, shape=shape, offset=self._offset,
-                                nbytes=len(raw), attributes=attrs or {})
+        rec = dict(dtype=dtype, shape=shape, offset=self._offset,
+                   nbytes=len(raw), attributes=attrs or {})
+        if self._checksums:
+            rec[_CRC_KEY] = zlib.crc32(raw)
+            if block_crcs is not None:
+                rec[_BLOCK_CRC_KEY] = [int(c) for c in block_crcs]
+        self._vars[name] = rec
         self._dims[f"{name}_dim"] = int(np.prod(shape)) if shape else 1
         self._sections.append(raw)
         self._offset += len(raw) + _pad(len(raw))
+
+    def _block_crcs(self, blocks: List[bytes]) -> Optional[List[int]]:
+        if not self._checksums:
+            return None
+        return [zlib.crc32(b) for b in blocks]
 
     def add_step(self, name: str, step: CompressedStep):
         """Store one CompressedStep under variable prefix `name` (Fig. 2)."""
@@ -171,7 +253,8 @@ class NCKWriter:
             self.add_array(f"{name}_anchor_info", np.zeros(1, np.int32),
                            attrs=info)
             self.add_array(f"{name}_anchor_offset", offs_all)
-            self.add_bytes(f"{name}_anchor", b"".join(step.index_blocks))
+            self.add_bytes(f"{name}_anchor", b"".join(step.index_blocks),
+                           block_crcs=self._block_crcs(step.index_blocks))
             return
         self.add_array(f"{name}_info", np.zeros(1, np.int32), attrs=info)
         self.add_array(f"{name}_bin_centers",
@@ -180,7 +263,8 @@ class NCKWriter:
         self.add_array(f"{name}_incompressible_table_offset",
                        np.asarray(step.incomp_block_offsets, np.int64))
         self.add_bytes(f"{name}_index_table",
-                       b"".join(step.index_blocks))
+                       b"".join(step.index_blocks),
+                       block_crcs=self._block_crcs(step.index_blocks))
         self.add_array(f"{name}_incompressible_table", step.incomp_values)
 
     def bump_format(self, version: int):
@@ -192,12 +276,19 @@ class NCKWriter:
     def _chunks(self) -> Iterable[bytes]:
         header = json.dumps({"dimensions": self._dims,
                              "variables": self._vars}).encode()
-        magic = {1: _MAGIC_V1, 2: _MAGIC_V2,
-                 3: _MAGIC_V3}[self._format_version]
+        version = 4 if self._checksums else self._format_version
+        magic = {1: _MAGIC_V1, 2: _MAGIC_V2, 3: _MAGIC_V3,
+                 4: _MAGIC_V4}[version]
+        prefix = len(magic) + 8 + (4 if version >= 4 else 0)
+        pad = b"\0" * _pad(prefix + len(header))
         yield magic
         yield struct.pack("<Q", len(header))
+        if version >= 4:
+            # Header digest covers header + pad: a flipped bit anywhere in
+            # the metadata region is caught before it misdirects a read.
+            yield struct.pack("<I", zlib.crc32(header + pad))
         yield header
-        yield b"\0" * _pad(len(_MAGIC) + 8 + len(header))
+        yield pad
         for raw in self._sections:
             yield raw
             yield b"\0" * _pad(len(raw))
@@ -245,17 +336,57 @@ def rank_file_path(path: str, generation: int, rank: int) -> str:
     return f"{path}.g{generation:04d}.rank{rank}"
 
 
+def _manifest_bytes(payload: dict) -> bytes:
+    """Serialize a manifest payload with its u32 crc32 trailer (schema 2:
+    the digest covers magic + length + JSON, so any flip in the committed
+    manifest -- even inside the length field -- fails verification)."""
+    body = json.dumps(payload).encode()
+    head = _MANIFEST_MAGIC + struct.pack("<Q", len(body)) + body
+    return head + struct.pack("<I", zlib.crc32(head))
+
+
 def read_manifest(path: str) -> Optional[dict]:
     """Parse an NCKM manifest at `path`; None when absent or not a
-    manifest (plain NCK data files return None)."""
+    manifest (plain NCK data files return None).  Schema-2 manifests are
+    crc-verified; any truncation or flip raises IntegrityError -- a
+    damaged manifest must never be mistaken for a durable one."""
     try:
         with open(path, "rb") as f:
-            if f.read(4) != _MANIFEST_MAGIC:
-                return None
-            (hlen,) = struct.unpack("<Q", f.read(8))
-            return json.loads(f.read(hlen))
+            raw = f.read()
     except FileNotFoundError:
         return None
+    if raw[:4] != _MANIFEST_MAGIC:
+        return None
+    if len(raw) < 12:
+        raise IntegrityError(
+            f"{path}: truncated NCKM manifest ({len(raw)} bytes; even the "
+            "magic+length prefix is incomplete)")
+    (hlen,) = struct.unpack("<Q", raw[4:12])
+    body_end = 12 + hlen
+    if len(raw) == body_end + 4:
+        (stored,) = struct.unpack("<I", raw[body_end:body_end + 4])
+        actual = zlib.crc32(raw[:body_end])
+        if stored != actual:
+            raise CorruptBlockError(path, "<manifest>", None, stored, actual)
+    elif len(raw) != body_end:
+        raise IntegrityError(
+            f"{path}: manifest is {len(raw)} bytes; header declares "
+            f"{body_end} (+4-byte checksum trailer) -- truncated or corrupt")
+    try:
+        m = json.loads(raw[12:body_end])
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise IntegrityError(
+            f"{path}: manifest JSON unparseable ({e}) -- corrupt or "
+            "truncated") from e
+    if not isinstance(m, dict):
+        raise IntegrityError(f"{path}: manifest payload is not an object")
+    # A schema>=2 manifest is ALWAYS written with its trailer; seeing one
+    # without it means the trailer was truncated away.
+    if int(m.get("schema", 1)) >= _MANIFEST_SCHEMA and len(raw) == body_end:
+        raise IntegrityError(
+            f"{path}: schema {m['schema']} manifest is missing its checksum "
+            "trailer (truncated)")
+    return m
 
 
 def next_generation(path: str) -> int:
@@ -267,55 +398,124 @@ def next_generation(path: str) -> int:
     return int(m["generation"]) + 1 if m else 0
 
 
-def _gc_stale_generations(path: str, keep: int) -> None:
-    """Drop rank files of other generations after a successful publish
-    (they are unreferenced: the just-committed manifest is the only
-    reader entry point)."""
+def _gc_stale_generations(path: str, keep: Iterable[int]) -> None:
+    """Drop rank files of unreferenced generations after a successful
+    publish.  ``keep`` is the set of generations the just-committed
+    manifest can reach: the current one plus the embedded ``previous``
+    (the rollback target must stay loadable)."""
+    keep_set = {int(k) for k in keep}
     prefix = path + ".g"
     for f in glob.glob(glob.escape(path) + ".g*.rank*"):
         try:
             gen = int(f[len(prefix):].split(".rank")[0])
         except ValueError:
             continue
-        if gen != keep:
+        if gen not in keep_set:
             try:
                 os.remove(f)
             except OSError:
                 pass
 
 
+def _quarantine(path: str) -> str:
+    """Move a corrupt rank file aside as ``<path>.quarantine`` so a
+    healthy re-publish of the same name can land while the evidence is
+    preserved for postmortem."""
+    q = path + ".quarantine"
+    i = 0
+    while os.path.exists(q):
+        i += 1
+        q = f"{path}.quarantine{i}"
+    # Not a durable publish: the corrupt bytes are LEAVING the committed
+    # namespace, and fsyncing known-garbage buys nothing.
+    os.replace(path, q)  # repro-lint: disable=format-closure
+    return q
+
+
 def write_manifest(path: str, generation: int, num_ranks: int,
                    steps: List[str], *, timeout: float = 60.0,
                    poll: float = 0.05) -> str:
-    """Rank 0's commit: wait for every rank file of this generation to be
-    published (rank files appear atomically, so existence == complete),
-    then atomically publish the manifest and GC stale generations.
+    """Rank 0's self-healing commit: poll (bounded jittered backoff, hard
+    deadline) until every rank file of this generation is published AND
+    verifies -- structure, header crc, per-variable digests.  A published
+    file that fails verification is quarantined aside and treated as
+    not-yet-complete (the writing rank may still re-publish).  Only then
+    is the schema-2 manifest (rank sizes + crcs + previous generation)
+    atomically committed, and stale generations GC'd -- keeping the
+    previous generation as the rollback target.
 
-    A missing rank file (crashed rank) raises TimeoutError BEFORE the
-    manifest is touched: the previous generation's manifest and rank
-    files stay intact and loadable.
+    On deadline, raises :class:`CommitTimeoutError` BEFORE the manifest
+    is touched: its ``report`` names the missing ranks, the quarantined
+    files and the generation the logical file remains at.  The previous
+    manifest and its rank files stay intact byte for byte.
     """
     files = [rank_file_path(path, generation, r) for r in range(num_ranks)]
+    previous = read_manifest(path)  # last durable generation (may be None)
     deadline = time.monotonic() + timeout
-    for f in files:
-        while not os.path.exists(f):
-            if time.monotonic() >= deadline:
-                raise TimeoutError(
-                    f"manifest commit for {path}: rank file "
-                    f"{os.path.basename(f)} missing after {timeout:.0f}s; "
-                    "previous manifest left intact")
-            time.sleep(poll)
+    backoff = Backoff(base=poll, factor=1.6, cap=max(poll * 8, 0.25),
+                      jitter=0.25).repolling()
+    quarantined: List[dict] = []
+    crcs: Dict[int, int] = {}
+
+    def scan() -> List[int]:
+        missing = []
+        for r, f in enumerate(files):
+            if r in crcs:
+                continue
+            if not os.path.exists(f):
+                missing.append(r)
+                continue
+            try:
+                verify_nck(f)
+                crcs[r] = _file_crc32(f)
+            except IntegrityError as e:
+                q = _quarantine(f)
+                quarantined.append({
+                    "rank": r, "file": os.path.basename(f),
+                    "quarantined_as": os.path.basename(q),
+                    "error": str(e)})
+                missing.append(r)  # checksum mismatch == not yet complete
+        return missing
+
+    missing = scan()
+    for delay in backoff.sleep_until(deadline):
+        if not missing:
+            break
+        time.sleep(delay)
+        missing = scan()
+    if missing:
+        prev_gen = int(previous["generation"]) if previous else None
+        report = {
+            "path": path, "generation": int(generation),
+            "missing_ranks": sorted(missing),
+            "quarantined": [q["quarantined_as"] for q in quarantined],
+            "quarantine_detail": quarantined,
+            "rolled_back_to": prev_gen,
+        }
+        names = ", ".join(os.path.basename(files[r]) for r in sorted(missing))
+        rollback = (f"rolled back to durable generation {prev_gen}"
+                    if prev_gen is not None
+                    else "no previous durable generation exists")
+        raise CommitTimeoutError(
+            f"manifest commit for {path}: rank file(s) {names} missing or "
+            f"quarantined after {timeout:.0f}s; previous manifest left "
+            f"intact ({rollback})", report)
     entries = [{"rank": r, "file": os.path.basename(f),
-                "nbytes": os.path.getsize(f)}
+                "nbytes": os.path.getsize(f), _CRC_KEY: crcs[r]}
                for r, f in enumerate(files)]
-    payload = json.dumps({"schema": 1, "generation": int(generation),
-                          "num_ranks": int(num_ranks), "ranks": entries,
-                          "steps": list(steps)}).encode()
+    payload = {"schema": _MANIFEST_SCHEMA, "generation": int(generation),
+               "num_ranks": int(num_ranks), "ranks": entries,
+               "steps": list(steps)}
+    keep = {int(generation)}
+    if previous is not None:
+        # Embed the rollback target (one level deep: its own `previous`
+        # is dropped, bounding manifest growth at two generations).
+        payload["previous"] = {k: v for k, v in previous.items()
+                               if k != "previous"}
+        keep.add(int(previous["generation"]))
     with telemetry.span("nck.manifest", path=path, ranks=num_ranks):
-        atomic_commit(path,
-                      _MANIFEST_MAGIC + struct.pack("<Q", len(payload))
-                      + payload)
-    _gc_stale_generations(path, generation)
+        atomic_commit(path, _manifest_bytes(payload))
+    _gc_stale_generations(path, keep)
     return path
 
 
@@ -326,13 +526,14 @@ class ShardNCKWriter:
     via `commit_manifest` once every rank's file is visible."""
 
     def __init__(self, path: str, rank: int, num_ranks: int,
-                 generation: Optional[int] = None):
+                 generation: Optional[int] = None, *,
+                 checksums: bool = True):
         self.path = path
         self.rank = rank
         self.num_ranks = num_ranks
         self.generation = (next_generation(path) if generation is None
                            else generation)
-        self._w = NCKWriter()
+        self._w = NCKWriter(checksums=checksums)
         self.steps: List[str] = []
 
     @property
@@ -363,7 +564,8 @@ class ShardNCKWriter:
                           attrs=info)
         self._w.add_array(f"{name}_frag_index_table_offset", offs)
         self._w.add_bytes(f"{name}_frag_index_table",
-                          b"".join(frag.index_blocks))
+                          b"".join(frag.index_blocks),
+                          block_crcs=self._w._block_crcs(frag.index_blocks))
         if not frag.is_anchor:
             self._w.add_array(f"{name}_frag_incompressible_counts",
                               np.asarray(counts, np.int64))
@@ -395,29 +597,102 @@ class NCKReader:
     logical file: `step_names`/`read_step`/`attrs`/`read_array` work
     unchanged, with fragments merged back into CompressedSteps identical
     to a single-process write.  A manifest referencing a missing or
-    truncated rank file is rejected at open with an error naming the
-    shard -- it never silently reads a partial save.
+    damaged rank file is rejected at open with an error naming the shard
+    -- unless the manifest embeds a previous durable generation, in which
+    case the reader falls back to it (``recovered_generation`` records
+    the fallback, ``fallback_cause`` the error that forced it).
+
+    Integrity: NCK4 headers are crc-verified at open; every version gets
+    a structural truncation check (file size vs. variable extents); full
+    reads verify the whole-variable digest and block-sliced reads verify
+    per-block digests via :meth:`verify_blocks`.  Parse failures surface
+    as :class:`IntegrityError`, never a raw json/struct traceback.
     """
 
     def __init__(self, path: str):
         self.path = path
         self.manifest: Optional[dict] = None
         self._rank_readers: List["NCKReader"] = []
+        self.recovered_generation: Optional[int] = None
+        self.fallback_cause: Optional[Exception] = None
         with open(path, "rb") as f:
             magic = f.read(4)
             if magic == _MANIFEST_MAGIC:
-                (hlen,) = struct.unpack("<Q", f.read(8))
-                self.manifest = json.loads(f.read(hlen))
-                self._open_ranks(path)
+                self.manifest = read_manifest(path)
+                if self.manifest is None:
+                    raise IntegrityError(f"{path}: unreadable NCKM manifest")
+                try:
+                    self._open_ranks(path)
+                except (FileNotFoundError, IntegrityError) as e:
+                    prev = self.manifest.get("previous")
+                    if not prev:
+                        raise
+                    # Newest generation unverifiable: fall back to the
+                    # last durable one (its rank files survive GC).
+                    self._rank_readers = []
+                    self.manifest = prev
+                    self._open_ranks(path)
+                    self.recovered_generation = int(prev["generation"])
+                    self.fallback_cause = e
                 return
             if magic not in _MAGICS:
-                raise ValueError(f"{path}: not an NCK file")
+                raise IntegrityError(
+                    f"{path}: not an NCK file (magic {magic!r} unknown; "
+                    "corrupt, truncated, or not written by this format)")
             self.format_version = _MAGICS[magic]
-            (hlen,) = struct.unpack("<Q", f.read(8))
-            header = json.loads(f.read(hlen))
-        self.variables = header["variables"]
-        self.dimensions = header["dimensions"]
-        self._data_start = 4 + 8 + hlen + _pad(4 + 8 + hlen)
+            raw8 = f.read(8)
+            if len(raw8) != 8:
+                raise IntegrityError(f"{path}: truncated NCK length prefix")
+            (hlen,) = struct.unpack("<Q", raw8)
+            # Bound the declared length BEFORE allocating for it: a
+            # flipped high bit in the u64 must raise, not MemoryError.
+            if hlen > os.path.getsize(path):
+                raise IntegrityError(
+                    f"{path}: header length field claims {hlen} bytes in a "
+                    f"{os.path.getsize(path)}-byte file (corrupt length "
+                    "prefix)")
+            prefix = 4 + 8
+            stored_crc: Optional[int] = None
+            if self.format_version >= 4:
+                raw4 = f.read(4)
+                if len(raw4) != 4:
+                    raise IntegrityError(
+                        f"{path}: truncated NCK4 header checksum")
+                (stored_crc,) = struct.unpack("<I", raw4)
+                prefix += 4
+            hdr = f.read(hlen)
+            if len(hdr) != hlen:
+                raise IntegrityError(
+                    f"{path}: truncated NCK header ({len(hdr)} of {hlen} "
+                    "bytes)")
+            padlen = _pad(prefix + hlen)
+            pad = f.read(padlen)
+            if stored_crc is not None:
+                actual = zlib.crc32(hdr + pad)
+                if len(pad) != padlen or actual != stored_crc:
+                    raise CorruptBlockError(path, "<header>", None,
+                                            stored_crc, actual)
+            try:
+                header = json.loads(hdr)
+            except (json.JSONDecodeError, UnicodeDecodeError) as e:
+                raise IntegrityError(
+                    f"{path}: NCK header is not valid JSON ({e}) -- file "
+                    "corrupt or truncated") from e
+        try:
+            self.variables = header["variables"]
+            self.dimensions = header["dimensions"]
+            end = max((int(v["offset"]) + int(v["nbytes"])
+                       for v in self.variables.values()), default=0)
+        except (KeyError, TypeError, ValueError, AttributeError) as e:
+            raise IntegrityError(
+                f"{path}: NCK header is structurally malformed ({e!r}) -- "
+                "file corrupt") from e
+        self._data_start = prefix + hlen + padlen
+        size = os.path.getsize(path)
+        if size < self._data_start + end:
+            raise IntegrityError(
+                f"{path}: file is {size} bytes but variables extend to "
+                f"byte {self._data_start + end} (truncated)")
 
     # ------------------------------------------------- manifest handling
     def _open_ranks(self, path: str):
@@ -431,11 +706,22 @@ class NCKReader:
                     "is incomplete")
             size = os.path.getsize(rp)
             if size != e["nbytes"]:
-                raise ValueError(
-                    f"manifest {path}: shard file {e['file']} is {size} "
-                    f"bytes, manifest recorded {e['nbytes']} (rank "
-                    f"{e['rank']} file was modified after commit)")
-            self._rank_readers.append(NCKReader(rp))
+                raise CorruptShardError(
+                    path, e["file"], e["rank"],
+                    f"file is {size} bytes, manifest recorded "
+                    f"{e['nbytes']} (modified or torn after commit)")
+            if _CRC_KEY in e:
+                actual = _file_crc32(rp)
+                if actual != e[_CRC_KEY]:
+                    raise CorruptShardError(
+                        path, e["file"], e["rank"],
+                        f"whole-file checksum mismatch: expected "
+                        f"crc32=0x{e[_CRC_KEY]:08x}, got 0x{actual:08x}")
+            try:
+                self._rank_readers.append(NCKReader(rp))
+            except IntegrityError as err:
+                raise CorruptShardError(path, e["file"], e["rank"],
+                                        str(err)) from err
         self.format_version = max(r.format_version
                                   for r in self._rank_readers)
         # Union view of the per-rank variable spaces (fragment names are
@@ -461,14 +747,61 @@ class NCKReader:
         v = self.variables[name]
         stop = v["nbytes"] if byte_stop is None else min(byte_stop,
                                                          v["nbytes"])
+        want = max(stop - byte_start, 0)
         with open(self.path, "rb") as f:
             f.seek(self._data_start + v["offset"] + byte_start)
-            return f.read(max(stop - byte_start, 0))
+            data = f.read(want)
+        if len(data) != want:
+            raise IntegrityError(
+                f"{self.path}: variable {name!r} byte range [{byte_start},"
+                f"{stop}) short by {want - len(data)} bytes (file "
+                "truncated)")
+        # Full reads of unblocked variables verify the whole-payload
+        # digest here; blocked variables are verified per sliced block at
+        # the slicing site (verify_blocks) to avoid digesting twice.
+        if (byte_start == 0 and stop == v["nbytes"] and _CRC_KEY in v
+                and _BLOCK_CRC_KEY not in v):
+            actual = zlib.crc32(data)
+            if actual != v[_CRC_KEY]:
+                raise CorruptBlockError(self.path, name, None,
+                                        v[_CRC_KEY], actual)
+        return data
 
     def read_array(self, name: str) -> np.ndarray:
         v = self.variables[name]
         raw = self.read(name)
-        return np.frombuffer(raw, dtype=v["dtype"]).reshape(v["shape"])
+        try:
+            return np.frombuffer(raw, dtype=v["dtype"]).reshape(v["shape"])
+        except (ValueError, TypeError) as e:
+            raise IntegrityError(
+                f"{self.path}: variable {name!r} payload does not match "
+                f"its recorded dtype/shape ({e}) -- header or data "
+                "corrupt") from e
+
+    def verify_blocks(self, name: str, blocks: Sequence[bytes],
+                      first_block: int = 0) -> None:
+        """Check sliced block payloads against the per-block checksum
+        frame.  No-op for files without one (NCK1/2/3 or checksums=False
+        writers); raises :class:`CorruptBlockError` naming the first bad
+        block otherwise.  ``first_block`` is the global index of
+        ``blocks[0]`` (partial reads verify only the slice they touch)."""
+        if self.manifest is not None:
+            return self._var_owner[name].verify_blocks(name, blocks,
+                                                       first_block)
+        crcs = self.variables[name].get(_BLOCK_CRC_KEY)
+        if crcs is None:
+            return
+        for i, b in enumerate(blocks):
+            bi = first_block + i
+            if bi >= len(crcs):
+                raise IntegrityError(
+                    f"{self.path}: variable {name!r} records "
+                    f"{len(crcs)} checksummed blocks but block {bi} was "
+                    "requested (offset table corrupt)")
+            actual = zlib.crc32(b)
+            if actual != crcs[bi]:
+                raise CorruptBlockError(self.path, name, bi, crcs[bi],
+                                        actual)
 
     def _read_step_merged(self, name: str) -> CompressedStep:
         """Merge one step's per-rank fragments (inverse of the
@@ -489,8 +822,10 @@ class NCKReader:
         for fi, r in frags:
             offs = r.read_array(f"{name}_frag_index_table_offset")
             table = r.read(f"{name}_frag_index_table")
-            blks += [table[offs[i]:offs[i + 1]]
-                     for i in range(len(offs) - 1)]
+            fr_blks = [table[offs[i]:offs[i + 1]]
+                       for i in range(len(offs) - 1)]
+            r.verify_blocks(f"{name}_frag_index_table", fr_blks)
+            blks += fr_blks
         if info["is_anchor"]:
             return CompressedStep(
                 n=info["total_data_num"], shape=tuple(info["shape"]),
@@ -542,6 +877,7 @@ class NCKReader:
             offs = self.read_array(f"{name}_anchor_offset")
             table = self.read(f"{name}_anchor")
             blks = [table[offs[i]:offs[i + 1]] for i in range(len(offs) - 1)]
+            self.verify_blocks(f"{name}_anchor", blks)
             return CompressedStep(
                 n=info["total_data_num"], shape=tuple(info["shape"]),
                 dtype=info["dtype"], b_bits=0,
@@ -554,6 +890,7 @@ class NCKReader:
         offs = self.read_array(f"{name}_index_table_offset")
         table = self.read(f"{name}_index_table")
         blks = [table[offs[i]:offs[i + 1]] for i in range(len(offs) - 1)]
+        self.verify_blocks(f"{name}_index_table", blks)
         return CompressedStep(
             n=info["total_data_num"], shape=tuple(info["shape"]),
             dtype=info["dtype"], b_bits=info["B"],
@@ -582,6 +919,24 @@ class NCKReader:
         return sorted(names)
 
 
+def verify_nck(path: str) -> None:
+    """Full structural + checksum verification of one NCK data file:
+    header parse, truncation extents, every variable's whole-payload
+    digest (NCK4).  Raises :class:`IntegrityError` (or a subclass) on
+    any damage; returns None on a clean file.  Used by rank 0's manifest
+    commit to decide published-and-complete vs. quarantine."""
+    r = NCKReader(path)
+    if r.manifest is not None:
+        raise IntegrityError(f"{path}: is an NCKM manifest, not a data file")
+    for name, v in r.variables.items():
+        data = r.read(name)  # verifies unblocked digests itself
+        if _CRC_KEY in v and _BLOCK_CRC_KEY in v:
+            actual = zlib.crc32(data)
+            if actual != v[_CRC_KEY]:
+                raise CorruptBlockError(path, name, None, v[_CRC_KEY],
+                                        actual)
+
+
 __all__ = ["NCKWriter", "NCKReader", "ShardNCKWriter", "StepFragment",
            "atomic_commit", "write_manifest", "read_manifest",
-           "next_generation", "rank_file_path"]
+           "next_generation", "rank_file_path", "verify_nck"]

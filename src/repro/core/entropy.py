@@ -41,6 +41,8 @@ import zlib
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence
 
+from repro.faults import inject
+from repro.faults.errors import IntegrityError
 from repro.obs import telemetry
 
 # --------------------------------------------------------------------- codecs
@@ -317,6 +319,9 @@ def _retire_proc_pool(px: ProcessPoolExecutor):
 def _compress_batch(codec_name: str, raws: List[bytes],
                     level: int) -> List[bytes]:
     """Process-pool task body: resolve the codec by name in the worker."""
+    # Injection site: a dying pool worker must exercise the
+    # retire-and-degrade path in _dispatch_blocks, not hang the driver.
+    inject.fire("entropy_worker_death", codec=codec_name, blocks=len(raws))
     c = get_codec(codec_name)
     return [c.compress(r, level) for r in raws]
 
@@ -448,8 +453,25 @@ def compress_blocks_per_codec(raws: Sequence[bytes], codecs: Sequence[str],
     return out
 
 
+def _decompress_one(c: Codec, codec: str, blob: bytes) -> bytes:
+    """Decode one blob, converting codec-internal failures (zlib.error,
+    lzma format errors, rANS final-state mismatches ...) into a
+    structured :class:`IntegrityError` -- a corrupt block must fail
+    loudly at the entropy stage, never as a traceback from deep inside a
+    codec (and never as silently wrong bytes)."""
+    try:
+        return c.decompress(blob)
+    except IntegrityError:
+        raise
+    except Exception as e:
+        raise IntegrityError(
+            f"entropy decode failed: codec {codec!r} rejected a "
+            f"{len(blob)}-byte blob ({e!r}) -- block is corrupt or "
+            "truncated") from e
+
+
 def decompress_block(blob: bytes, codec: str = DEFAULT_CODEC) -> bytes:
-    return get_codec(codec).decompress(blob)
+    return _decompress_one(get_codec(codec), codec, blob)
 
 
 def decompress_blocks(blobs: Sequence[bytes], codec: str = DEFAULT_CODEC,
@@ -458,9 +480,9 @@ def decompress_blocks(blobs: Sequence[bytes], codec: str = DEFAULT_CODEC,
     c = get_codec(codec)
     if not parallel or len(blobs) < 2 \
             or sum(len(b) for b in blobs) < _MIN_PARALLEL_BYTES:
-        return [c.decompress(b) for b in blobs]
+        return [_decompress_one(c, codec, b) for b in blobs]
     ex = _shared_pool()
-    return list(ex.map(c.decompress, blobs))
+    return list(ex.map(lambda b: _decompress_one(c, codec, b), blobs))
 
 
 __all__ = ["Codec", "ZlibCodec", "RawCodec", "LzmaCodec", "Bz2Codec",

@@ -22,13 +22,21 @@ and worker exceptions carry the stage/step context of the task that died:
 the submit-side ``label`` is appended to the exception message (type and
 traceback preserved), so a failed background finalize names which step
 and stage failed instead of re-raising a bare Future error.
+
+Fault tolerance: construct with ``timeout=<seconds>`` and every wait on a
+background task is bounded.  A wedged worker surfaces as a ``TimeoutError``
+naming the stuck task's ``label`` -- instead of hanging the driver forever
+-- and the worker thread is retired and replaced (shutdown without
+waiting, pending futures cancelled; the next submit gets a fresh worker),
+the same discipline ``core.entropy`` applies to wedged process pools.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Deque, Optional
+from concurrent.futures import TimeoutError as _FutureTimeout
+from typing import Deque, Optional, Tuple
 
 from repro.obs import telemetry
 
@@ -59,15 +67,45 @@ class FinalizeQueue:
     With ``overlap=False`` every ``submit`` runs the callable inline and
     returns an already-resolved Future -- identical interface, serial
     semantics, so callers never branch on the mode.
+
+    ``timeout`` (seconds, ``None`` = wait forever, the historical
+    behaviour) bounds every internal wait on a background task: drain on
+    submit, the full-queue stall, and ``flush``.  On expiry the worker is
+    retired (it may be wedged in a C call that ignores interrupts) and a
+    ``TimeoutError`` naming the stuck task's label is raised.
     """
 
     def __init__(self, overlap: bool, name: str = "finalize",
-                 max_in_flight: int = 2):
+                 max_in_flight: int = 2, timeout: Optional[float] = None):
         self.overlap = overlap
         self._name = name
         self._max = max(1, max_in_flight)
+        self._timeout = timeout
         self._ex: Optional[ThreadPoolExecutor] = None
-        self._pending: Deque[Future] = deque()
+        self._pending: Deque[Tuple[Future, str]] = deque()
+
+    def _retire_worker(self):
+        """Abandon a wedged worker thread (entropy-pool discipline:
+        shutdown without waiting, cancel what never started, forget the
+        executor so the next submit builds a fresh one)."""
+        if self._ex is not None:
+            self._ex.shutdown(wait=False, cancel_futures=True)
+            self._ex = None
+        self._pending.clear()
+
+    def _drain_one(self) -> None:
+        """Resolve the oldest pending task, bounded by ``timeout``."""
+        f, label = self._pending.popleft()
+        try:
+            f.result(timeout=self._timeout)
+        except _FutureTimeout:
+            # py3.10: concurrent.futures.TimeoutError is NOT the builtin.
+            self._pending.appendleft((f, label))
+            self._retire_worker()
+            raise TimeoutError(
+                f"{self._name} worker wedged: task [label={label}] did not "
+                f"complete within {self._timeout}s; worker retired and "
+                "replaced") from None
 
     def submit(self, fn, *args, label: Optional[str] = None) -> Future:
         """Run ``fn(*args)`` (inline or on the worker).  ``label`` names
@@ -86,14 +124,14 @@ class FinalizeQueue:
             return f
         # .result() on completed futures too: a failed background task must
         # surface on the next submit/flush, not vanish with its Future.
-        while self._pending and self._pending[0].done():
-            self._pending.popleft().result()
+        while self._pending and self._pending[0][0].done():
+            self._drain_one()
         if len(self._pending) >= self._max:
             # Queue full: the caller stalls here until the oldest task
             # drains -- the stall the overlap exists to hide, so meter it.
             t_stall = time.perf_counter()
             while len(self._pending) >= self._max:
-                self._pending.popleft().result()
+                self._drain_one()
             telemetry.counter(f"{self._name}.stall_s",
                               time.perf_counter() - t_stall)
         if self._ex is None:
@@ -112,17 +150,22 @@ class FinalizeQueue:
                 raise
 
         f = self._ex.submit(run)
-        self._pending.append(f)
+        self._pending.append((f, label))
         telemetry.gauge(f"{self._name}.depth", len(self._pending))
         return f
 
     def flush(self):
         """Barrier: block until every in-flight task has completed
-        (re-raises the first background exception, if any)."""
+        (re-raises the first background exception, if any; with a
+        ``timeout`` configured, a wedged task raises a labeled
+        TimeoutError instead of blocking forever)."""
         with telemetry.span(f"{self._name}.flush",
                             pending=len(self._pending)):
             while self._pending:
-                self._pending.popleft().result()
+                self._drain_one()
+
+    # Checkpoint manager calls this name; keep both as the public barrier.
+    wait = flush
 
     def close(self):
         self.flush()

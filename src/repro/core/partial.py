@@ -48,6 +48,12 @@ def read_step_range(reader: NCKReader, name: str, start: int, stop: int,
         raw = reader.read(f"{name}_anchor", int(offs[b0]), int(offs[b1 + 1]))
         starts = np.concatenate(
             [[0], np.cumsum(np.diff(offs[b0:b1 + 2]))]).astype(np.int64)
+        # Verify exactly the sliced blocks against the NCK4 checksum
+        # frame before any codec touches them (no-op on NCK1/2/3).
+        reader.verify_blocks(
+            f"{name}_anchor",
+            [raw[int(starts[k]):int(starts[k + 1])]
+             for k in range(b1 - b0 + 1)], first_block=b0)
         esize = np.dtype(info["dtype"]).itemsize
         # Exact decompressed byte span of each block (the last block of a
         # step is shorter): assemble straight into one preallocated
@@ -105,6 +111,10 @@ def read_step_range(reader: NCKReader, name: str, start: int, stop: int,
     # loop below then only does vector arithmetic.
     starts = np.concatenate(
         [[0], np.cumsum(np.diff(offs[b0:b1 + 2]))]).astype(np.int64)
+    reader.verify_blocks(
+        f"{name}_index_table",
+        [raw[int(starts[k]):int(starts[k + 1])]
+         for k in range(b1 - b0 + 1)], first_block=b0)
     idx_parts: list = [None] * (b1 - b0 + 1)
 
     def inflate(k: int) -> None:
@@ -152,8 +162,8 @@ class TemporalArchive:
         return f"{var}_it{it:05d}"
 
     @staticmethod
-    def write(path: str, var: str, steps) -> None:
-        w = NCKWriter()
+    def write(path: str, var: str, steps, *, checksums: bool = True) -> None:
+        w = NCKWriter(checksums=checksums)
         for i, st in enumerate(steps):
             w.add_step(TemporalArchive.step_name(var, i), st)
         w.write(path)

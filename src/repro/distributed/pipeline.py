@@ -58,6 +58,7 @@ from repro.core.pipeline import DeviceEncoded
 from repro.core.types import (CompressedStep, NumarckParams,
                               REF_RECONSTRUCTED)
 from repro.distributed import collectives as coll
+from repro.faults import inject
 from repro.kernels import dequant
 from repro.kernels import ops as kops
 from repro.kernels import rans
@@ -1165,6 +1166,11 @@ class MultiProcessCompressor(ShardedCompressor):
         chain and fragments a lossless anchor)."""
         arr = np.asarray(arr)
         step_i, self._step = self._step, self._step + 1
+        # Fleet fault-injection sites (no-ops without REPRO_FAULTS): a
+        # rank dying mid-encode, or stalling as a straggler, exercises
+        # rank 0's quarantine/rollback commit path.
+        inject.fire("rank_crash", step=step_i, rank=self.rank)
+        inject.fire("straggler", step=step_i, rank=self.rank)
         if self._chain is None or self._chain.empty:
             self._chain = self._make_chain(arr.dtype)
             self._chain.seed(arr)

@@ -1,0 +1,28 @@
+"""Fault tolerance layer: structured integrity errors, deterministic
+fault injection, and bounded-retry helpers.
+
+The paper's parallel NUMARCK targets 12800 MPI processes; at that scale
+rank crashes, torn writes and flipped bits are the steady state.  This
+package is the one home for how the repo *reacts* to them:
+
+  * :mod:`repro.faults.errors` -- the structured error taxonomy every
+    read/commit path raises instead of decoding garbage or dying deep in
+    a codec (``IntegrityError`` and friends name the file, variable,
+    block and digests involved).
+  * :mod:`repro.faults.inject` -- seedable injection points
+    (``REPRO_FAULTS=`` env or explicit ``configure``) for rank crashes,
+    stragglers, torn/bit-flipped shard publishes, fsync/rename failures
+    and entropy-pool worker deaths.  Disabled (the default) it is a
+    single attribute check per site -- the same "disabled is free"
+    discipline as ``repro.obs.telemetry``.
+  * :mod:`repro.faults.retry` -- the bounded, jittered exponential
+    backoff every retry loop in the tree uses (repro-lint's
+    ``retry-discipline`` pass rejects unbounded poll loops).
+"""
+from repro.faults.errors import (CommitTimeoutError, CorruptBlockError,
+                                 CorruptShardError, InjectedFault,
+                                 IntegrityError)
+from repro.faults.retry import Backoff
+
+__all__ = ["IntegrityError", "CorruptBlockError", "CorruptShardError",
+           "CommitTimeoutError", "InjectedFault", "Backoff"]

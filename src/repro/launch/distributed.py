@@ -32,11 +32,19 @@ import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
+from repro.faults.retry import Backoff
 from repro.launch.runtime_env import runtime_env
 
 ENV_COORDINATOR = "REPRO_COORDINATOR"
 ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
 ENV_PROCESS_ID = "REPRO_PROCESS_ID"
+
+# A fleet that died because the coordinator could not bind its probed
+# port (the free_port() bind-then-release race: another process grabbed
+# it first) is retried with a fresh port; any other failure is real and
+# returned to the caller untouched.
+_BIND_FAILURE_MARKERS = ("address already in use", "eaddrinuse",
+                         "errno: 98", "failed to bind")
 
 
 @dataclass(frozen=True)
@@ -132,18 +140,24 @@ def rank_env(rank: int, num_processes: int, coordinator: str, *,
     return env
 
 
-def spawn_emulated(num_processes: int, argv: Sequence[str], *,
-                   devices_per_process: int = 1,
-                   base_env: Optional[Dict[str, str]] = None,
-                   preset: bool = True,
-                   timeout: float = 600.0
-                   ) -> List[subprocess.CompletedProcess]:
-    """Launch ``python <argv...>`` num_processes times on localhost with a
-    shared free-port coordinator; wait for all; return per-rank results
-    (rank order).  Does not raise on nonzero exits -- crash-tolerance
-    tests inspect returncodes; use ``check_spawned`` for the common
-    all-must-succeed case."""
-    coordinator = f"localhost:{free_port()}"
+def _coordinator_bind_failed(results: List[subprocess.CompletedProcess]
+                             ) -> bool:
+    """Did this fleet die on the coordinator-port bind race?  Only a
+    failing rank whose stderr carries a bind-failure marker counts --
+    worker crashes, injected faults and timeouts are NOT retried."""
+    for r in results:
+        if r.returncode == 0:
+            continue
+        text = (r.stderr or "").lower()
+        if any(m in text for m in _BIND_FAILURE_MARKERS):
+            return True
+    return False
+
+
+def _spawn_once(num_processes: int, argv: Sequence[str], coordinator: str,
+                devices_per_process: int,
+                base_env: Optional[Dict[str, str]], preset: bool,
+                timeout: float) -> List[subprocess.CompletedProcess]:
     procs = []
     for rank in range(num_processes):
         env = rank_env(rank, num_processes, coordinator,
@@ -165,6 +179,42 @@ def spawn_emulated(num_processes: int, argv: Sequence[str], *,
             out, err = proc.communicate()
         results.append(subprocess.CompletedProcess(
             proc.args, proc.returncode, out, err))
+    return results
+
+
+def spawn_emulated(num_processes: int, argv: Sequence[str], *,
+                   devices_per_process: int = 1,
+                   base_env: Optional[Dict[str, str]] = None,
+                   preset: bool = True,
+                   timeout: float = 600.0,
+                   bind_attempts: int = 3
+                   ) -> List[subprocess.CompletedProcess]:
+    """Launch ``python <argv...>`` num_processes times on localhost with a
+    shared free-port coordinator; wait for all; return per-rank results
+    (rank order).  Does not raise on nonzero exits -- crash-tolerance
+    tests inspect returncodes; use ``check_spawned`` for the common
+    all-must-succeed case.
+
+    The coordinator port comes from ``free_port()``'s bind-then-release
+    probe, which races other processes on the host: by the time the fleet
+    binds it, someone else may own it.  When a failing rank's stderr
+    shows a bind failure, the *whole fleet* is relaunched with a fresh
+    port -- up to ``bind_attempts`` total attempts with jittered backoff
+    (``repro.faults.retry.Backoff``) -- since a half-initialized fleet
+    can never recover in place.
+    """
+    results: List[subprocess.CompletedProcess] = []
+    delays = Backoff(attempts=max(1, bind_attempts) - 1, base=0.1).delays()
+    for attempt in range(max(1, bind_attempts)):
+        coordinator = f"localhost:{free_port()}"
+        results = _spawn_once(num_processes, argv, coordinator,
+                              devices_per_process, base_env, preset, timeout)
+        if not _coordinator_bind_failed(results):
+            break
+        try:
+            time.sleep(next(delays))
+        except StopIteration:  # attempts exhausted: return the last fleet
+            break
     return results
 
 

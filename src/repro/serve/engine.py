@@ -31,6 +31,7 @@ from repro.core import NumarckParams, make_anchor
 from repro.core.chain import SessionChain
 from repro.core.compress import decode_anchor, decode_anchor_device
 from repro.core.container import NCKReader, NCKWriter
+from repro.faults.errors import IntegrityError
 from repro.models.model import Model
 from repro.obs import telemetry
 
@@ -207,9 +208,17 @@ class Engine:
                 "load_session needs the session template: call generate() "
                 "once on this engine first (any keep_session setting)")
         with telemetry.span("serve.load_session", path=path):
-            sess = jax.device_put(load_cache(path,
-                                             template=self._sess_template,
-                                             device=True))
+            try:
+                sess = jax.device_put(load_cache(path,
+                                                 template=self._sess_template,
+                                                 device=True))
+            except IntegrityError as e:
+                # A flipped bit in a cold session must never resurrect as
+                # wrong KV state; surface it with session context so the
+                # caller can evict/refetch the snapshot.
+                raise IntegrityError(
+                    f"session snapshot {path} failed integrity "
+                    f"verification and was not restored: {e}") from e
             self._session = SessionChain(sess)
         return self.last_cache
 

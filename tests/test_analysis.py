@@ -33,6 +33,7 @@ ALL_RULES = {
     "format-closure",
     "host-sync-in-device-path",
     "jit-cache-hygiene",
+    "retry-discipline",
 }
 
 
@@ -47,7 +48,7 @@ def lines_of(violations):
 
 # --------------------------------------------------------------- registry
 
-def test_registry_has_all_five_passes():
+def test_registry_has_all_shipped_passes():
     rules = [cls.rule for cls in all_passes()]
     assert rules == sorted(ALL_RULES)
 
@@ -245,6 +246,32 @@ def test_format_closure_manifest_magic_is_closed():
         root=REPO_ROOT)
     vs = get_pass("format-closure")().run(project)
     assert not [v for v in vs if "_MANIFEST_MAGIC" in v.message], vs
+
+
+def test_format_closure_checksum_frame_is_closed():
+    # The committed container: the NCK4 checksum frame ("crc32" /
+    # "block_crc32" record keys) has writer stores, reader loads and test
+    # fixtures, so the sub-check stays silent on the repo.
+    project = load_project(
+        [os.path.join(REPO_ROOT, "src", "repro", "core", "container.py")],
+        root=REPO_ROOT)
+    vs = get_pass("format-closure")().run(project)
+    assert not [v for v in vs if "checksum key" in v.message], vs
+
+
+# -------------------------------------------------------- retry discipline
+
+def test_retry_discipline_flags_unbounded_sleep_loops():
+    vs = run_rule("retry-discipline", "bad_retry.py")
+    assert {v.scope for v in vs} == {"wait_for_file", "poll_until_ready"}
+    assert all("unbounded retry loop" in v.message for v in vs)
+
+
+def test_retry_discipline_allows_bounded_and_exiting_loops():
+    vs = run_rule("retry-discipline", "bad_retry.py")
+    scopes = {v.scope for v in vs}
+    assert "bounded_ok" not in scopes
+    assert "exit_edge_ok" not in scopes
 
 
 # ------------------------------------------------------------------- CLI

@@ -1,0 +1,747 @@
+"""Fault-tolerance tier: corruption fuzz over every container format,
+the fault-injection registry, and the self-healing manifest commit.
+
+The fuzz oracle is the PR-10 integrity contract: a single-byte flip or a
+truncation of a persisted artifact must surface as a *structured*
+IntegrityError -- never a silent wrong decode, never a raw traceback
+from json/struct/zlib internals.  For NCK4 the must-raise region is
+everything the checksum frame covers ("crc32" whole-variable digests,
+"block_crc32" per-block digests, the header crc): the magic/length/crc
+prefix, the JSON header and its pad, and every variable payload.  Flips
+in inter-section alignment pad are outside any digest and are allowed to
+either raise or decode byte-identically -- what is forbidden, always, is
+a *different* decode.  Legacy NCK1/2/3 files carry no payload digests,
+so only their structural guarantees (prefix sanity, extent-vs-file-size)
+are fuzzed.  NCKM manifests are covered end to end by the schema-2
+trailer: every flip and every truncation must raise.
+"""
+import json
+import os
+import struct
+import subprocess
+import tempfile
+import textwrap
+import threading
+import time
+import zlib
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # hermetic CI image: deterministic shim
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import NumarckParams, compress_series, decompress_series
+from repro.core import container, entropy
+from repro.core.compress import decode_anchor
+from repro.core.container import (NCKReader, NCKWriter, ShardNCKWriter,
+                                  atomic_commit, rank_file_path,
+                                  read_manifest, verify_nck)
+from repro.core.overlap import FinalizeQueue
+from repro.core.partial import TemporalArchive
+from repro.faults import (Backoff, CommitTimeoutError, CorruptBlockError,
+                          CorruptShardError, InjectedFault, IntegrityError)
+from repro.faults import inject
+from repro.launch import distributed as dist
+from repro.launch.distributed import spawn_emulated
+
+from test_multiprocess import (_anchor_fragments, _make_series_src,
+                               _write_logical)
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                    "src"))
+
+
+@pytest.fixture(autouse=True)
+def _no_fault_plan_leaks():
+    """Every test leaves the process fault plan cleared."""
+    yield
+    inject.reset()
+
+
+# ------------------------------------------------------------ fuzz corpus
+
+_CASES = {}
+
+
+def _steps():
+    """Small real series (anchor + delta) with several index blocks."""
+    if "steps" not in _CASES:
+        rng = np.random.default_rng(11)
+        n = 8192
+        a = rng.normal(1.0, 0.5, n).astype(np.float32)
+        b = (a * (1 + 0.01 * rng.standard_normal(n))).astype(np.float32)
+        b[::701] *= 30.0                     # some incompressible outliers
+        _CASES["steps"] = compress_series(
+            [a, b], NumarckParams(error_bound=1e-3, block_bytes=1024))
+    return _CASES["steps"]
+
+
+def _write_steps(path, *, checksums=True, version=None):
+    w = NCKWriter(checksums=checksums)
+    for i, s in enumerate(_steps()):
+        w.add_step(TemporalArchive.step_name("temp", i), s)
+    if version is not None:
+        w.bump_format(version)
+    w.write(path)
+
+
+def _read_all(path):
+    r = NCKReader(path)
+    return decompress_series([r.read_step(nm) for nm in r.step_names()])
+
+
+def _case(version):
+    """(raw_bytes, clean_decode) for one container version (4 = framed)."""
+    key = f"v{version}"
+    if key not in _CASES:
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "a.nck")
+            if version == 4:
+                _write_steps(p)
+            else:
+                _write_steps(p, checksums=False, version=version)
+            raw = open(p, "rb").read()
+            clean = _read_all(p)
+        magic = {1: b"NCK1", 2: b"NCK2", 3: b"NCK3", 4: b"NCK4"}[version]
+        assert raw[:4] == magic
+        _CASES[key] = (raw, clean)
+    return _CASES[key]
+
+
+def _layout(raw):
+    """(data_start, variables) parsed straight off the bytes."""
+    version = {b"NCK1": 1, b"NCK2": 2, b"NCK3": 3, b"NCK4": 4}[bytes(raw[:4])]
+    prefix = 16 if version >= 4 else 12
+    (hlen,) = struct.unpack("<Q", raw[4:12])
+    data_start = prefix + hlen + (-(prefix + hlen)) % 64
+    header = json.loads(raw[prefix:prefix + hlen])
+    return data_start, header["variables"]
+
+
+def _structural_end(raw):
+    data_start, variables = _layout(raw)
+    return data_start + max(int(v["offset"]) + int(v["nbytes"])
+                            for v in variables.values())
+
+
+def _in_covered_region(raw, pos):
+    """Is byte `pos` under a digest in an NCK4 file (prefix + header +
+    header pad + any variable payload)?"""
+    data_start, variables = _layout(raw)
+    if pos < data_start:
+        return True
+    return any(data_start + int(v["offset"]) <= pos
+               < data_start + int(v["offset"]) + int(v["nbytes"])
+               for v in variables.values())
+
+
+def _expect_structured(mutated, clean, must_raise):
+    """The fuzz oracle: mutated bytes either raise IntegrityError on the
+    full read path or decode byte-identically to the clean file."""
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "m.nck")
+        with open(p, "wb") as f:
+            f.write(mutated)
+        try:
+            verify_nck(p)
+            out = _read_all(p)
+        except IntegrityError:
+            return
+        assert not must_raise, \
+            "digest-covered corruption was read back without an error"
+        for got, want in zip(out, clean):
+            np.testing.assert_array_equal(got, want)
+
+
+def _flip_var_payload(path, var, where=0.5):
+    """Flip one bit inside variable `var`'s payload; returns the offset."""
+    raw = bytearray(open(path, "rb").read())
+    data_start, variables = _layout(raw)
+    v = variables[var]
+    off = data_start + int(v["offset"]) + min(int(v["nbytes"] * where),
+                                              int(v["nbytes"]) - 1)
+    raw[off] ^= 0x01
+    with open(path, "wb") as f:
+        f.write(bytes(raw))
+    return off
+
+
+# -------------------------------------------------- checksum frame basics
+
+def test_writer_stamps_checksum_frame(tmp_path):
+    p = str(tmp_path / "a.nck")
+    _write_steps(p)
+    assert open(p, "rb").read(4) == b"NCK4"
+    verify_nck(p)
+    r = NCKReader(p)
+    anchor = r.variables["temp_it00000_anchor"]
+    assert "crc32" in anchor and "block_crc32" in anchor
+    assert len(anchor["block_crc32"]) \
+        == r.attrs("temp_it00000_anchor_info")["n_blocks"]
+    delta = r.variables["temp_it00001_index_table"]
+    assert "crc32" in delta and "block_crc32" in delta
+    # unblocked variables get the whole-payload digest only
+    centers = r.variables["temp_it00001_bin_centers"]
+    assert "crc32" in centers and "block_crc32" not in centers
+
+
+def test_checksums_off_restores_legacy_magic(tmp_path):
+    p = str(tmp_path / "a.nck")
+    _write_steps(p, checksums=False)
+    assert open(p, "rb").read(4) == b"NCK1"
+    r = NCKReader(p)
+    assert "crc32" not in r.variables["temp_it00000_anchor"]
+    for got, want in zip(_read_all(p), decompress_series(_steps())):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_error_taxonomy():
+    e = CorruptBlockError("/f.nck", "temp_anchor", 3, 0x11, 0x22)
+    assert isinstance(e, ValueError) and e.block == 3
+    assert "block 3" in str(e) and "0x00000011" in str(e)
+    s = CorruptShardError("/m.nck", "m.g0001.rank1", 1, "torn")
+    assert isinstance(s, IntegrityError)
+    assert "rank 1" in str(s) and "torn" in str(s)
+    c = CommitTimeoutError("deadline", {"missing_ranks": [2],
+                                        "quarantined": ["x.quarantine"]})
+    assert isinstance(c, TimeoutError)
+    assert c.missing_ranks == [2] and c.quarantined == ["x.quarantine"]
+    i = InjectedFault("rank_crash", "step=3")
+    assert isinstance(i, RuntimeError) and "rank_crash" in str(i)
+
+
+# ------------------------------------------------------- corruption fuzz
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=1 << 30),
+       st.integers(min_value=0, max_value=7))
+def test_nck4_bit_flips_never_decode_silently(pos_seed, bit):
+    raw, clean = _case(4)
+    pos = pos_seed % len(raw)
+    mutated = bytearray(raw)
+    mutated[pos] ^= 1 << bit
+    _expect_structured(bytes(mutated), clean,
+                       must_raise=_in_covered_region(raw, pos))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=1 << 30))
+def test_nck4_truncations_never_decode_silently(cut_seed):
+    raw, clean = _case(4)
+    cut = cut_seed % len(raw)
+    _expect_structured(raw[:cut], clean,
+                       must_raise=cut < _structural_end(raw))
+
+
+def test_nck4_targeted_flip_sweep():
+    """Deterministic complement to the fuzz: one flip in every region of
+    the layout (magic, length, header crc, header JSON, header pad, and
+    the first/middle/last byte of every variable payload)."""
+    raw, clean = _case(4)
+    data_start, variables = _layout(raw)
+    positions = [0, 3, 5, 13, 20, data_start - 1]
+    for v in variables.values():
+        o, n = data_start + int(v["offset"]), int(v["nbytes"])
+        if n:
+            positions += [o, o + n // 2, o + n - 1]
+    for pos in positions:
+        mutated = bytearray(raw)
+        mutated[pos] ^= 0x01
+        _expect_structured(bytes(mutated), clean,
+                           must_raise=_in_covered_region(raw, pos))
+
+
+@pytest.mark.parametrize("version", [1, 2, 3])
+def test_legacy_prefix_flips_and_truncations(version):
+    raw, clean = _case(version)
+    # clean file still loads on the current reader (back-compat matrix)
+    _expect_structured(raw, clean, must_raise=False)
+    # prefix flips: structured error or an identical decode, never junk
+    for pos in range(12):
+        for bit in (0, 3, 7):
+            mutated = bytearray(raw)
+            mutated[pos] ^= 1 << bit
+            _expect_structured(bytes(mutated), clean, must_raise=False)
+    # truncating below the structural extent must always raise
+    end = _structural_end(raw)
+    for cut in (3, 11, 12, len(raw) // 3, len(raw) // 2, end - 1):
+        _expect_structured(raw[:cut], clean, must_raise=cut < end)
+
+
+def test_manifest_every_flip_and_truncation_raises(tmp_path):
+    """The schema-2 trailer covers the whole NCKM byte string: exhaustive
+    single-bit flips at every offset, and every truncation length, must
+    raise a structured error through NCKReader."""
+    path = str(tmp_path / "series.nck")
+    _write_logical(path, np.arange(200, dtype=np.float32), 2)
+    raw = open(path, "rb").read()
+    mpath = str(tmp_path / "mut.nck")     # same dir: rank files resolve
+    for pos in range(len(raw)):
+        mutated = bytearray(raw)
+        mutated[pos] ^= 0x01
+        with open(mpath, "wb") as f:
+            f.write(bytes(mutated))
+        with pytest.raises(IntegrityError):
+            NCKReader(mpath)
+    for cut in range(len(raw)):
+        with open(mpath, "wb") as f:
+            f.write(raw[:cut])
+        with pytest.raises(IntegrityError):
+            NCKReader(mpath)
+
+
+# ----------------------------------------------------- partial-read path
+
+def test_partial_read_verifies_only_touched_blocks(tmp_path):
+    p = str(tmp_path / "a.nck")
+    _write_steps(p)
+    info = NCKReader(p).attrs("temp_it00001_info")
+    eb, n = info["elements_per_block"], info["total_data_num"]
+    assert n > 2 * eb, "fuzz corpus must span multiple index blocks"
+    clean_tail = TemporalArchive(p).read_range("temp", 1, n - 4, n)
+    _flip_var_payload(p, "temp_it00001_index_table", where=0.0)
+    arch = TemporalArchive(p)
+    with pytest.raises(CorruptBlockError) as ei:
+        arch.read_range("temp", 1, 0, min(eb, 64))
+    assert ei.value.block == 0
+    assert "block 0" in str(ei.value)
+    # a range over the undamaged last block still reads (and matches)
+    np.testing.assert_array_equal(
+        TemporalArchive(p).read_range("temp", 1, n - 4, n), clean_tail)
+
+
+def test_anchor_partial_read_detects_flip(tmp_path):
+    p = str(tmp_path / "a.nck")
+    _write_steps(p)
+    _flip_var_payload(p, "temp_it00000_anchor", where=0.0)
+    with pytest.raises(CorruptBlockError):
+        TemporalArchive(p).read_range("temp", 0, 0, 32)
+
+
+# ------------------------------------------------------ sharded read path
+
+def test_bitflipped_shard_raises_corrupt_shard_error(tmp_path):
+    path = str(tmp_path / "s.nck")
+    _write_logical(path, np.arange(256, dtype=np.float32), 2)
+    victim = rank_file_path(path, 0, 1)
+    raw = bytearray(open(victim, "rb").read())
+    raw[len(raw) // 2] ^= 0x01            # whole-file crc covers pad too
+    with open(victim, "wb") as f:
+        f.write(bytes(raw))
+    with pytest.raises(CorruptShardError) as ei:
+        NCKReader(path)
+    assert ei.value.rank == 1
+    assert os.path.basename(victim) in str(ei.value)
+
+
+def test_reader_falls_back_to_previous_generation(tmp_path):
+    path = str(tmp_path / "s.nck")
+    arr = np.arange(128, dtype=np.float32)
+    _write_logical(path, arr, 2)                    # generation 0
+    _write_logical(path, arr * 2, 2)                # generation 1
+    victim = rank_file_path(path, 1, 1)
+    raw = bytearray(open(victim, "rb").read())
+    raw[len(raw) // 2] ^= 0x01
+    with open(victim, "wb") as f:
+        f.write(bytes(raw))
+    r = NCKReader(path)
+    assert r.recovered_generation == 0
+    assert isinstance(r.fallback_cause, CorruptShardError)
+    np.testing.assert_array_equal(decode_anchor(r.read_step("step0000")),
+                                  arr)
+    os.remove(victim)                               # deletion: same path
+    r2 = NCKReader(path)
+    assert r2.recovered_generation == 0
+    assert isinstance(r2.fallback_cause, FileNotFoundError)
+
+
+def test_no_previous_generation_reraises(tmp_path):
+    path = str(tmp_path / "s.nck")
+    _write_logical(path, np.arange(64, dtype=np.float32), 2)
+    os.remove(rank_file_path(path, 0, 1))
+    with pytest.raises(FileNotFoundError):
+        NCKReader(path)
+
+
+# -------------------------------------------- self-healing manifest commit
+
+def test_commit_timeout_quarantines_and_reports(tmp_path):
+    path = str(tmp_path / "s.nck")
+    arr = np.arange(96, dtype=np.float32)
+    _write_logical(path, arr, 2)                    # generation 0 durable
+    manifest_raw = open(path, "rb").read()
+    frags = _anchor_fragments(arr, 2)
+    writers = []
+    for rank in range(2):
+        w = ShardNCKWriter(path, rank, 2)
+        w.add_fragment("step0000", frags[rank])
+        w.write()
+        writers.append(w)
+    victim = writers[1].rank_path
+    _flip_var_payload(victim, "step0000_frag_index_table")
+    with pytest.raises(CommitTimeoutError, match="previous manifest") as ei:
+        writers[0].commit_manifest(timeout=0.6)
+    e = ei.value
+    assert e.missing_ranks == [1]
+    assert e.report["rolled_back_to"] == 0
+    assert e.report["generation"] == 1
+    assert e.quarantined == [os.path.basename(victim) + ".quarantine"]
+    assert os.path.exists(victim + ".quarantine")
+    assert not os.path.exists(victim)
+    assert "crc32" in e.report["quarantine_detail"][0]["error"]
+    # the previous manifest is byte-identical and still decodes
+    assert open(path, "rb").read() == manifest_raw
+    np.testing.assert_array_equal(
+        decode_anchor(NCKReader(path).read_step("step0000")), arr)
+
+
+def test_commit_converges_when_good_shard_republished(tmp_path):
+    path = str(tmp_path / "s.nck")
+    arr = np.arange(96, dtype=np.float32)
+    _write_logical(path, arr, 2)                    # generation 0
+    frags = _anchor_fragments(arr * 2, 2)
+    w0 = ShardNCKWriter(path, 0, 2)
+    w0.add_fragment("step0000", frags[0])
+    w0.write()
+    w1 = ShardNCKWriter(path, 1, 2)
+    w1.add_fragment("step0000", frags[1])
+    w1.write()
+    _flip_var_payload(w1.rank_path, "step0000_frag_index_table")
+
+    def heal():
+        time.sleep(0.4)                 # after the first quarantine pass
+        w = ShardNCKWriter(path, 1, 2)
+        w.add_fragment("step0000", frags[1])
+        w.write()
+
+    t = threading.Thread(target=heal)
+    t.start()
+    try:
+        out = w0.commit_manifest(timeout=30.0)
+    finally:
+        t.join()
+    assert out == path
+    m = read_manifest(path)
+    assert m["generation"] == 1 and m["previous"]["generation"] == 0
+    assert any(".quarantine" in f for f in os.listdir(tmp_path))
+    np.testing.assert_array_equal(
+        decode_anchor(NCKReader(path).read_step("step0000")), arr * 2)
+
+
+# --------------------------------------------------- fault-injection plan
+
+def test_fault_spec_parsing_and_rank_matching(monkeypatch):
+    plan = inject.FaultPlan("straggler@1=0.5*3, torn_shard=64")
+    assert [e.site for e in plan.entries] == ["straggler", "torn_shard"]
+    assert plan.entries[0].rank == 1
+    assert plan.entries[0].value == 0.5
+    assert plan.entries[0].remaining == 3
+    with pytest.raises(ValueError, match="unknown fault site"):
+        inject.FaultPlan("disk_melt")
+    assert inject.configure("") is None and not inject.enabled()
+
+    inject.configure("rank_crash@1")
+    monkeypatch.setenv("REPRO_PROCESS_ID", "0")
+    inject.fire("rank_crash")                     # other rank: no-op
+    monkeypatch.setenv("REPRO_PROCESS_ID", "1")
+    with pytest.raises(InjectedFault, match="rank_crash"):
+        inject.fire("rank_crash", step=3)
+    assert inject.plan().fired[0]["site"] == "rank_crash"
+    inject.fire("rank_crash")                     # count=1: exhausted
+
+
+def test_disabled_plan_is_noop(tmp_path):
+    inject.reset()
+    inject.fire("rank_crash")
+    p = str(tmp_path / "x.g0000.rank0")
+    atomic_commit(p, b"A" * 16)
+    assert open(p, "rb").read() == b"A" * 16
+
+
+def test_straggler_sleeps():
+    inject.configure("straggler=0.15")
+    t0 = time.monotonic()
+    inject.fire("straggler")
+    assert time.monotonic() - t0 >= 0.14
+    inject.fire("straggler")                      # exhausted: instant
+
+
+def test_fsync_and_rename_injection_preserve_target(tmp_path):
+    p = str(tmp_path / "out.bin")
+    atomic_commit(p, b"v1")
+    for site in ("fsync_fail", "rename_fail"):
+        inject.configure(site)
+        with pytest.raises(OSError, match=f"injected {site}"):
+            atomic_commit(p, b"v2")
+        assert open(p, "rb").read() == b"v1"
+    inject.reset()
+    atomic_commit(p, b"v2")
+    assert open(p, "rb").read() == b"v2"
+
+
+def test_shard_mangling_only_touches_rank_files(tmp_path):
+    inject.configure("torn_shard=5")
+    mpath = str(tmp_path / "series.nck")          # manifests never mangled
+    atomic_commit(mpath, b"A" * 32)
+    assert os.path.getsize(mpath) == 32
+    spath = str(tmp_path / "series.nck.g0000.rank1")
+    atomic_commit(spath, b"B" * 32)
+    assert os.path.getsize(spath) == 27
+    inject.configure("bitflip_shard=3")
+    atomic_commit(spath, b"C" * 8)
+    raw = open(spath, "rb").read()
+    assert raw[3] == ord("C") ^ 0x01 and raw[:3] == b"CCC"
+
+
+def test_injected_torn_shard_is_caught_by_verification(tmp_path):
+    """End to end: a torn publish that rode the atomic rename is exactly
+    what verify_nck + the manifest scan must catch."""
+    path = str(tmp_path / "s.nck")
+    arr = np.arange(64, dtype=np.float32)
+    frags = _anchor_fragments(arr, 1)
+    inject.configure("torn_shard=16")
+    w = ShardNCKWriter(path, 0, 1)
+    w.add_fragment("step0000", frags[0])
+    w.write()
+    with pytest.raises(IntegrityError):
+        verify_nck(w.rank_path)
+    with pytest.raises(CommitTimeoutError) as ei:
+        w.commit_manifest(timeout=0.5)
+    assert ei.value.report["rolled_back_to"] is None
+    assert len(ei.value.quarantined) == 1
+
+
+def test_entropy_worker_death_site_and_structured_decode_errors():
+    inject.configure("entropy_worker_death")
+    with pytest.raises(InjectedFault, match="entropy_worker_death"):
+        entropy._compress_batch("zlib", [b"x" * 32], 6)
+    blob = entropy._compress_batch("zlib", [b"x" * 32], 6)[0]  # exhausted
+    assert entropy.decompress_block(blob, "zlib") == b"x" * 32
+    bad = bytearray(blob)
+    bad[len(bad) // 2] ^= 0xFF
+    with pytest.raises(IntegrityError, match="entropy decode failed"):
+        entropy.decompress_block(bytes(bad), "zlib")
+
+
+# ------------------------------------------------- wedged-worker timeout
+
+def test_finalize_queue_times_out_and_retires_wedged_worker():
+    q = FinalizeQueue(overlap=True, name="enc", timeout=0.3)
+    gate = threading.Event()
+    q.submit(gate.wait, label="finalize step 7")
+    try:
+        with pytest.raises(TimeoutError,
+                           match=r"label=finalize step 7.*retired"):
+            q.flush()
+    finally:
+        gate.set()                    # release the abandoned thread
+    # the queue is usable again on a fresh worker
+    assert q.submit(lambda: 42, label="next").result(timeout=10) == 42
+    q.flush()
+
+
+def test_finalize_queue_default_timeout_unchanged():
+    q = FinalizeQueue(overlap=True, name="enc")
+    f = q.submit(lambda: "ok")
+    q.flush()
+    assert f.result() == "ok"
+
+
+# ---------------------------------------------------- spawn bind-race fix
+
+def _proc(rc, stderr=""):
+    return subprocess.CompletedProcess([], rc, "", stderr)
+
+
+def test_coordinator_bind_failure_detection():
+    assert dist._coordinator_bind_failed(
+        [_proc(0), _proc(1, "E0809 ... Address already in use")])
+    assert dist._coordinator_bind_failed([_proc(1, "EADDRINUSE: nope")])
+    assert not dist._coordinator_bind_failed([_proc(0), _proc(0)])
+    assert not dist._coordinator_bind_failed(
+        [_proc(3, "Traceback ... InjectedFault: rank_crash")])
+    # a *succeeding* rank mentioning the marker does not count
+    assert not dist._coordinator_bind_failed(
+        [_proc(0, "address already in use")])
+
+
+def test_spawn_emulated_retries_fresh_port_on_bind_race(monkeypatch):
+    calls = []
+
+    def fake_spawn_once(n, argv, coordinator, dpp, base_env, preset,
+                        timeout):
+        calls.append(coordinator)
+        if len(calls) == 1:
+            return [_proc(1, "failed to bind to coordinator address")]
+        return [_proc(0)]
+
+    monkeypatch.setattr(dist, "_spawn_once", fake_spawn_once)
+    res = spawn_emulated(1, ["-c", "pass"], timeout=5)
+    assert [r.returncode for r in res] == [0]
+    assert len(calls) == 2 and calls[0] != calls[1]
+
+
+def test_spawn_emulated_bind_retry_is_bounded(monkeypatch):
+    calls = []
+
+    def always_bind_fail(n, argv, coordinator, dpp, base_env, preset,
+                         timeout):
+        calls.append(coordinator)
+        return [_proc(1, "Address already in use")]
+
+    monkeypatch.setattr(dist, "_spawn_once", always_bind_fail)
+    res = spawn_emulated(1, ["-c", "pass"], timeout=5, bind_attempts=3)
+    assert len(calls) == 3                        # bounded, then reported
+    assert res[0].returncode == 1
+
+
+def test_spawn_emulated_does_not_retry_worker_crashes(monkeypatch):
+    calls = []
+
+    def crash(n, argv, coordinator, dpp, base_env, preset, timeout):
+        calls.append(coordinator)
+        return [_proc(3, "Traceback: ValueError: boom")]
+
+    monkeypatch.setattr(dist, "_spawn_once", crash)
+    res = spawn_emulated(1, ["-c", "pass"], timeout=5)
+    assert len(calls) == 1 and res[0].returncode == 3
+
+
+# ------------------------------------------------ restore walks back past
+
+def test_checkpoint_restore_walks_back_and_reports(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path))
+    tree1 = {"w": np.arange(64, dtype=np.float32)}
+    tree2 = {"w": np.arange(64, dtype=np.float32) * 2}
+    mgr.save(1, tree1)
+    mgr.save(2, tree2)
+    mgr.wait()
+    victim = mgr._step_path(2)
+    raw = open(victim, "rb").read()
+    _, variables = _layout(raw)
+    var = max(variables, key=lambda v: variables[v]["nbytes"])
+    _flip_var_payload(victim, var)
+    mgr2 = CheckpointManager(str(tmp_path))
+    step, tree = mgr2.restore_latest()
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["w"]), tree1["w"])
+    assert [r["step"] for r in mgr2.last_restore_report] == [2]
+    assert "Error" in mgr2.last_restore_report[0]["error"]
+
+
+def test_serve_snapshot_corruption_refuses_restore(tmp_path):
+    from repro.serve.engine import load_cache, snapshot_cache
+    cache = {"layer0": {"k": np.arange(96, dtype=np.float32)}}
+    p = str(tmp_path / "cache.nck")
+    snapshot_cache(cache, p)
+    back = load_cache(p)
+    np.testing.assert_array_equal(back["layer0"]["k"],
+                                  cache["layer0"]["k"])
+    _flip_var_payload(p, "c0000_anchor", where=0.0)
+    with pytest.raises(IntegrityError):
+        load_cache(p)
+
+
+# ----------------------------------------------------------- backoff unit
+
+def test_backoff_delays_bounded_and_capped():
+    ds = list(Backoff(attempts=6, base=0.05, factor=2.0, cap=0.4,
+                      jitter=0.0).delays())
+    assert len(ds) == 6
+    assert ds[0] == pytest.approx(0.05) and ds[1] == pytest.approx(0.1)
+    assert max(ds) <= 0.4 and ds[-1] == pytest.approx(0.4)
+    j1 = list(Backoff(attempts=4, jitter=0.25, seed=7).delays())
+    j2 = list(Backoff(attempts=4, jitter=0.25, seed=7).delays())
+    assert j1 == j2                               # reproducible schedule
+    for base, d in zip(Backoff(attempts=4, jitter=0.0).delays(), j1):
+        assert base <= d <= base * 1.25
+
+
+def test_backoff_sleep_until_respects_deadline():
+    deadline = time.monotonic() + 0.12
+    n = 0
+    for d in Backoff(base=0.02, jitter=0.0).repolling() \
+            .sleep_until(deadline):
+        assert d <= deadline - time.monotonic() + 1e-3
+        time.sleep(d)
+        n += 1
+        assert n < 100                            # deadline bounds the loop
+    assert time.monotonic() >= deadline - 0.03
+    assert n >= 2                                 # still polled repeatedly
+
+
+# -------------------------------------------------- injected fleet (slow)
+
+_FAULT_WORKER = textwrap.dedent("""
+    import os, sys
+    import numpy as np
+    from repro.launch import distributed as dist
+    cfg = dist.initialize()
+    mesh = dist.global_mesh()
+    from repro.core import NumarckParams
+    from repro.distributed.pipeline import MultiProcessCompressor
+    from repro.faults import CommitTimeoutError
+    from repro.faults import inject
+    {series_src}
+    mp = MultiProcessCompressor(mesh, params=NumarckParams(
+        error_bound=1e-3), use_pallas=False)
+    out_path = os.environ["OUT_PATH"]
+    # generation 0: rank 1 straggles mid-encode; the bounded commit poll
+    # absorbs it and the fleet converges
+    if cfg.process_id == 1:
+        inject.configure("straggler=0.8")
+    mp.save_series(out_path, series, manifest_timeout=60)
+    print("GEN0_OK")
+    # generation 1: rank 1 publishes a torn shard -- rank 0 quarantines
+    # it, times out, and generation 0 stays durable
+    if cfg.process_id == 1:
+        inject.configure("torn_shard=1000000")
+    try:
+        mp.save_series(out_path, [s * 2 for s in series],
+                       manifest_timeout=4)
+        if cfg.process_id == 0:
+            raise SystemExit("torn-shard commit unexpectedly succeeded")
+        print("GEN1_SHARD_PUBLISHED")
+    except CommitTimeoutError as e:
+        assert cfg.process_id == 0, e
+        assert e.report["missing_ranks"] == [1], e.report
+        assert e.report["rolled_back_to"] == 0, e.report
+        assert len(e.report["quarantined"]) == 1, e.report
+        print("ROLLBACK_OK", e.report["quarantined"][0])
+        print("ERR:", type(e).__name__, e, file=sys.stderr)
+    mp.close()
+    print("WORKER_DONE")
+""")
+
+
+@pytest.mark.slow
+def test_fleet_straggler_converges_and_torn_shard_rolls_back(tmp_path):
+    path = str(tmp_path / "series.nck")
+    env = dict(os.environ)
+    env["OUT_PATH"] = path
+    env["PYTHONPATH"] = _SRC
+    script = _FAULT_WORKER.format(
+        series_src=_make_series_src(n=20_011, steps=2))
+    res = spawn_emulated(2, ["-c", script], base_env=env, timeout=300)
+    for rank, r in enumerate(res):
+        assert r.returncode == 0, f"rank {rank}:\n{r.stdout}\n{r.stderr}"
+        assert "GEN0_OK" in r.stdout
+        assert "WORKER_DONE" in r.stdout
+    assert "ROLLBACK_OK" in res[0].stdout
+    assert "TimeoutError" in res[0].stderr        # structured, in the log
+    assert "GEN1_SHARD_PUBLISHED" in res[1].stdout
+    m = read_manifest(path)
+    assert m["generation"] == 0                   # gen 1 never committed
+    quar = [f for f in os.listdir(tmp_path) if ".quarantine" in f]
+    assert len(quar) == 1 and ".g0001.rank1" in quar[0]
+    # generation 0 still decodes to the worker's deterministic series
+    ns = {}
+    exec(_make_series_src(n=20_011, steps=2), ns)  # noqa: S102 -- test data
+    r = NCKReader(path)
+    step0 = r.read_step(r.step_names()[0])
+    assert step0.is_anchor
+    np.testing.assert_array_equal(decode_anchor(step0), ns["series"][0])

@@ -183,12 +183,22 @@ def test_generation_bump_and_gc(tmp_path):
     _write_logical(path, arr * 2, 2)          # next_generation() picks 1
     m = read_manifest(path)
     assert m["generation"] == 1
-    # stale generation-0 shard files were garbage-collected post-publish
+    # generation 0 is retained as the rollback target (manifest embeds it
+    # under "previous"); its shard files survive GC
+    assert m["previous"]["generation"] == 0
     assert sorted(os.listdir(tmp_path)) == [
-        "series.nck", "series.nck.g0001.rank0", "series.nck.g0001.rank1"]
+        "series.nck",
+        "series.nck.g0000.rank0", "series.nck.g0000.rank1",
+        "series.nck.g0001.rank0", "series.nck.g0001.rank1"]
+    _write_logical(path, arr * 3, 2)          # generation 2
+    # now generation 0 is unreachable (previous == 1) and is GC'd
+    assert sorted(os.listdir(tmp_path)) == [
+        "series.nck",
+        "series.nck.g0001.rank0", "series.nck.g0001.rank1",
+        "series.nck.g0002.rank0", "series.nck.g0002.rank1"]
     step = NCKReader(path).read_step("step0000")
     from repro.core.compress import decode_anchor
-    np.testing.assert_array_equal(decode_anchor(step), arr * 2)
+    np.testing.assert_array_equal(decode_anchor(step), arr * 3)
 
 
 def test_commit_timeout_preserves_previous_manifest(tmp_path):
@@ -216,7 +226,7 @@ def test_manifest_magic_rejects_corruption(tmp_path):
     raw = open(path, "rb").read()
     assert raw[:4] == container._MANIFEST_MAGIC
     hlen = struct.unpack("<Q", raw[4:12])[0]
-    assert json.loads(raw[12:12 + hlen])["schema"] == 1
+    assert json.loads(raw[12:12 + hlen])["schema"] == 2
     with open(path, "wb") as f:
         f.write(b"XXXX" + raw[4:])
     with pytest.raises(Exception):

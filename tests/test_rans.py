@@ -230,7 +230,7 @@ def test_auto_picks_per_block_codecs():
 def test_per_block_codecs_survive_container_and_partial(tmp_path):
     prev, curr, st = _mixed_step()
     path = os.path.join(tmp_path, "m.nck")
-    w = NCKWriter()
+    w = NCKWriter(checksums=False)
     w.add_step("v", st)
     w.write(path)
     with open(path, "rb") as f:
@@ -251,7 +251,7 @@ def test_uniform_codec_files_stay_v1(tmp_path):
     series = _series((96, 40))
     steps = compress_series(series, NumarckParams(error_bound=1e-3))
     path = os.path.join(tmp_path, "u.nck")
-    w = NCKWriter()
+    w = NCKWriter(checksums=False)
     for i, s in enumerate(steps):
         w.add_step(f"v_it{i:05d}", s)
     w.write(path)
@@ -265,7 +265,7 @@ def test_old_reader_rejects_v2_magic(tmp_path):
     its magic check (emulated here) instead of being mis-decoded."""
     prev, curr, st = _mixed_step()
     path = os.path.join(tmp_path, "m.nck")
-    w = NCKWriter()
+    w = NCKWriter(checksums=False)
     w.add_step("v", st)
     w.write(path)
     with open(path, "rb") as f:
@@ -412,7 +412,7 @@ def test_symbol_rans_container_magic_matrix(monkeypatch, tmp_path):
         series, NumarckParams(error_bound=1e-3, codec="rans",
                               symbol_rans=True, block_bytes=1 << 14))
     path = os.path.join(tmp_path, "s.nck")
-    TemporalArchive.write(path, "v", steps)
+    TemporalArchive.write(path, "v", steps, checksums=False)
     with open(path, "rb") as f:
         assert f.read(4) == b"NCK3"
     r = NCKReader(path)
@@ -430,7 +430,7 @@ def test_symbol_rans_container_magic_matrix(monkeypatch, tmp_path):
         series, NumarckParams(error_bound=1e-3, codec="rans",
                               block_bytes=1 << 14))
     path_b = os.path.join(tmp_path, "b.nck")
-    TemporalArchive.write(path_b, "v", steps_b)
+    TemporalArchive.write(path_b, "v", steps_b, checksums=False)
     with open(path_b, "rb") as f:
         assert f.read(4) == b"NCK1"
 
